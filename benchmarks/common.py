@@ -1,0 +1,78 @@
+"""Shared benchmark harness: tiny-scale BitDistill reproduction machinery.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (harness
+contract) plus a human-readable table.  Results cache under
+benchmarks/results/ so `python -m benchmarks.run` is resumable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Dict, Optional
+
+import jax
+
+from repro.core.distill import DistillConfig
+from repro.core.pipeline import BitDistillPipeline, PipelineConfig
+from repro.models.base import ModelConfig
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+RESULTS.mkdir(exist_ok=True)
+
+# ~1M-param student: big enough to learn the synthetic tasks, small enough
+# for CPU benchmarking.  qwen3-family shape (qk_norm) like the paper's base.
+TINY = ModelConfig(name="bench-tiny", family="dense", vocab=288, d_model=128,
+                   n_layers=3, n_heads=4, n_kv_heads=4, head_dim=32, d_ff=256,
+                   qk_norm=True, param_dtype="float32",
+                   compute_dtype="float32", remat=False, max_seq=64)
+
+# a "bigger" student for scaling comparisons (fig1-style)
+SMALL = TINY.replace(name="bench-small", d_model=192, n_layers=4, d_ff=384)
+
+
+def default_pcfg(task: str = "sst2-syn", steps: int = 160) -> PipelineConfig:
+    return PipelineConfig(
+        task=task, seq_len=40, batch_size=24, ct_steps=40, sft_steps=steps,
+        sft_lr=6e-4, ct_lr=6e-4, log_every=40, eval_batches=8,
+        distill=DistillConfig(tau=5.0, lambda_ld=1.0, gamma_ad=10.0,
+                              split_heads=2))
+
+
+def cached(name: str, fn, force: bool = False) -> Dict:
+    p = RESULTS / f"{name}.json"
+    if p.exists() and not force:
+        return json.loads(p.read_text())
+    t0 = time.time()
+    out = fn()
+    out["_seconds"] = round(time.time() - t0, 1)
+    p.write_text(json.dumps(out, indent=1))
+    return out
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def run_pipeline_variants(cfg: ModelConfig, pcfg: PipelineConfig,
+                          variants=("fp16_sft", "bitnet_sft", "bitdistill"),
+                          dcfg: Optional[DistillConfig] = None,
+                          skip_ct: bool = False) -> Dict[str, float]:
+    """Train teacher once; produce requested variant accuracies."""
+    pipe = BitDistillPipeline(cfg, pcfg)
+    out: Dict[str, float] = {}
+    tstate, _ = pipe.train_teacher(jax.random.PRNGKey(pcfg.seed))
+    if "fp16_sft" in variants:
+        out["fp16_sft"] = pipe.eval_accuracy(tstate.params, quantized=False)
+    sparams0 = pipe.refine(tstate.params)
+    if "bitnet_sft" in variants:
+        s, _ = pipe.bitnet_sft(sparams0)
+        out["bitnet_sft"] = pipe.eval_accuracy(s, quantized=True)
+    if "bitdistill" in variants:
+        s = sparams0
+        if not skip_ct:
+            s, _ = pipe.continue_pretrain(s)
+        s, _ = pipe.distill_finetune(s, tstate.params, dcfg)
+        out["bitdistill"] = pipe.eval_accuracy(s, quantized=True)
+    return out

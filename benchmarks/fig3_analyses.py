@@ -1,0 +1,117 @@
+"""Fig 3 analyses:
+  (a) SubLN stabilizes QAT (loss curves with vs without SubLN);
+  (b) distillation-layer selection (early vs late single layer vs none);
+  (c) bigger FP16 teacher -> better 1.58-bit student.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks.common import SMALL, TINY, cached, default_pcfg, emit
+from repro.core import quant as Q
+from repro.core.distill import DistillConfig
+from repro.core.pipeline import BitDistillPipeline
+
+
+def run_a() -> dict:
+    pcfg = default_pcfg("sst2-syn")
+    pcfg.ct_steps = 120
+    teacher_pipe = BitDistillPipeline(TINY, pcfg)
+    tstate, _ = teacher_pipe.train_teacher(jax.random.PRNGKey(0))
+    out = {}
+    for name, subln in (("with_subln", True), ("without_subln", False)):
+        pipe = BitDistillPipeline(TINY, pcfg)
+        scfg = TINY.replace(quant=Q.QAT, subln=subln)
+        pipe.student_config = lambda c=scfg: c
+        s0 = pipe.refine(tstate.params)
+        _, res = pipe.continue_pretrain(s0)
+        out[name] = [h["loss"] for h in res.metrics_history]
+    return out
+
+
+def run_b() -> dict:
+    pcfg = default_pcfg("mnli-syn")
+    pipe = BitDistillPipeline(TINY, pcfg)
+    tstate, _ = pipe.train_teacher(jax.random.PRNGKey(0))
+    s0 = pipe.refine(tstate.params)
+    out = {}
+    for name, layer in (("layer_0", 0), ("layer_mid", TINY.n_layers // 2),
+                        ("layer_last", TINY.n_layers - 1)):
+        dcfg = dataclasses.replace(pcfg.distill, distill_layer=layer)
+        s, _ = pipe.distill_finetune(s0, tstate.params, dcfg)
+        out[name] = pipe.eval_accuracy(s, quantized=True)
+    return out
+
+
+def run_c() -> dict:
+    pcfg = default_pcfg("mnli-syn")
+    out = {}
+    # same-size teacher
+    pipe_t = BitDistillPipeline(TINY, pcfg)
+    t_tiny, _ = pipe_t.train_teacher(jax.random.PRNGKey(0))
+    s0 = pipe_t.refine(t_tiny.params)
+    s, _ = pipe_t.distill_finetune(s0, t_tiny.params)
+    out["teacher_same_size"] = pipe_t.eval_accuracy(s, quantized=True)
+    out["teacher_same_size_fp"] = pipe_t.eval_accuracy(t_tiny.params, False)
+
+    # bigger teacher: logits-only distillation (AD shapes differ) — the
+    # paper's better-teacher effect flows through L_LD
+    pipe_b = BitDistillPipeline(SMALL, pcfg)
+    t_big, _ = pipe_b.train_teacher(jax.random.PRNGKey(1))
+    out["teacher_big_fp"] = pipe_b.eval_accuracy(t_big.params, False)
+
+    from repro.models import build_model
+    from repro.training.optimizer import AdamW, AdamWConfig
+    from repro.training.schedule import warmup_cosine
+    from repro.training.trainer import init_train_state, make_distill_step
+    import jax.numpy as jnp
+    from repro.data.loader import DataLoader
+    from repro.data.synth import get_task
+
+    dcfg = dataclasses.replace(pcfg.distill, use_ad=False)
+    student = build_model(pipe_t.student_config())
+    teacher = build_model(pipe_b.teacher_config())
+    opt = AdamW(AdamWConfig(weight_decay=0.01))
+    lr = lambda st: warmup_cosine(st, pcfg.sft_lr, pcfg.warmup, pcfg.sft_steps)
+    step = jax.jit(make_distill_step(student, teacher, opt, lr, dcfg))
+    state = init_train_state(s0, opt)
+    dl = DataLoader(get_task(pcfg.task, seed=pcfg.seed), pcfg.batch_size,
+                    pcfg.seq_len, seed=pcfg.seed)
+    for _ in range(pcfg.sft_steps):
+        b = {k: jnp.asarray(v) for k, v in dl.next().items()
+             if k in ("tokens", "labels", "loss_mask")}
+        state, _ = step(state, b, t_big.params)
+    out["student_with_big_teacher"] = pipe_t.eval_accuracy(state.params, True)
+    return out
+
+
+def main(force: bool = False):
+    a = cached("fig3a_subln", run_a, force)
+    print("\n== Fig 3a (CT loss with/without SubLN) ==")
+    for k in ("with_subln", "without_subln"):
+        print(f"{k:16s} first {a[k][0]:.3f} -> last {a[k][-1]:.3f}")
+    emit("fig3a/final_loss_delta", 0.0,
+         f"{a['without_subln'][-1] - a['with_subln'][-1]:+.4f}")
+
+    b = cached("fig3b_layer_selection", run_b, force)
+    print("\n== Fig 3b (distillation layer selection, mnli-syn) ==")
+    for k, v in b.items():
+        if not k.startswith("_"):
+            print(f"{k:12s} {v:.3f}")
+    emit("fig3b/late_vs_early", 0.0,
+         f"{b['layer_last'] - b['layer_0']:+.3f}")
+
+    c = cached("fig3c_teacher_size", run_c, force)
+    print("\n== Fig 3c (teacher size effect, mnli-syn) ==")
+    for k, v in c.items():
+        if not k.startswith("_"):
+            print(f"{k:26s} {v:.3f}")
+    emit("fig3c/big_vs_same", 0.0,
+         f"{c['student_with_big_teacher'] - c['teacher_same_size']:+.3f}")
+    return {"a": a, "b": b, "c": c}
+
+
+if __name__ == "__main__":
+    main()

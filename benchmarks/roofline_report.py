@@ -1,0 +1,25 @@
+"""Render the dry-run roofline tables (reads benchmarks/results/dryrun/)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+
+
+def main(force: bool = False):
+    del force
+    from repro.launch import report
+    import json
+    print("\n== Roofline (single-pod 16x16, per arch x shape) ==")
+    print(report.table(multi_pod=False))
+    # CSV contract rows
+    from repro.launch.report import ARCH_ORDER, SHAPE_ORDER, load
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = load(a, s, False)
+            if d and d.get("status") == "ok":
+                emit(f"roofline/{a}/{s}", d["roofline"]["step_time_s"] * 1e6,
+                     d["roofline"]["bottleneck"])
+    return {}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only tableN] [--force]
+
+Prints ``name,us_per_call,derived`` CSV rows plus readable tables; results
+cache under benchmarks/results/ (delete or --force to re-run).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig2_weight_shift, fig3_analyses, roofline_report,
+                            speed_memory, table1_classification,
+                            table2_summarization, table3_backbones,
+                            table4_quant_compat, table5_stage_ablation,
+                            table6_distill_ablation)
+    suites = {
+        "table1": table1_classification.main,
+        "table2": table2_summarization.main,
+        "table3": table3_backbones.main,
+        "table4": table4_quant_compat.main,
+        "table5": table5_stage_ablation.main,
+        "table6": table6_distill_ablation.main,
+        "fig2": fig2_weight_shift.main,
+        "fig3": fig3_analyses.main,
+        "speed_memory": speed_memory.main,
+        "roofline": roofline_report.main,
+    }
+    failed = []
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            fn(force=args.force)
+        except Exception:  # noqa: BLE001 — run everything, report at end
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"\nFAILED suites: {failed}")
+        sys.exit(1)
+    print("\nall benchmark suites complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Table 1: text classification — FP16-SFT vs BitNet-SFT vs BitDistill on the
+three GLUE stand-ins (mnli-syn / qnli-syn / sst2-syn), two model scales.
+
+Paper claim reproduced qualitatively: BitDistill ~ FP16-SFT >> BitNet-SFT,
+and the BitNet-SFT gap does not shrink with scale.
+"""
+from __future__ import annotations
+
+from benchmarks.common import SMALL, TINY, cached, default_pcfg, emit, \
+    run_pipeline_variants
+
+
+def run() -> dict:
+    out = {}
+    for cfg in (TINY, SMALL):
+        for task in ("mnli-syn", "qnli-syn", "sst2-syn"):
+            pcfg = default_pcfg(task)
+            out[f"{cfg.name}/{task}"] = run_pipeline_variants(cfg, pcfg)
+    return out
+
+
+def main(force: bool = False):
+    res = cached("table1_classification", run, force)
+    print("\n== Table 1 (synthetic classification accuracy) ==")
+    print(f"{'model/task':34s} {'FP16-SFT':>9s} {'BitNet-SFT':>11s} {'BitDistill':>11s}")
+    for k, v in res.items():
+        if k.startswith("_"):
+            continue
+        print(f"{k:34s} {v['fp16_sft']:9.3f} {v['bitnet_sft']:11.3f} "
+              f"{v['bitdistill']:11.3f}")
+        emit(f"table1/{k}", 0.0,
+             f"gap_closed={v['bitdistill'] - v['bitnet_sft']:.3f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

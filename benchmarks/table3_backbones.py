@@ -1,0 +1,36 @@
+"""Table 3: robustness to the pretrained backbone family — BitDistill vs
+baselines on gemma-style (GeGLU, embed-scale) and qwen2.5-style (QKV bias)
+tiny configs."""
+from __future__ import annotations
+
+from benchmarks.common import TINY, cached, default_pcfg, emit, \
+    run_pipeline_variants
+
+GEMMA_STYLE = TINY.replace(name="gemma-style", activation="gelu",
+                           embed_scale=True, qk_norm=False)
+QWEN25_STYLE = TINY.replace(name="qwen2.5-style", qkv_bias=True,
+                            qk_norm=False, n_kv_heads=2)
+
+
+def run() -> dict:
+    out = {}
+    for cfg in (GEMMA_STYLE, QWEN25_STYLE):
+        out[cfg.name] = run_pipeline_variants(cfg, default_pcfg("mnli-syn"))
+    return out
+
+
+def main(force: bool = False):
+    res = cached("table3_backbones", run, force)
+    print("\n== Table 3 (backbone robustness, mnli-syn) ==")
+    print(f"{'backbone':16s} {'FP16-SFT':>9s} {'BitNet-SFT':>11s} {'BitDistill':>11s}")
+    for k, v in res.items():
+        if k.startswith("_"):
+            continue
+        print(f"{k:16s} {v['fp16_sft']:9.3f} {v['bitnet_sft']:11.3f} "
+              f"{v['bitdistill']:11.3f}")
+        emit(f"table3/{k}", 0.0, f"bitdistill={v['bitdistill']:.3f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Table 4: compatibility with different weight quantizers — absmean
+(BitDistill), blockwise (B), GPTQ-like (G), AWQ-like (A)."""
+from __future__ import annotations
+
+from benchmarks.common import TINY, cached, default_pcfg, emit, \
+    run_pipeline_variants
+
+
+def run() -> dict:
+    out = {}
+    for scheme in ("absmean", "blockwise", "gptq", "awq"):
+        pcfg = default_pcfg("sst2-syn")
+        pcfg.weight_quant_scheme = scheme
+        r = run_pipeline_variants(TINY, pcfg, variants=("bitdistill",))
+        out[scheme] = r["bitdistill"]
+    return out
+
+
+def main(force: bool = False):
+    res = cached("table4_quant_compat", run, force)
+    print("\n== Table 4 (quantizer compatibility, sst2-syn) ==")
+    for k in ("absmean", "blockwise", "gptq", "awq"):
+        if k in res:
+            print(f"BitDistill-{k:10s} {res[k]:.3f}")
+            emit(f"table4/{k}", 0.0, f"acc={res[k]:.3f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Table 5: per-stage ablation — remove modeling refinement (SubLN),
+continual pre-training, or distillation fine-tuning one at a time."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks.common import TINY, cached, default_pcfg, emit
+from repro.core import quant as Q
+from repro.core.distill import DistillConfig
+from repro.core.pipeline import BitDistillPipeline
+
+
+def run() -> dict:
+    pcfg = default_pcfg("sst2-syn")
+    pipe = BitDistillPipeline(TINY, pcfg)
+    tstate, _ = pipe.train_teacher(jax.random.PRNGKey(0))
+    rows = {}
+
+    def student_acc(md: bool, ct: bool, df: bool) -> float:
+        # md=False -> quantized student WITHOUT SubLN insertion
+        scfg = (TINY.with_quant(Q.QAT) if md
+                else TINY.replace(quant=Q.QAT, subln=False))
+        p = BitDistillPipeline(TINY, pcfg)
+        p.student_config = lambda: scfg  # override stage-1 choice
+        s = p.refine(tstate.params)
+        if ct:
+            s, _ = p.continue_pretrain(s)
+        if df:
+            s, _ = p.distill_finetune(s, tstate.params)
+        else:
+            s, _ = p.bitnet_sft(s)
+        return p.eval_accuracy(s, quantized=True)
+
+    rows["none (BitNet-SFT)"] = student_acc(False, False, False)
+    rows["M.D. only"] = student_acc(True, False, False)
+    rows["M.D.+C.T."] = student_acc(True, True, False)
+    rows["M.D.+D.F."] = student_acc(True, False, True)
+    rows["full BitDistill"] = student_acc(True, True, True)
+    rows["fp16_teacher"] = pipe.eval_accuracy(tstate.params, quantized=False)
+    return rows
+
+
+def main(force: bool = False):
+    res = cached("table5_stage_ablation", run, force)
+    print("\n== Table 5 (stage ablation, sst2-syn) ==")
+    for k, v in res.items():
+        if k.startswith("_"):
+            continue
+        print(f"{k:22s} {v:.3f}")
+        emit(f"table5/{k.replace(' ', '_')}", 0.0, f"acc={v:.3f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Table 6: distillation-term ablation — {no KD, LD only, AD only, LD+AD}."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from benchmarks.common import TINY, cached, default_pcfg, emit
+from repro.core.distill import DistillConfig
+from repro.core.pipeline import BitDistillPipeline
+
+
+def run() -> dict:
+    pcfg = default_pcfg("sst2-syn")
+    pipe = BitDistillPipeline(TINY, pcfg)
+    tstate, _ = pipe.train_teacher(jax.random.PRNGKey(0))
+    s0 = pipe.refine(tstate.params)
+    s_ct, _ = pipe.continue_pretrain(s0)
+    rows = {}
+    for name, (ld, ad) in {"none": (False, False), "LD": (True, False),
+                           "AD": (False, True), "LD+AD": (True, True)}.items():
+        if not ld and not ad:
+            s, _ = pipe.bitnet_sft(s_ct)
+        else:
+            dcfg = dataclasses.replace(pcfg.distill, use_ld=ld, use_ad=ad)
+            s, _ = pipe.distill_finetune(s_ct, tstate.params, dcfg)
+        rows[name] = pipe.eval_accuracy(s, quantized=True)
+    return rows
+
+
+def main(force: bool = False):
+    res = cached("table6_distill_ablation", run, force)
+    print("\n== Table 6 (LD/AD ablation after CT, sst2-syn) ==")
+    for k in ("none", "LD", "AD", "LD+AD"):
+        if k in res:
+            print(f"{k:8s} {res[k]:.3f}")
+            emit(f"table6/{k}", 0.0, f"acc={res[k]:.3f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""BitLinear: the 1.58-bit linear layer, plus SubLN.
+
+One layer, three modes (selected by QuantConfig.mode):
+
+* ``fp``     — plain dense, used by the FP16 teacher / FP16-SFT baseline.
+* ``qat``    — fake-quant forward (absmean ternary weights, per-token absmax
+               int8 activations) with STE gradients.  This is what stages 2/3
+               of BitDistill train.
+* ``packed`` — inference: weights stored as 2-bit-packed ternary + scalar
+               scale; activations quantized to true int8.  Routed through the
+               Pallas ``w2a8_gemv``/``bitlinear`` kernels when enabled.
+
+SubLN (Eqs. 4-5) is an RMSNorm without re-centering placed immediately before
+the output projections of MHSA and FFN; defined here so `core` is
+self-contained for the paper's contribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+from repro.distributed.sharding import constrain
+from repro.nn.module import DTypePolicy, DEFAULT_POLICY, fan_in_init
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class BitLinear:
+    """y = quant(x) @ quant(w) + b, logical axes supplied by the caller."""
+    in_dim: int
+    out_dim: int
+    use_bias: bool = False
+    quant: Q.QuantConfig = Q.FP
+    axes: Tuple[str, str] = ("embed", "mlp")
+    policy: DTypePolicy = DEFAULT_POLICY
+
+    def init(self, key: jax.Array) -> Params:
+        w = fan_in_init(key, (self.in_dim, self.out_dim), self.policy.param_dtype)
+        if self.quant.mode == "packed":
+            qw, delta = Q.weight_quant_absmean(w)
+            p: Params = {
+                "w_packed": Q.pack_ternary(qw.astype(jnp.int8)),
+                "delta": delta.astype(jnp.float32),
+            }
+        else:
+            p = {"w": w}
+        if self.use_bias:
+            p["b"] = jnp.zeros((self.out_dim,), self.policy.param_dtype)
+        return p
+
+    def param_axes(self) -> Params:
+        a_in, a_out = self.axes
+        if self.quant.mode == "packed":
+            ax: Params = {"w_packed": (a_in, a_out), "delta": ()}
+        else:
+            ax = {"w": (a_in, a_out)}
+        if self.use_bias:
+            ax["b"] = (a_out,)
+        return ax
+
+    # -- forward ------------------------------------------------------------
+
+    def apply(self, p: Params, x: jax.Array,
+              act_scale: Optional[jax.Array] = None) -> jax.Array:
+        cd = self.policy.compute_dtype
+        if self.quant.mode == "fp":
+            y = jnp.matmul(x.astype(cd), p["w"].astype(cd))
+        elif self.quant.mode == "qat":
+            if self.quant.use_kernel:
+                from repro.kernels.bitlinear import ops as kops
+                y = kops.bitlinear_matmul(x.astype(cd), p["w"].astype(jnp.float32),
+                                          scheme=self.quant.scheme)
+            else:
+                xq = Q.fake_quant_act(x.astype(cd))
+                if self.quant.low_precision_quant and self.quant.scheme == "absmean":
+                    wq = Q.fake_quant_weight_lp(p["w"].astype(cd))
+                else:
+                    wq = Q.fake_quant_weight(p["w"].astype(jnp.float32),
+                                             scheme=self.quant.scheme,
+                                             act_scale=act_scale,
+                                             block=self.quant.block)
+                # keep the dequantized weight sharded like the master weight
+                # so FSDP gathers the 2-byte compute copy, not the fp32
+                # pre-quantization tensor (§Perf: halves ZeRO-3 gather wire;
+                # the per-tensor absmean becomes a cheap partial-sum psum)
+                wq = constrain(wq.astype(cd), self.axes)
+                y = jnp.matmul(xq, wq)
+        elif self.quant.mode == "packed":
+            y = packed_matmul(x.astype(cd), p["w_packed"], p["delta"],
+                              self.in_dim, use_kernel=self.quant.use_kernel)
+        else:  # pragma: no cover
+            raise ValueError(self.quant.mode)
+        if self.use_bias:
+            y = y + p["b"].astype(cd)
+        return y
+
+
+def packed_matmul(x: jax.Array, w_packed: jax.Array, delta: jax.Array,
+                  k: int, use_kernel: bool = False) -> jax.Array:
+    """Ternary matmul with 2-bit packed weights.
+
+    jnp path: unpack -> int8 matmul with int32 accumulation -> rescale.
+    kernel path: fused unpack+GEMV Pallas kernel (decode hot loop).
+    """
+    if use_kernel:
+        from repro.kernels.w2a8_gemv import ops as kops
+        return kops.w2a8_matmul(x, w_packed, delta)
+    wq = Q.unpack_ternary(w_packed, k)                      # int8 [K, N]
+    xq, gamma = Q.act_quant_absmax_int8(x)                  # values, scale
+    acc = jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32),
+                     preferred_element_type=jnp.int32)
+    scale = (gamma / 127.0).astype(jnp.float32) * delta
+    return (acc.astype(jnp.float32) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SubLN (Eqs. 4-5): RMSNorm with learned scale, inserted before W_out.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SubLN:
+    dim: int
+    eps: float = 1e-6
+    axis_name: str = "embed"
+    policy: DTypePolicy = DEFAULT_POLICY
+
+    def init(self, key: jax.Array) -> Params:
+        del key
+        return {"scale": jnp.ones((self.dim,), self.policy.param_dtype)}
+
+    def param_axes(self) -> Params:
+        return {"scale": (self.axis_name,)}
+
+    def apply(self, p: Params, x: jax.Array) -> jax.Array:
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + self.eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def convert_linear_params_fp_to_packed(w: jax.Array) -> Params:
+    """Offline conversion of a trained QAT weight to the packed serving form."""
+    qw, delta = Q.weight_quant_absmean(w)
+    return {"w_packed": Q.pack_ternary(qw.astype(jnp.int8)),
+            "delta": delta.astype(jnp.float32)}

@@ -1,0 +1,235 @@
+"""BitDistill: the paper's three-stage pipeline as one orchestrator.
+
+  Stage 1  Modeling refinement — re-architect the FP teacher with SubLN and
+           BitLinear (QAT), re-using the teacher's weights (§3.1).
+  Stage 2  Continual pre-training — short LM warm-up on generic corpus (§3.2).
+  Stage 3  Distillation fine-tuning — CE + λ·logits-KD + γ·attention-relation
+           KD against the task-finetuned FP teacher (§3.3).
+
+Also provides the paper's baselines: FP16-SFT (the teacher itself) and
+BitNet-SFT (stage 1 + task SFT only).  Used by benchmarks/ (Tables 1-6) and
+examples/bitdistill_pipeline.py; runs at any scale — tiny on CPU, pjit-mapped
+on pods via launch/train.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+from repro.core.distill import DistillConfig
+from repro.data.loader import DataLoader
+from repro.data.synth import get_task
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import build_model
+from repro.models.base import ModelConfig
+from repro.training.optimizer import AdamW, AdamWConfig
+from repro.training.schedule import warmup_cosine
+from repro.training.trainer import (TrainState, default_distill_layer,
+                                    init_train_state, make_distill_step,
+                                    make_eval_classify, make_train_step)
+
+
+@dataclasses.dataclass
+class StageResult:
+    name: str
+    steps: int
+    final_loss: float
+    metrics_history: List[Dict[str, float]]
+    seconds: float
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    task: str = "mnli-syn"
+    seq_len: int = 64
+    batch_size: int = 32
+    seed: int = 0
+    # stage 2 (continual pre-training)
+    ct_steps: int = 100
+    ct_lr: float = 3e-4
+    # stage 3 / SFT
+    sft_steps: int = 200
+    sft_lr: float = 1e-4
+    warmup: int = 10
+    distill: DistillConfig = dataclasses.field(default_factory=DistillConfig)
+    weight_quant_scheme: str = "absmean"
+    eval_batches: int = 8
+    log_every: int = 25
+
+
+def _loader(pcfg: PipelineConfig, task_name: str, seed_offset: int = 0) -> DataLoader:
+    return DataLoader(get_task(task_name, seed=pcfg.seed),
+                      pcfg.batch_size, pcfg.seq_len, seed=pcfg.seed + seed_offset)
+
+
+def _run_steps(step_fn, state, loader, n_steps, log_every, extra=None):
+    hist, t0 = [], time.time()
+    loss = float("nan")
+    for i in range(n_steps):
+        batch = {k: jnp.asarray(v) for k, v in loader.next().items()
+                 if k in ("tokens", "labels", "loss_mask")}
+        if extra is None:
+            state, metrics = step_fn(state, batch)
+        else:
+            state, metrics = step_fn(state, batch, extra)
+        if i % log_every == 0 or i == n_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            hist.append(dict(step=i, **m))
+            loss = m.get("loss", m.get("loss_ce", float("nan")))
+    return state, hist, loss, time.time() - t0
+
+
+class BitDistillPipeline:
+    """End-to-end driver.  All stages share one tokenizer/data pipeline."""
+
+    def __init__(self, base_cfg: ModelConfig, pcfg: PipelineConfig):
+        self.tok = ByteTokenizer()
+        assert base_cfg.vocab >= self.tok.vocab_size, "config vocab too small"
+        self.base_cfg = base_cfg
+        self.pcfg = pcfg
+        self.results: Dict[str, StageResult] = {}
+
+    # -- model constructors ------------------------------------------------------
+
+    def teacher_config(self) -> ModelConfig:
+        return self.base_cfg  # FP, no SubLN
+
+    def student_config(self) -> ModelConfig:
+        qat = Q.QuantConfig(mode="qat", scheme=self.pcfg.weight_quant_scheme)
+        return self.base_cfg.with_quant(qat)   # stage 1: SubLN + BitLinear
+
+    # -- stage 0: FP16-SFT teacher -------------------------------------------------
+
+    def train_teacher(self, key) -> Tuple[TrainState, StageResult]:
+        cfg, pcfg = self.teacher_config(), self.pcfg
+        model = build_model(cfg)
+        opt = AdamW(AdamWConfig(weight_decay=0.01))
+        lr = lambda s: warmup_cosine(s, pcfg.sft_lr, pcfg.warmup, pcfg.sft_steps)
+        step = jax.jit(make_train_step(model, opt, lr))
+        state = init_train_state(model.init(key), opt)
+        loader = _loader(pcfg, pcfg.task)
+        state, hist, loss, secs = _run_steps(step, state, loader,
+                                             pcfg.sft_steps, pcfg.log_every)
+        res = StageResult("fp16-sft(teacher)", pcfg.sft_steps, loss, hist, secs)
+        self.results["fp16_sft"] = res
+        return state, res
+
+    # -- stage 1: modeling refinement ------------------------------------------------
+
+    def refine(self, teacher_params) -> Dict:
+        """FP weights -> student params (SubLN scales initialized to 1)."""
+        student = build_model(self.student_config())
+        sp = student.init(jax.random.PRNGKey(self.pcfg.seed + 1))
+        return _copy_matching(teacher_params, sp)
+
+    # -- stage 2: continual pre-training ----------------------------------------------
+
+    def continue_pretrain(self, student_params, steps: Optional[int] = None
+                          ) -> Tuple[Dict, StageResult]:
+        pcfg = self.pcfg
+        steps = pcfg.ct_steps if steps is None else steps
+        model = build_model(self.student_config())
+        opt = AdamW(AdamWConfig(weight_decay=0.01))
+        lr = lambda s: warmup_cosine(s, pcfg.ct_lr, pcfg.warmup, steps)
+        step = jax.jit(make_train_step(model, opt, lr))
+        state = init_train_state(student_params, opt)
+        loader = _loader(pcfg, "corpus", seed_offset=17)
+        state, hist, loss, secs = _run_steps(step, state, loader, steps,
+                                             pcfg.log_every)
+        res = StageResult("continue-pretrain", steps, loss, hist, secs)
+        self.results["ct"] = res
+        return state.params, res
+
+    # -- stage 3: distillation fine-tuning ----------------------------------------------
+
+    def distill_finetune(self, student_params, teacher_params,
+                         dcfg: Optional[DistillConfig] = None
+                         ) -> Tuple[Dict, StageResult]:
+        pcfg = self.pcfg
+        dcfg = dcfg or pcfg.distill
+        scfg = self.student_config()
+        if dcfg.use_ad:
+            if scfg.family == "ssm":
+                # DESIGN.md §4: attention-free -> logits distillation only.
+                dcfg = dataclasses.replace(dcfg, use_ad=False)
+            elif dcfg.distill_layer < 0:
+                dcfg = dataclasses.replace(
+                    dcfg, distill_layer=default_distill_layer(scfg))
+        student = build_model(scfg)
+        teacher = build_model(self.teacher_config())
+        opt = AdamW(AdamWConfig(weight_decay=0.01))
+        lr = lambda s: warmup_cosine(s, pcfg.sft_lr, pcfg.warmup, pcfg.sft_steps)
+        step = jax.jit(make_distill_step(student, teacher, opt, lr, dcfg))
+        state = init_train_state(student_params, opt)
+        loader = _loader(pcfg, pcfg.task)
+        state, hist, loss, secs = _run_steps(step, state, loader,
+                                             pcfg.sft_steps, pcfg.log_every,
+                                             extra=teacher_params)
+        res = StageResult("distill-finetune", pcfg.sft_steps, loss, hist, secs)
+        self.results["distill"] = res
+        return state.params, res
+
+    # -- baseline: BitNet-SFT (no CT, no KD) -----------------------------------------------
+
+    def bitnet_sft(self, student_params) -> Tuple[Dict, StageResult]:
+        pcfg = self.pcfg
+        model = build_model(self.student_config())
+        opt = AdamW(AdamWConfig(weight_decay=0.01))
+        lr = lambda s: warmup_cosine(s, pcfg.sft_lr, pcfg.warmup, pcfg.sft_steps)
+        step = jax.jit(make_train_step(model, opt, lr))
+        state = init_train_state(student_params, opt)
+        loader = _loader(pcfg, pcfg.task)
+        state, hist, loss, secs = _run_steps(step, state, loader,
+                                             pcfg.sft_steps, pcfg.log_every)
+        res = StageResult("bitnet-sft", pcfg.sft_steps, loss, hist, secs)
+        self.results["bitnet_sft"] = res
+        return state.params, res
+
+    # -- eval ------------------------------------------------------------------------------
+
+    def eval_accuracy(self, params, quantized: bool) -> float:
+        cfg = self.student_config() if quantized else self.teacher_config()
+        model = build_model(cfg)
+        ev = make_eval_classify(model, self.tok.label_base,
+                                get_task(self.pcfg.task).spec.n_classes)
+        loader = _loader(self.pcfg, self.pcfg.task, seed_offset=9999)
+        accs = []
+        for _ in range(self.pcfg.eval_batches):
+            b = loader.next()
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            accs.append(float(ev(params, batch)))
+        return sum(accs) / len(accs)
+
+    # -- the full pipeline ------------------------------------------------------------------
+
+    def run(self, key=None) -> Dict[str, float]:
+        key = jax.random.PRNGKey(self.pcfg.seed) if key is None else key
+        tstate, _ = self.train_teacher(key)
+        sparams = self.refine(tstate.params)
+        sparams, _ = self.continue_pretrain(sparams)
+        sparams, _ = self.distill_finetune(sparams, tstate.params)
+        return {
+            "teacher_acc": self.eval_accuracy(tstate.params, quantized=False),
+            "bitdistill_acc": self.eval_accuracy(sparams, quantized=True),
+        }
+
+
+def _copy_matching(src: Dict, dst: Dict) -> Dict:
+    """Copy identically-keyed/shaped leaves from src into dst (stage-1 reuse:
+    new SubLN scales keep their init; everything else loads the FP weights)."""
+    if isinstance(dst, dict):
+        out = {}
+        for k, v in dst.items():
+            if isinstance(src, dict) and k in src:
+                out[k] = _copy_matching(src[k], v)
+            else:
+                out[k] = v
+        return out
+    if hasattr(src, "shape") and hasattr(dst, "shape") and src.shape == dst.shape:
+        return src.astype(dst.dtype) if hasattr(src, "astype") else src
+    return dst

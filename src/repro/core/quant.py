@@ -1,0 +1,304 @@
+"""1.58-bit / int8 quantizers for BitNet Distillation.
+
+Implements the paper's Preliminaries (Eqs. 1-3):
+
+  weights:      Q_w(W)   = Delta * RoundClip(W / (Delta + eps), -1, 1),
+                Delta    = mean(|W|)                      (per-tensor absmean)
+  activations:  Q_i8(X)  = (gamma/127) * RoundClip(127/(gamma+eps) * X, -128, 127),
+                gamma    = max(|X|)  per token            (per-token absmax)
+
+plus the Straight-Through Estimator (STE) used to backprop through RoundClip,
+the Table-4 quantizer variants (blockwise / GPTQ-like / AWQ-like), and 2-bit
+packing of ternary weights for memory-bound inference.
+
+All functions are pure jnp and safe under jit / pjit / shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-5
+
+QuantMode = Literal["fp", "qat", "packed"]
+WeightScheme = Literal["absmean", "blockwise", "gptq", "awq"]
+
+
+# ---------------------------------------------------------------------------
+# RoundClip and STE
+# ---------------------------------------------------------------------------
+
+def round_clip(x: jax.Array, a: float, b: float) -> jax.Array:
+    """RoundClip(Y, a, b) = min(max(round(Y), a), b)  (Eq. 2)."""
+    return jnp.clip(jnp.round(x), a, b)
+
+
+@jax.custom_vjp
+def ste(x: jax.Array, qx: jax.Array) -> jax.Array:
+    """Straight-through estimator: forward returns qx, backward passes grad to x.
+
+    Written as a two-argument primitive so arbitrary quantizers can reuse it:
+    ``ste(x, quantize(x))`` behaves as ``x + stop_grad(quantize(x) - x)`` but
+    keeps the intent explicit and gives an exact zero gradient to ``qx``.
+    """
+    del x
+    return qx
+
+
+def _ste_fwd(x, qx):
+    return qx, None
+
+
+def _ste_bwd(_, g):
+    return g, None
+
+
+ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Weight quantization (ternary)
+# ---------------------------------------------------------------------------
+
+def absmean_scale(w: jax.Array) -> jax.Array:
+    """Delta = mean(|W|) (per tensor, Eq. 2). Returns a scalar array."""
+    return jnp.mean(jnp.abs(w)).astype(jnp.float32)
+
+
+def weight_quant_absmean(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Eq. 1: per-tensor absmean ternarization.
+
+    Returns (q, delta) with q in {-1, 0, +1} stored in w.dtype and delta the
+    scalar scale such that dequantized weight = q * delta.
+    """
+    delta = absmean_scale(w)
+    q = round_clip(w.astype(jnp.float32) / (delta + EPS), -1.0, 1.0)
+    return q.astype(w.dtype), delta
+
+
+def weight_quant_blockwise(w: jax.Array, block: int = 128) -> Tuple[jax.Array, jax.Array]:
+    """Table-4 'Block Quant' [DLSZ21] variant: absmean per (block,)-column block.
+
+    The trailing axis is split into blocks of ``block``; each block gets its own
+    Delta.  Returns (q, delta) with delta of shape w.shape[:-1] + (nblocks,).
+    """
+    *lead, n = w.shape
+    nb = -(-n // block)
+    pad = nb * block - n
+    wf = w.astype(jnp.float32)
+    if pad:
+        wf = jnp.pad(wf, [(0, 0)] * len(lead) + [(0, pad)])
+    wb = wf.reshape(*lead, nb, block)
+    delta = jnp.mean(jnp.abs(wb), axis=-1, keepdims=True)
+    q = round_clip(wb / (delta + EPS), -1.0, 1.0)
+    q = q.reshape(*lead, nb * block)
+    if pad:
+        q = q[..., :n]
+    return q.astype(w.dtype), delta[..., 0]
+
+
+def weight_quant_awq(w: jax.Array, act_scale: Optional[jax.Array] = None,
+                     alpha: float = 0.5) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Table-4 'AWQ' [LTT+24] flavor: activation-aware per-channel rescale.
+
+    AWQ protects salient weight channels by scaling them up before quantization
+    (and folding the inverse scale into the activation side).  ``act_scale`` is a
+    per-input-channel activation magnitude statistic (mean |x| over a calibration
+    batch); channels with larger activations get larger protective scales
+    s_c = act_scale_c ** alpha (normalized to unit geometric mean).
+
+    Returns (q, delta, s) where dequantized weight = (q * delta) / s[:, None]
+    and the forward matmul uses x * s as the effective activation.
+    """
+    in_dim = w.shape[0]
+    if act_scale is None:
+        act_scale = jnp.ones((in_dim,), jnp.float32)
+    s = jnp.power(jnp.maximum(act_scale.astype(jnp.float32), EPS), alpha)
+    s = s / jnp.exp(jnp.mean(jnp.log(s)))  # unit geometric mean, keeps Delta sane
+    ws = w.astype(jnp.float32) * s[:, None]
+    delta = jnp.mean(jnp.abs(ws))
+    q = round_clip(ws / (delta + EPS), -1.0, 1.0)
+    return q.astype(w.dtype), delta, s
+
+
+def weight_quant_gptq(w: jax.Array, act_scale: Optional[jax.Array] = None,
+                      damp: float = 0.01) -> Tuple[jax.Array, jax.Array]:
+    """Table-4 'GPTQ' [FAHA22] flavor adapted to ternary, diagonal-Hessian form.
+
+    Full GPTQ does sequential column-wise error compensation with the Cholesky
+    of the activation Hessian.  With a *diagonal* Hessian approximation
+    H ~ diag(E[x_c^2]) the compensation reduces to quantizing in order of
+    decreasing sensitivity and propagating the residual of each input-channel
+    row into the not-yet-quantized rows scaled by H_cc.  We implement that
+    jit-compatibly with a scan over input channels in sensitivity order.
+    """
+    in_dim, out_dim = w.shape
+    wf = w.astype(jnp.float32)
+    if act_scale is None:
+        h = jnp.ones((in_dim,), jnp.float32)
+    else:
+        h = jnp.maximum(act_scale.astype(jnp.float32) ** 2, EPS)
+    h = h + damp * jnp.mean(h)
+    delta = jnp.mean(jnp.abs(wf))
+    order = jnp.argsort(-h)  # most sensitive first
+    w_ord = wf[order]
+    h_ord = h[order]
+
+    def body(carry, idx):
+        w_rem = carry  # [in_dim, out] remaining (already compensated) weights
+        row = w_rem[idx]
+        q = round_clip(row / (delta + EPS), -1.0, 1.0)
+        err = row - q * delta
+        # distribute error into later rows proportionally to h couplings;
+        # diagonal H means the optimal local update spreads err via h ratios.
+        later = (jnp.arange(in_dim) > idx)[:, None]
+        wgt = (h_ord[idx] / jnp.sum(jnp.where(later[:, 0], h_ord, 0.0) + EPS))
+        w_rem = w_rem - later * (err[None, :] * wgt)
+        return w_rem, q
+
+    _, q_ord = jax.lax.scan(body, w_ord, jnp.arange(in_dim))
+    inv = jnp.argsort(order)
+    q = q_ord[inv]
+    return q.astype(w.dtype), delta
+
+
+# ---------------------------------------------------------------------------
+# Activation quantization (int8)
+# ---------------------------------------------------------------------------
+
+def act_quant_absmax_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Eq. 3: per-token absmax symmetric int8.
+
+    'Per token' = per trailing feature vector: reduce over the last axis.
+    Returns (q, gamma) with q in [-128, 127] stored as float of x.dtype for the
+    QAT fake-quant path (the Pallas kernels use true int8).
+    """
+    gamma = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    q = round_clip(127.0 / (gamma + EPS) * x.astype(jnp.float32), -128.0, 127.0)
+    return q.astype(x.dtype), gamma
+
+
+def fake_quant_act(x: jax.Array) -> jax.Array:
+    """QAT activation path: dequantized int8 with STE gradient."""
+    q, gamma = act_quant_absmax_int8(x)
+    deq = (q.astype(jnp.float32) * (gamma / 127.0)).astype(x.dtype)
+    return ste(x, deq)
+
+
+def fake_quant_weight_lp(w: jax.Array) -> jax.Array:
+    """Low-precision absmean QAT path: the scale is accumulated in fp32 but
+    every elementwise tensor stays in w.dtype (bf16 on TPU), so SPMD never
+    materializes / gathers an fp32 copy of the weight (§Perf: halves ZeRO-3
+    gather wire).  Ternary values are exact in bf16; only inputs within
+    ~0.2% of the 0.5·Δ rounding boundary can flip vs the fp32 path."""
+    delta = jnp.mean(jnp.abs(w).astype(jnp.float32))
+    d = (delta + EPS).astype(w.dtype)
+    q = jnp.clip(jnp.round(w / d), -1.0, 1.0)
+    return ste(w, q * d)
+
+
+def fake_quant_weight(w: jax.Array, scheme: WeightScheme = "absmean",
+                      act_scale: Optional[jax.Array] = None,
+                      block: int = 128) -> jax.Array:
+    """QAT weight path: dequantized ternary with STE gradient."""
+    if scheme == "absmean":
+        q, delta = weight_quant_absmean(w)
+        deq = q.astype(jnp.float32) * delta
+    elif scheme == "blockwise":
+        q, delta = weight_quant_blockwise(w, block=block)
+        *lead, n = w.shape
+        nb = delta.shape[-1]
+        qb = jnp.pad(q.astype(jnp.float32), [(0, 0)] * len(lead) + [(0, nb * block - n)])
+        deq = (qb.reshape(*lead, nb, block) * delta[..., None]).reshape(*lead, nb * block)[..., :n]
+    elif scheme == "awq":
+        q, delta, s = weight_quant_awq(w, act_scale)
+        deq = q.astype(jnp.float32) * delta / s[:, None]
+    elif scheme == "gptq":
+        q, delta = weight_quant_gptq(w, act_scale)
+        deq = q.astype(jnp.float32) * delta
+    else:  # pragma: no cover - config validation catches this
+        raise ValueError(f"unknown weight scheme {scheme!r}")
+    return ste(w, deq.astype(w.dtype))
+
+
+# ---------------------------------------------------------------------------
+# 2-bit packing for inference (4 ternary values per byte)
+# ---------------------------------------------------------------------------
+# encoding: value + 1 in {0,1,2} stored in 2 bits; 4 values packed little-endian
+# along the *first* (input/K) axis so the decode GEMV kernel unpacks contiguous
+# K-strips after a single DMA.
+
+def pack_ternary(q: jax.Array) -> jax.Array:
+    """Pack ternary int array [K, N] (values in {-1,0,1}) to uint8 [K//4, N]."""
+    k, n = q.shape
+    assert k % 4 == 0, f"K={k} must be divisible by 4 for 2-bit packing"
+    u = (q.astype(jnp.int32) + 1).astype(jnp.uint8).reshape(k // 4, 4, n)
+    return (u[:, 0] | (u[:, 1] << 2) | (u[:, 2] << 4) | (u[:, 3] << 6)).astype(jnp.uint8)
+
+
+def unpack_ternary(p: jax.Array, k: int) -> jax.Array:
+    """Inverse of pack_ternary → int8 [K, N] with values in {-1,0,1}."""
+    kp, n = p.shape
+    assert kp * 4 == k
+    parts = [((p >> (2 * i)) & 0x3).astype(jnp.int8) - 1 for i in range(4)]
+    return jnp.stack(parts, axis=1).reshape(k, n)
+
+
+# ---------------------------------------------------------------------------
+# Quantization config carried by models
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """How linear layers behave.
+
+    mode:
+      fp      -- full precision (teacher / FP16-SFT baseline)
+      qat     -- fake-quant forward + STE backward (training-time 1.58-bit)
+      packed  -- true ternary with 2-bit packed weights (inference)
+    scheme: ternary weight quantizer flavor (Table 4)
+    quantize_lm_head: BitNet b1.58 keeps the LM head high-precision by default.
+    use_kernel: route matmuls through the Pallas bitlinear kernel where shapes
+      allow (training QAT keeps the jnp path for autodiff simplicity unless the
+      fused kernel's custom_vjp is requested).
+    """
+    mode: QuantMode = "fp"
+    scheme: WeightScheme = "absmean"
+    block: int = 128
+    quantize_lm_head: bool = False
+    use_kernel: bool = False
+    low_precision_quant: bool = False   # bf16 elementwise quant math (§Perf)
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.mode != "fp"
+
+
+FP = QuantConfig(mode="fp")
+QAT = QuantConfig(mode="qat")
+PACKED = QuantConfig(mode="packed")
+
+
+# ---------------------------------------------------------------------------
+# Analysis helpers (Fig. 2 reproduction)
+# ---------------------------------------------------------------------------
+
+def boundary_mass(w: jax.Array, width: float = 0.1) -> jax.Array:
+    """Fraction of weights within ±width*Delta of the 0<->±1 ternary decision
+    boundaries (|w|/Delta near 0.5).  The paper's Fig. 2 argument: continual
+    pre-training moves mass toward these boundaries, letting small gradient
+    steps flip quantized values.  Used by benchmarks/fig2_weight_shift.py."""
+    delta = absmean_scale(w)
+    r = jnp.abs(w.astype(jnp.float32)) / (delta + EPS)
+    return jnp.mean((jnp.abs(r - 0.5) < width).astype(jnp.float32))
+
+
+def ternary_histogram(w: jax.Array) -> jax.Array:
+    """Counts of {-1, 0, +1} after absmean ternarization (length-3 vector)."""
+    q, _ = weight_quant_absmean(w)
+    qi = q.astype(jnp.int32) + 1
+    return jnp.bincount(qi.reshape(-1), length=3)

@@ -1,0 +1,169 @@
+"""Logical-axis sharding rules with divisibility fallback (MaxText-style).
+
+Every parameter / activation / cache tensor carries a tuple of *logical* axis
+names (assigned by the nn modules).  A rule maps a logical name to an ordered
+list of candidate mesh-axis tuples; the first candidate whose axes (a) are not
+already used by another dim of the same tensor and (b) evenly divide the dim
+wins.  Candidates are tried per-tensor in *priority* order (batch first, TP
+dims next, sequence, then FSDP), so e.g. a GQA cache prefers head sharding and
+only falls back to sequence sharding when kv_heads < |model| — every fallback
+is recorded and surfaced in the dry-run report.
+
+Default placement (DESIGN.md §6):
+  batch          -> ("pod","data") | ("data",)      data parallel
+  heads/mlp/...  -> ("model",)                      tensor parallel
+  vocab          -> ("model",)                      vocab-parallel logits
+  embed          -> ("data",)                       FSDP / ZeRO-3
+  kv_seq         -> ("model",) fallback             sequence-parallel attention
+  seq (acts)     -> context/sequence parallelism for batch-unshardable shapes
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Tuple[str, ...]
+Candidates = Tuple[Axes, ...]
+
+# priority: lower = assigned earlier (grabs mesh axes first)
+_PRIORITY: Dict[str, int] = {
+    "batch": 0,
+    "expert": 10, "heads": 10, "mlp": 11, "vocab": 12, "kv_heads": 13,
+    "ssm_inner": 10, "ssm_heads": 10,
+    "kv_seq": 30, "seq": 30,
+    "embed": 40, "ssm_in": 41, "embed_out": 45,
+}
+
+
+def default_rules(multi_pod: bool) -> Dict[str, Candidates]:
+    batch: Candidates = ((("pod", "data"), ("data",), ()) if multi_pod
+                         else (("data",), ()))
+    return {
+        # activations / caches
+        "batch": batch,
+        "seq": ((), ),
+        "seq_sp": ((), ),        # hillclimb: (("model",),) = Megatron-SP
+        "kv_seq": (("model",), ("data",), ()),
+        "act_embed": ((), ),
+        # params: tensor-parallel dims
+        "heads": (("model",), ()),
+        "kv_heads": (("model",), ()),
+        "mlp": (("model",), ()),
+        "vocab": (("model",), ("data",), ()),
+        "expert": (("model",), ()),
+        "ssm_inner": (("model",), ()),
+        "ssm_heads": (("model",), ()),
+        "ssm_in": (("model",), ()),
+        # params: FSDP dims
+        "embed": (("data",), ()),
+        "embed_out": ((), ),
+        # never sharded
+        "layers": ((), ),
+        "head_dim": ((), ),
+        "ssm_state": ((), ),
+        "ssm_conv": (("model",), ()),
+        "conv_k": ((), ),
+        "expert_router": ((), ),
+    }
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    mesh: Mesh
+    rules: Dict[str, Candidates]
+    fallbacks: List[str] = dataclasses.field(default_factory=list)
+
+    def _axis_size(self, axes: Axes) -> int:
+        s = 1
+        for a in axes:
+            s *= self.mesh.shape[a]
+        return s
+
+    def spec(self, logical: Sequence[Optional[str]],
+             shape: Sequence[int]) -> P:
+        """Resolve one tensor's PartitionSpec."""
+        assert len(logical) == len(shape), (logical, shape)
+        order = sorted(range(len(logical)),
+                       key=lambda i: _PRIORITY.get(logical[i] or "", 50))
+        used: set = set()
+        assign: Dict[int, Axes] = {}
+        for i in order:
+            name = logical[i]
+            if name is None:
+                continue
+            cands = self.rules.get(name, ((),))
+            chosen: Axes = ()
+            for cand in cands:
+                if any(a not in self.mesh.shape for a in cand):
+                    continue  # candidate names an axis this mesh lacks
+                if any(a in used for a in cand):
+                    continue
+                if cand and shape[i] % self._axis_size(cand) != 0:
+                    continue
+                chosen = cand
+                break
+            if chosen != (cands[0] if cands else ()):
+                self.fallbacks.append(
+                    f"{name}[{shape[i]}] -> {chosen or 'replicated'}")
+            assign[i] = chosen
+            used.update(chosen)
+        parts = []
+        for i in range(len(logical)):
+            ax = assign.get(i, ())
+            parts.append(None if not ax else (ax[0] if len(ax) == 1 else ax))
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def sharding(self, logical: Sequence[Optional[str]],
+                 shape: Sequence[int]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+    # -- pytree helpers ---------------------------------------------------------
+
+    def tree_specs(self, axes_tree: Any, shape_tree: Any) -> Any:
+        """axes_tree leaves are tuples of logical names; shape_tree leaves are
+        array-likes (or ShapeDtypeStructs) with .shape."""
+        is_axes = lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t)
+        flat_axes = jax.tree_util.tree_flatten(axes_tree, is_leaf=is_axes)
+        flat_shapes = jax.tree_util.tree_flatten(shape_tree)
+        assert len(flat_axes[0]) == len(flat_shapes[0]), \
+            (len(flat_axes[0]), len(flat_shapes[0]))
+        specs = [self.spec(a, s.shape) for a, s in zip(flat_axes[0], flat_shapes[0])]
+        return jax.tree_util.tree_unflatten(flat_shapes[1], specs)
+
+    def tree_shardings(self, axes_tree: Any, shape_tree: Any) -> Any:
+        specs = self.tree_specs(axes_tree, shape_tree)
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), specs,
+            is_leaf=lambda s: isinstance(s, P))
+
+    def constrain(self, x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+        """with_sharding_constraint by logical names (activation hints)."""
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(logical, x.shape)))
+
+
+# -- activation-constraint context (hillclimb knob; no-op when unset) -----------
+
+_ACTIVE_PLAN: List[Optional[ShardingPlan]] = [None]
+
+
+def set_plan(plan: Optional[ShardingPlan]):
+    _ACTIVE_PLAN[0] = plan
+
+
+def get_plan() -> Optional[ShardingPlan]:
+    return _ACTIVE_PLAN[0]
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    plan = _ACTIVE_PLAN[0]
+    if plan is None:
+        return x
+    return plan.constrain(x, logical)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for BitDistill's compute hot spots.
+
+Each kernel package ships three files:
+  kernel.py — pl.pallas_call body with explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper (+ custom_vjp where used in training)
+  ref.py    — pure-jnp oracle; tests sweep shapes/dtypes and assert_allclose
+
+Kernels target TPU v5e (MXU 128x128 int8/bf16, ~16 MB VMEM); on this CPU
+container they are validated with ``interpret=True``.
+"""

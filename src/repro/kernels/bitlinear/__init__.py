@@ -1,0 +1,1 @@
+from repro.kernels.bitlinear import kernel, ops, ref  # noqa: F401

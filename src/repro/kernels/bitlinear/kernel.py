@@ -1,0 +1,79 @@
+"""Fused W1.58·A8 matmul kernel.
+
+y[M, N] = ( round_clip(127·x/γ) @ wq ) · (γ·Δ/127)
+
+with wq ∈ {-1,0,1} int8 (pre-ternarized, per-tensor scale Δ) and γ the
+per-token absmax (computed by ops.py in one cheap fused reduce — per-token
+scales need the full K row, so they cannot live inside a K-blocked kernel).
+
+TPU mapping: the MXU multiplies int8×int8→int32 at 2× bf16 throughput; the
+kernel quantizes the activation tile in VMEM (VPU), issues the int8 dot, and
+rescales the fp32 accumulator on the final K step — the TPU-native analogue
+of bitnet.cpp's CPU LUT kernels (DESIGN.md §3).
+
+Grid (M/bm, N/bn, K/bk); K is innermost so the fp32 accumulator tile lives in
+a VMEM scratch across K steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 512
+
+
+def _kernel(x_ref, w_ref, gamma_ref, delta_ref, o_ref, acc_ref, *, n_k: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # per-token int8 quantization of the activation tile (γ is full-row absmax)
+    x = x_ref[...].astype(jnp.float32)
+    gamma = gamma_ref[...].astype(jnp.float32)            # [bm, 1]
+    xq = jnp.clip(jnp.round(x * (127.0 / (gamma + 1e-5))), -128, 127)
+    xq = xq.astype(jnp.int8)
+
+    w = w_ref[...]                                         # int8 ternary [bk, bn]
+    acc_ref[...] += jax.lax.dot(
+        xq, w, preferred_element_type=jnp.int32,
+        precision=jax.lax.Precision.DEFAULT).astype(jnp.int32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _finish():
+        scale = (gamma / 127.0) * delta_ref[0]             # [bm, 1]
+        o_ref[...] = (acc_ref[...].astype(jnp.float32) * scale
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def bitlinear_kernel(x: jax.Array, wq: jax.Array, gamma: jax.Array,
+                     delta: jax.Array, bm: int = DEFAULT_BM,
+                     bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                     interpret: bool = False) -> jax.Array:
+    """x [M, K] float; wq [K, N] int8; gamma [M, 1] f32; delta scalar f32."""
+    m, k = x.shape
+    _, n = wq.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),   # scalar delta broadcast
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x, wq, gamma, delta.reshape(1))

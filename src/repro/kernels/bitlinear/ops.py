@@ -1,0 +1,66 @@
+"""Public wrapper: QAT-compatible fused bitlinear matmul with STE backward.
+
+Forward runs the Pallas kernel (int8 MXU path); backward applies the STE:
+  dx = g @ (Δ·wq)ᵀ ,  dw = x_dequantᵀ @ g
+which is exactly the gradient of the fake-quant reference under
+straight-through estimation of both quantizers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+from repro.kernels.bitlinear.kernel import bitlinear_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _fwd_2d(x2d: jax.Array, w: jax.Array, scheme: str, interpret: bool):
+    gamma = jnp.max(jnp.abs(x2d.astype(jnp.float32)), axis=-1, keepdims=True)
+    if scheme == "absmean":
+        qw, delta = Q.weight_quant_absmean(w)
+    else:  # kernel path supports per-tensor scales; other schemes fall back
+        qw, delta = Q.weight_quant_absmean(w)
+    y = bitlinear_kernel(x2d, qw.astype(jnp.int8), gamma,
+                         delta.astype(jnp.float32), interpret=interpret)
+    return y, (gamma, qw, delta)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def bitlinear_matmul(x: jax.Array, w: jax.Array, scheme: str = "absmean",
+                     interpret: bool | None = None) -> jax.Array:
+    """x [..., K] float; w [K, N] float (unquantized master weight)."""
+    itp = _interpret_default() if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    y, _ = _fwd_2d(x2d, w, scheme, itp)
+    return y.reshape(*lead, w.shape[-1])
+
+
+def _vjp_fwd(x, w, scheme, interpret):
+    itp = _interpret_default() if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    y, (gamma, qw, delta) = _fwd_2d(x2d, w, scheme, itp)
+    return y.reshape(*lead, w.shape[-1]), (x2d, gamma, qw, delta, lead)
+
+
+def _vjp_bwd(scheme, interpret, res, g):
+    x2d, gamma, qw, delta, lead = res
+    g2d = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    w_deq = qw.astype(jnp.float32) * delta
+    # STE through activation quant: dequantized activations for dw
+    xq = jnp.clip(jnp.round(x2d.astype(jnp.float32) * (127.0 / (gamma + 1e-5))),
+                  -128, 127)
+    x_deq = xq * (gamma / 127.0)
+    dx = jnp.matmul(g2d, w_deq.T).reshape(*lead, x2d.shape[-1]).astype(jnp.float32)
+    dw = jnp.matmul(x_deq.T, g2d)
+    return dx, dw
+
+
+bitlinear_matmul.defvjp(_vjp_fwd, _vjp_bwd)

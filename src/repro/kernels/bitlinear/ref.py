@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused bitlinear matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+
+
+def bitlinear_ref(x: jax.Array, wq: jax.Array, gamma: jax.Array,
+                  delta: jax.Array) -> jax.Array:
+    """Same math as the kernel, materialized: int8 activations, ternary w."""
+    xq = jnp.clip(jnp.round(x.astype(jnp.float32) * (127.0 / (gamma + 1e-5))),
+                  -128, 127)
+    acc = jnp.matmul(xq, wq.astype(jnp.float32))
+    return (acc * (gamma / 127.0) * delta).astype(x.dtype)
+
+
+def bitlinear_full_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """End-to-end oracle from the *unquantized* weight (matches BitLinear qat
+    forward): fake-quant activations and weights, then matmul."""
+    xq, gamma = Q.act_quant_absmax_int8(x)
+    deq_x = xq.astype(jnp.float32) * (gamma / 127.0)
+    qw, delta = Q.weight_quant_absmean(w)
+    return jnp.matmul(deq_x, qw.astype(jnp.float32) * delta).astype(x.dtype)

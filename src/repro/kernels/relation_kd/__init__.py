@@ -1,0 +1,1 @@
+from repro.kernels.relation_kd import kernel, ops, ref  # noqa: F401

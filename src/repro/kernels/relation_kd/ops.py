@@ -1,0 +1,95 @@
+"""Public wrapper: relation-KD loss with flash forward + blocked custom VJP.
+
+Backward derivation (needed because the kernel is forward-only):
+  KL_i = Σ_j P_t(i,j)(log P_t - log P_s)   with  s_rel = n_s n_sᵀ / temp.
+  ∂KL_i/∂s_rel(i,k) = (P_s(i,k) - P_t(i,k))        (teacher is stop-grad)
+  ⇒ with W = diag(row_weights)·(P_s - P_t)/temp:
+     g_{n_s} = W n_s + Wᵀ n_s.
+The backward recomputes P_s/P_t in row blocks (never the full L×L at once)
+via a lax.scan that carries the [L, D] gradient accumulator, then chains
+through the L2-normalize + head-resplit with standard jnp autodiff.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distill import _l2_normalize, _resplit_heads
+from repro.kernels.relation_kd.kernel import relation_kl_rows_kernel
+
+BWD_BLOCK = 512
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _prep(states: jax.Array, split_heads: int) -> jax.Array:
+    x = _l2_normalize(_resplit_heads(states.astype(jnp.float32), split_heads))
+    b, h, l, d = x.shape
+    return x.reshape(b * h, l, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _relation_mean_kl(s_norm: jax.Array, t_norm: jax.Array, temp: float,
+                      block: int, interpret: bool) -> jax.Array:
+    """mean over (BH, L) rows of KL; s_norm/t_norm [BH, L, D] normalized."""
+    rows = relation_kl_rows_kernel(s_norm, t_norm, temp=temp,
+                                   interpret=interpret)
+    return jnp.mean(rows)
+
+
+def _fwd(s_norm, t_norm, temp, block, interpret):
+    return _relation_mean_kl(s_norm, t_norm, temp, block, interpret), (s_norm, t_norm)
+
+
+def _bwd(temp, block, interpret, res, g):
+    s, t = res
+    bh, l, d = s.shape
+    scale = g / (bh * l)                 # d(mean)/d(row KL)
+    block = min(block, l)
+    nb = -(-l // block)
+    pad = nb * block - l
+
+    sp = jnp.pad(s, ((0, 0), (0, pad), (0, 0)))
+    tp = jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+    valid = (jnp.arange(nb * block) < l)
+
+    def body(acc_c, i):
+        sl = jax.lax.dynamic_slice_in_dim(sp, i * block, block, axis=1)
+        tl = jax.lax.dynamic_slice_in_dim(tp, i * block, block, axis=1)
+        rowv = jax.lax.dynamic_slice_in_dim(valid, i * block, block)
+        s_rel = jnp.einsum("bld,bmd->blm", sl, s) / temp      # [bh, block, L]
+        t_rel = jnp.einsum("bld,bmd->blm", tl, t) / temp
+        w = (jax.nn.softmax(s_rel, axis=-1)
+             - jax.nn.softmax(t_rel, axis=-1)) / temp
+        w = w * rowv[None, :, None].astype(jnp.float32) * scale
+        # row term: g[rows of this block] = W @ n ; col term: g[all] += Wᵀ @ n_rows
+        g_rows = jnp.einsum("blm,bmd->bld", w, s)             # [bh, block, d]
+        acc_c = acc_c + jnp.einsum("blm,bld->bmd", w, sl)     # [bh, l, d]
+        return acc_c, g_rows
+
+    acc_c, rows = jax.lax.scan(body, jnp.zeros_like(s), jnp.arange(nb))
+    g_rows_full = jnp.moveaxis(rows, 0, 1).reshape(bh, nb * block, d)[:, :l]
+    return acc_c + g_rows_full, None
+
+
+_relation_mean_kl.defvjp(_fwd, _bwd)
+
+
+def relation_kd_loss(student_states: jax.Array, teacher_states: jax.Array,
+                     split_heads: int = 4, temperature: float = 1.0,
+                     alphas: Tuple[float, float, float] = (1.0, 1.0, 1.0),
+                     interpret: bool | None = None) -> jax.Array:
+    """[3, B, H, L, Dh] x2 -> scalar Eq. 11 loss (flash path)."""
+    itp = _interpret_default() if interpret is None else interpret
+    total = jnp.zeros((), jnp.float32)
+    for i in range(3):
+        s = _prep(student_states[i], split_heads)
+        t = jax.lax.stop_gradient(_prep(teacher_states[i], split_heads))
+        total = total + alphas[i] * _relation_mean_kl(
+            s, t, float(temperature), BWD_BLOCK, itp)
+    return total

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle: materializes the L×L relation matrices (core.distill)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distill import _l2_normalize, _resplit_heads
+
+
+def relation_kl_rows_ref(s: jax.Array, t: jax.Array, temp: float = 1.0) -> jax.Array:
+    """s, t: [BH, L, D] (already normalized) -> KL(t_row ‖ s_row) [BH, L]."""
+    s_rel = jnp.einsum("bld,bmd->blm", s, s) / temp
+    t_rel = jnp.einsum("bld,bmd->blm", t, t) / temp
+    s_logp = jax.nn.log_softmax(s_rel, axis=-1)
+    t_logp = jax.nn.log_softmax(t_rel, axis=-1)
+    t_prob = jnp.exp(t_logp)
+    return jnp.sum(t_prob * (t_logp - s_logp), axis=-1)
+
+
+def prep_states(states: jax.Array, split_heads: int) -> jax.Array:
+    """[B, H, L, Dh] -> normalized resplit [B*split, L, D] (ops.py prep)."""
+    x = _l2_normalize(_resplit_heads(states.astype(jnp.float32), split_heads))
+    b, h, l, d = x.shape
+    return x.reshape(b * h, l, d)
+
+
+def relation_kd_loss_ref(student_states: jax.Array, teacher_states: jax.Array,
+                         split_heads: int, temperature: float = 1.0,
+                         alphas=(1.0, 1.0, 1.0)) -> jax.Array:
+    """[3, B, H, L, Dh] x2 -> scalar; must equal core.distill.attention_relation_loss."""
+    total = jnp.zeros((), jnp.float32)
+    for i in range(3):
+        s = prep_states(student_states[i], split_heads)
+        t = prep_states(teacher_states[i], split_heads)
+        total = total + alphas[i] * jnp.mean(relation_kl_rows_ref(s, t, temperature))
+    return total

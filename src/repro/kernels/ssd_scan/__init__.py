@@ -1,0 +1,1 @@
+from repro.kernels.ssd_scan import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,56 @@
+"""Public wrapper: model-layout SSD with the Pallas chunked kernel.
+
+Forward runs the kernel; backward recomputes with the jnp chunked SSD
+(repro.nn.ssm.ssd_chunked) under jax.checkpoint semantics — the chunked form
+is linear in S, so the recompute costs one extra forward.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+from repro.nn.ssm import ssd_chunked
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def ssd_scan(x, a, dt, B, C, chunk: int = 256, interpret: bool | None = None):
+    """Model layout: x [b,s,h,p], a/dt [b,s,h], B/C [b,s,n] -> y [b,s,h,p]."""
+    itp = _interpret_default() if interpret is None else interpret
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    xk = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    ak = a.transpose(0, 2, 1).reshape(b * h, s)
+    dtk = dt.transpose(0, 2, 1).reshape(b * h, s)
+    Bk = jnp.repeat(B[:, None], h, axis=1).reshape(b * h, s, n)
+    Ck = jnp.repeat(C[:, None], h, axis=1).reshape(b * h, s, n)
+    y, _ = ssd_scan_kernel(xk, ak, dtk, Bk, Ck, chunk=chunk, interpret=itp)
+    return y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+
+
+def _fwd(x, a, dt, B, C, chunk, interpret):
+    return ssd_scan(x, a, dt, B, C, chunk, interpret), (x, a, dt, B, C)
+
+
+def _bwd(chunk, interpret, res, g):
+    x, a, dt, B, C = res
+
+    def f(x_, a_, dt_, B_, C_):
+        y, _ = ssd_chunked(x_.astype(jnp.float32), a_.astype(jnp.float32),
+                           dt_.astype(jnp.float32), B_.astype(jnp.float32),
+                           C_.astype(jnp.float32), chunk=chunk)
+        return y
+
+    _, vjp = jax.vjp(f, x, a, dt, B, C)
+    dx, da, ddt, dB, dC = vjp(g.astype(jnp.float32))
+    return (dx.astype(x.dtype), da.astype(a.dtype), ddt.astype(dt.dtype),
+            dB.astype(B.dtype), dC.astype(C.dtype))
+
+
+ssd_scan.defvjp(_fwd, _bwd)

@@ -1,0 +1,18 @@
+"""Oracle: sequential scan over time (repro.nn.ssm.ssd_sequential reshaped)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.ssm import ssd_sequential
+
+
+def ssd_scan_ref(x: jax.Array, a: jax.Array, dt: jax.Array, B: jax.Array,
+                 C: jax.Array):
+    """Same [BH, ...] layout as the kernel; returns (y, final_state [BH,N,P])."""
+    bh, s, p = x.shape
+    y, h = ssd_sequential(
+        x.reshape(bh, s, 1, p).transpose(0, 2, 1, 3).transpose(0, 2, 1, 3),
+        a[:, :, None], dt[:, :, None], B, C)
+    # ssd_sequential wants [b, s, h, p]; we mapped bh->b with h=1
+    return y[:, :, 0, :], jnp.moveaxis(h[:, 0], -1, -2)  # [bh, n, p]

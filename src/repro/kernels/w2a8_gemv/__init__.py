@@ -1,0 +1,1 @@
+from repro.kernels.w2a8_gemv import kernel, ops, ref  # noqa: F401

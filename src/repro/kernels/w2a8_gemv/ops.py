@@ -1,0 +1,23 @@
+"""Public wrapper for the packed ternary matmul (inference only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.w2a8_gemv.kernel import w2a8_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def w2a8_matmul(x: jax.Array, wp: jax.Array, delta: jax.Array,
+                interpret: bool | None = None) -> jax.Array:
+    """x [..., K] float; wp uint8 [K//4, N]; delta scalar -> [..., N]."""
+    itp = _interpret_default() if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, x.shape[-1])
+    gamma = jnp.max(jnp.abs(x2d.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = w2a8_kernel(x2d, wp, gamma, jnp.asarray(delta, jnp.float32),
+                    interpret=itp)
+    return y.reshape(*lead, wp.shape[-1])

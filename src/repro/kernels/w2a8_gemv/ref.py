@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the packed ternary GEMV."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+
+
+def w2a8_ref(x: jax.Array, wp: jax.Array, delta: jax.Array) -> jax.Array:
+    k = x.shape[-1]
+    wq = Q.unpack_ternary(wp, k)
+    xq, gamma = Q.act_quant_absmax_int8(x)
+    acc = jnp.matmul(xq.astype(jnp.float32), wq.astype(jnp.float32))
+    return (acc * (gamma / 127.0) * delta).astype(x.dtype)

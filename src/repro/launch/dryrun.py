@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, record memory/cost/collective analysis.
+
+MUST be run as its own process (the two lines above must execute before any
+jax initialization):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results are cached as JSON under benchmarks/results/dryrun/ and consumed by
+launch/roofline.py + EXPERIMENTS.md.
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED  # noqa: E402 (imports after XLA_FLAGS)
+from repro.configs.shapes import SHAPES, applicable
+from repro.launch.hlo_analysis import analyze
+from repro.launch.memest import estimate
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import Roofline
+from repro.launch.specs import BIG, build_cell
+from repro.distributed import sharding as shlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, step_override=None,
+             rules_overrides=None, model_overrides=None, remat_policy=None,
+             accum: int = 1, tag: str = "", verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, step_override=step_override,
+                      rules_overrides=rules_overrides,
+                      model_overrides=model_overrides,
+                      remat_policy=remat_policy, accum=accum)
+    shlib.set_plan(cell.plan)
+    try:
+        with mesh:
+            jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings)
+            lowered = jitted.lower(*cell.arg_structs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+    finally:
+        shlib.set_plan(None)
+
+    # trip-count-aware per-chip analysis (XLA cost_analysis counts loop
+    # bodies once — see launch/hlo_analysis.py)
+    hc = analyze(hlo, n_dev)
+    roof = Roofline(hc.flops * n_dev, hc.hbm_bytes * n_dev, hc.wire_bytes, n_dev)
+
+    mem_d = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_d[k] = int(v)
+    args_b = mem_d.get("argument_size_in_bytes", 0)
+    temp_b = mem_d.get("temp_size_in_bytes", 0)
+    # arguments already sharded (per-chip); temp is the per-chip program's
+    # CPU-backend buffer assignment (pessimistic vs TPU — see launch/memest.py)
+    per_chip = args_b + temp_b
+    # infer the effective (dp, tp) layout from the plan's batch placement
+    probe = tuple(cell.plan.spec(("batch", "seq"), (256, 4096)))
+    batch_axes = probe[0] if probe else None
+    if batch_axes is None:
+        dp = 1
+    elif isinstance(batch_axes, tuple):
+        dp = 1
+        for ax in batch_axes:
+            dp *= mesh.shape[ax]
+    else:
+        dp = mesh.shape[batch_axes]
+    tp = max(1, n_dev // dp)
+    memest = estimate(cell.model_cfg,
+                      SHAPES[shape], n_dev, tp,
+                      opt_8bit=arch in BIG,
+                      step_kind=cell.step_kind,
+                      with_teacher=cell.step_kind == "distill")
+
+    res = {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+        "step": cell.step_kind if step_override is None else step_override,
+        "n_devices": n_dev,
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_d,
+        "cpu_backend_bytes_per_chip": per_chip,
+        "memest_per_chip": {k: (float(v) if not isinstance(v, bool) else v)
+                            for k, v in memest.items()},
+        "fits_hbm": bool(memest["fits_hbm"]),
+        "cost_analysis_raw": {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float)) and "bytes accessed" not in k},
+        "hlo_cost": {"flops_per_chip": hc.flops,
+                     "hbm_bytes_per_chip": hc.hbm_bytes,
+                     "wire_bytes_per_chip": hc.wire_bytes,
+                     "collectives": hc.collective_counts,
+                     "loop_trip_counts": hc.trip_counts},
+        "roofline": roof.to_dict(),
+        "fallbacks": sorted(set(cell.plan.fallbacks)),
+        "params": cell.model_cfg.param_count(),
+        "active_params": cell.model_cfg.active_param_count(),
+        "tag": tag,
+    }
+    if verbose:
+        print(f"[{arch} × {shape} × {'2pod' if multi_pod else '1pod'}"
+              f"{' × ' + tag if tag else ''}] "
+              f"compile {t_compile:.0f}s  "
+              f"memest {memest['total']/2**30:.2f} GiB/chip "
+              f"(cpu-be {per_chip/2**30:.2f})  "
+              f"flops/chip {hc.flops:.3e}  bottleneck {roof.bottleneck}")
+        print("  memory_analysis:", mem_d)
+        print(f"  roofline: compute {roof.t_compute*1e3:.2f}ms  "
+              f"memory {roof.t_memory*1e3:.2f}ms  "
+              f"collective {roof.t_collective*1e3:.2f}ms")
+        print("  collectives:", hc.collective_counts)
+    return res
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool, tag: str = "") -> pathlib.Path:
+    pod = "2pod" if multi_pod else "1pod"
+    name = f"{arch}__{shape}__{pod}{('__' + tag) if tag else ''}.json"
+    return RESULTS / name
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--step", default=None,
+                    choices=[None, "train", "prefill", "decode", "distill"])
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--variants", default="",
+                    help="'+'-joined VARIANTS keys (e.g. dp_zero3+bf16s)")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+    from repro.launch.specs import resolve_variants
+    v_rules, v_model = resolve_variants(args.variants)
+    if args.variants and not args.tag:
+        args.tag = args.variants + (f"+acc{args.accum}" if args.accum > 1 else "")
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    if args.all:
+        cells = [(c.name, s) for c in ASSIGNED for s in SHAPES]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for arch, shape in cells:
+        from repro.models.base import get_config
+        fam = get_config(arch).family
+        for mp in meshes:
+            path = cell_path(arch, shape, mp, args.tag)
+            if path.exists() and not args.force:
+                print(f"[skip cached] {path.name}")
+                continue
+            if not applicable(fam, shape):
+                res = {"arch": arch, "shape": shape, "multi_pod": mp,
+                       "status": "skipped",
+                       "reason": f"{shape} requires sub-quadratic sequence "
+                                 f"mixing; {arch} ({fam}) is full-attention "
+                                 "(DESIGN.md §4)"}
+                path.write_text(json.dumps(res, indent=1))
+                print(f"[skip-by-design] {arch} × {shape}")
+                continue
+            try:
+                res = run_cell(arch, shape, mp, step_override=args.step,
+                               rules_overrides=v_rules or None,
+                               model_overrides=v_model or None,
+                               remat_policy=args.remat, accum=args.accum,
+                               tag=args.tag)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                traceback.print_exc()
+                res = {"arch": arch, "shape": shape, "multi_pod": mp,
+                       "status": "error", "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+            path.write_text(json.dumps(res, indent=1))
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

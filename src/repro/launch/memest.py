@@ -1,0 +1,88 @@
+"""Analytic per-chip HBM estimate for dry-run cells.
+
+XLA:CPU's buffer assignment (what memory_analysis() reports in this
+container) keeps fp32 copies of bf16 residual stacks and materializes
+transpose copies that the TPU backend fuses away — measured ~2-4x pessimistic
+vs a hand model of TPU allocation.  We therefore report BOTH the raw CPU
+temp_size and this analytic estimate; `fits_hbm` keys off the analytic model
+(every term is listed so the claim is auditable).
+
+Model (per chip), train step:
+  params            P·bytes_param / n_dev                (FSDP+TP fully shards)
+  grads             P·4 / n_dev                          (fp32)
+  opt states        P·(8 | 2.06) / n_dev                 (fp32 | blockwise-int8)
+  residual stack    L · T_loc · d · 2                    (bf16 layer inputs)
+  logits buffers    3 · T_loc · V_pad/tp · 2             (logits+softmax+cot)
+  layer transient   max(attn scores, ssd decay, moe dispatch, ffn act) · 2
+inference: params + caches + transient only.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.base import ModelConfig
+
+GiB = 1024 ** 3
+
+
+def estimate(cfg: ModelConfig, shape: ShapeSpec, n_dev: int, tp: int,
+             opt_8bit: bool, step_kind: str, with_teacher: bool = False
+             ) -> Dict[str, float]:
+    p = cfg.param_count()
+    bytes_param = 2 if cfg.param_dtype == "bfloat16" else 4
+    dp = n_dev // tp
+    b_loc = max(1, shape.global_batch // dp)     # batch rows per chip
+    t_loc = b_loc * (shape.seq if step_kind in ("train", "prefill", "distill") else 1)
+    d = cfg.d_model
+    vp_tp = -(-cfg.padded_vocab // tp)
+
+    terms: Dict[str, float] = {}
+    terms["params"] = p * bytes_param / n_dev
+    if with_teacher:
+        terms["teacher_params"] = p * bytes_param / n_dev
+
+    if step_kind in ("train", "distill"):
+        terms["grads"] = p * 4 / n_dev
+        terms["opt_states"] = p * (2.06 if opt_8bit else 8.0) / n_dev
+        terms["residual_stack"] = cfg.n_layers * t_loc * d * 2
+        terms["logits"] = 3 * t_loc * vp_tp * 2
+
+    # per-layer transient working set (one layer live at a time under remat)
+    heads_loc = max(1, cfg.n_heads // tp)
+    scores = b_loc * heads_loc * min(shape.seq, cfg.max_seq) ** 2 * 4 \
+        if any(s.mixer in ("attn", "attn_cross") for s in cfg.resolved_pattern()) \
+        and step_kind in ("train", "prefill", "distill") else 0
+    ssd = 0
+    if any(s.mixer == "mamba" for s in cfg.resolved_pattern()) and \
+            step_kind in ("train", "prefill", "distill"):
+        q = cfg.ssm_chunk
+        h_loc = max(1, (2 * d // cfg.ssm_head_dim) // tp)
+        nc = max(1, shape.seq // q)
+        ssd = b_loc * nc * h_loc * q * q * 4
+    moe = 0
+    if cfg.n_experts and step_kind in ("train", "distill", "prefill"):
+        cap = int(cfg.moe_group_size * cfg.top_k / cfg.n_experts
+                  * cfg.capacity_factor)
+        groups_loc = max(1, t_loc // cfg.moe_group_size)
+        e_loc = max(1, cfg.n_experts // tp) if cfg.n_experts % tp == 0 else cfg.n_experts
+        moe = groups_loc * cfg.moe_group_size * e_loc * cap * 2 // max(cap, 1)  # dispatch mask dominates
+        moe += groups_loc * e_loc * cap * d * 2
+    ffn = t_loc * max(cfg.d_ff // tp if cfg.d_ff else 2 * d // tp, 1) * 2 * 3
+    terms["layer_transient"] = float(max(scores, ssd, moe, ffn)) * 2  # fwd+bwd copies
+
+    if step_kind == "decode":
+        # caches sharded over (batch·dp, heads|seq over tp)
+        kv_layers = sum(1 for s in cfg.resolved_pattern()
+                        if s.mixer in ("attn", "attn_cross")) * cfg.repeats
+        ssm_layers = sum(1 for s in cfg.resolved_pattern()
+                         if s.mixer == "mamba") * cfg.repeats
+        kv = kv_layers * b_loc * shape.seq * cfg.n_kv_heads * cfg.head_dim * 2 * 2 / tp
+        d_inner = 2 * d
+        ssm_state = ssm_layers * b_loc * (d_inner // cfg.ssm_head_dim) \
+            * cfg.ssm_head_dim * cfg.ssm_state * 4 / tp
+        terms["caches"] = kv + ssm_state
+
+    terms["total"] = sum(v for k, v in terms.items() if k != "total")
+    terms["fits_hbm"] = terms["total"] < 16 * GiB
+    return terms

@@ -1,0 +1,82 @@
+"""Render the dry-run JSON cache into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m repro.launch.report [--multi-pod] [--tag TAG]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from repro.launch.roofline import (HBM_PER_CHIP, PEAK_FLOPS_BF16, Roofline,
+                                   mfu, model_flops)
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+ARCH_ORDER = [
+    "qwen1.5-0.5b", "qwen2.5-3b", "gemma-7b", "llama-3.2-vision-11b",
+    "mistral-large-123b", "granite-moe-1b-a400m", "grok-1-314b",
+    "whisper-medium", "mamba2-780m", "jamba-1.5-large-398b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(arch: str, shape: str, multi_pod: bool, tag: str = "") -> Optional[dict]:
+    pod = "2pod" if multi_pod else "1pod"
+    name = f"{arch}__{shape}__{pod}{('__' + tag) if tag else ''}.json"
+    p = RESULTS / name
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def render_row(d: dict) -> str:
+    if d["status"] == "skipped":
+        return (f"| {d['arch']} | {d['shape']} | — | — | — | — | — | — | — | "
+                f"skip: sub-quadratic only |")
+    if d["status"] != "ok":
+        return f"| {d['arch']} | {d['shape']} | ERROR | | | | | | | {d.get('error','')[:60]} |"
+    r = d["roofline"]
+    hc = d["hlo_cost"]
+    tokens = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+              "decode_32k": 128, "long_500k": 1}[d["shape"]]
+    mf = model_flops(d["params"], d["active_params"], tokens, d["step"])
+    roof = Roofline(r["flops"], r["bytes_accessed"],
+                    r["wire_bytes_per_chip"], d["n_devices"])
+    ratio = mf / max(r["flops"], 1.0)
+    frac = mfu(mf, roof)
+    mem_gib = d.get("memest_per_chip", {}).get(
+        "total", d.get("cpu_backend_bytes_per_chip", 0)) / 2 ** 30
+    return (f"| {d['arch']} | {d['shape']} | {d['step']} "
+            f"| {r['t_compute_s']*1e3:.1f} | {r['t_memory_s']*1e3:.1f} "
+            f"| {r['t_collective_s']*1e3:.1f} | **{r['bottleneck'][:4]}** "
+            f"| {ratio:.2f} | {frac*100:.1f}% | {mem_gib:.1f} GiB"
+            f"{'' if d['fits_hbm'] else ' ⚠'} |")
+
+
+HEADER = ("| arch | shape | step | t_comp ms | t_mem ms | t_coll ms | bound "
+          "| useful/HLO | roofline frac | mem/chip |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def table(multi_pod: bool, tag: str = "") -> str:
+    rows = [HEADER]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = load(a, s, multi_pod, tag)
+            if d is not None:
+                rows.append(render_row(d))
+    return "\n".join(rows)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+    print(table(args.multi_pod, args.tag))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Roofline extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+  compute    = HLO_FLOPs             / (chips × peak_FLOP/s)
+  memory     = HLO_bytes_accessed    / (chips × HBM_bw)
+  collective = wire_bytes(per chip)  / link_bw
+
+cost_analysis() supplies FLOPs / bytes; collective bytes are parsed from the
+compiled HLO: for each all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute we take the operand/result sizes and convert to per-chip
+wire bytes with ring-algorithm factors over the participant group size.
+HLO flops/bytes are whole-program (all chips): divided by chip count.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 (394 int8), 819 GB/s HBM,
+~50 GB/s/link ICI (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16 * 1024 ** 3
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|"
+                       r"u64|u32|u16|u8|pred|c64|c128)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\b")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    wire_bytes: float              # per participating chip, ring model
+    raw_bytes: float               # sum of result-shape bytes
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    wire = 0.0
+    raw = 0.0
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        # avoid double counting async -start/-done pairs: skip -done lines
+        if "-done" in line.split("=", 1)[1][:64]:
+            continue
+        g = _group_size(line, n_devices)
+        b = _shape_bytes(shape_txt)
+        raw += b
+        counts[kind] = counts.get(kind, 0) + 1
+        if g <= 1:
+            continue
+        if kind == "all-reduce":
+            wire += 2.0 * b * (g - 1) / g
+        elif kind == "all-gather":
+            wire += b * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire += b * (g - 1)           # result is already scattered
+        elif kind == "all-to-all":
+            wire += b * (g - 1) / g
+        elif kind == "collective-permute":
+            wire += b
+    return CollectiveStats(counts, wire, raw)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                   # whole-program
+    bytes_accessed: float          # whole-program
+    wire_bytes: float              # per chip
+    n_devices: int
+    peak_flops: float = PEAK_FLOPS_BF16
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.n_devices * self.peak_flops)
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / (self.n_devices * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Optimistic overlap model: max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def to_dict(self):
+        return {
+            "flops": self.flops, "bytes_accessed": self.bytes_accessed,
+            "wire_bytes_per_chip": self.wire_bytes, "n_devices": self.n_devices,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time,
+        }
+
+
+def model_flops(param_count: int, active_param_count: int, tokens: int,
+                kind: str) -> float:
+    """6·N·D for a train step (fwd+bwd), 2·N·D for inference, per step."""
+    n = active_param_count
+    if kind in ("train", "distill"):
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens
+
+
+def mfu(model_fl: float, roof: Roofline) -> float:
+    return model_fl / (roof.step_time * roof.n_devices * roof.peak_flops)

@@ -1,0 +1,238 @@
+"""Dry-run cell builder: ShapeDtypeStruct inputs + shardings per
+(architecture × shape × mesh × step-kind).  No device allocation happens
+here — everything is eval_shape / lower / compile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import quant as Q
+from repro.core.distill import DistillConfig
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable
+from repro.distributed.sharding import ShardingPlan, default_rules
+from repro.models import build_model
+from repro.models.base import ModelConfig, get_config
+from repro.training.optimizer import AdamW, AdamWConfig
+from repro.training.trainer import (TrainState, default_distill_layer,
+                                    make_distill_step, make_train_step)
+
+S = jax.ShapeDtypeStruct
+
+# archs whose param+optimizer footprint needs the 8-bit optimizer to fit
+# 16 GB/chip HBM (DESIGN.md §8)
+BIG = ("mistral-large-123b", "grok-1-314b", "jamba-1.5-large-398b")
+
+# §Perf hillclimb variants.  Each = (rules_overrides, model_overrides).
+# Composable by "+" in the tag: e.g. "dp_zero3+bf16s+flash".
+VARIANTS = {
+    # pure data parallel over all 256/512 chips with ZeRO-3 parameter
+    # sharding (small/mid models: kills the per-layer TP all-reduces)
+    "dp_zero3": (
+        {"batch": (("pod", "data", "model"), ("data", "model"), ("data",), ()),
+         "heads": ((),), "kv_heads": ((),), "mlp": ((),), "vocab": ((),),
+         "expert": ((),), "ssm_inner": ((),), "ssm_heads": ((),),
+         "ssm_in": ((),), "ssm_conv": ((),), "kv_seq": ((),),
+         "embed": (("data", "model"), ("data",), ())},
+        {}),
+    # bf16 attention scores (fp32 softmax accumulation retained)
+    "bf16s": ({}, {"attn_scores_dtype": "bfloat16"}),
+    # flash-style blocked attention (never materializes SxT)
+    "flash": ({}, {"attn_impl": "blocked"}),
+    # Megatron-SP: inter-layer residuals sequence-sharded over `model`
+    "sp": ({"seq_sp": (("model",), ())}, {}),
+    # store master weights bf16 (halves param+grad bytes at scale)
+    "bf16p": ({}, {"param_dtype": "bfloat16"}),
+    # packed 2-bit ternary weights (decode cells)
+    "packed": ({}, {"__packed__": True}),
+    # bf16-elementwise quantizer math (no fp32 weight tensor to gather)
+    "lpq": ({}, {"__lpq__": True}),
+    # inference weight placement: TP over `model` only, replicated over
+    # `data` (no per-step ZeRO gathers; decode has no optimizer to shard for)
+    "infer_repl": ({"embed": ((),)}, {}),
+    # bf16 parameters at inference (halves weight reads)
+    "bf16w": ({}, {"param_dtype": "bfloat16"}),
+    # SSD chunk sweep: decay-tensor traffic scales with chunk length q
+    # (total [q,k] bytes per layer = S·q·heads); smaller chunks trade a
+    # longer inter-chunk scan for less HBM traffic
+    "ssdq128": ({}, {"ssm_chunk": 128}),
+    "ssdq64": ({}, {"ssm_chunk": 64}),
+}
+
+
+def resolve_variants(tag: str):
+    rules: Dict = {}
+    model: Dict = {}
+    for part in [p for p in tag.split("+") if p]:
+        r, m = VARIANTS[part]
+        rules.update(r)
+        model.update(m)
+    return rules, model
+
+
+def student_config(cfg: ModelConfig, use_kernels: bool = False,
+                   packed: bool = False) -> ModelConfig:
+    """The BitDistill student: QAT BitLinear + SubLN, bf16 activations,
+    padded vocab for TP logits.  packed=True -> 2-bit serving weights."""
+    mode = "packed" if packed else "qat"
+    q = Q.QuantConfig(mode=mode, use_kernel=use_kernels)
+    return cfg.with_quant(q).replace(vocab_pad_multiple=512)
+
+
+def input_structs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {
+            "tokens": S((b, s), jnp.int32),
+            "labels": S((b, s), jnp.int32),
+            "loss_mask": S((b, s), jnp.float32),
+        }
+    elif shape.kind == "prefill":
+        batch = {"tokens": S((b, s), jnp.int32)}
+    else:  # decode
+        batch = {"token": S((b,), jnp.int32)}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        batch["image_embeds"] = S((b, cfg.num_image_tokens, cfg.d_model),
+                                  jnp.bfloat16)
+    if cfg.family == "audio" and shape.kind != "decode":
+        batch["frames"] = S((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+# spec-mandated name: ShapeDtypeStruct stand-ins for every model input
+input_specs = input_structs
+
+
+def batch_axes(batch: Dict[str, Any]) -> Dict[str, Tuple]:
+    ax = {}
+    for k in batch:
+        if k in ("tokens", "labels", "loss_mask"):
+            ax[k] = ("batch", "seq")
+        elif k == "token":
+            ax[k] = ("batch",)
+        else:  # image_embeds / frames
+            ax[k] = ("batch", "seq", "act_embed")
+    return ax
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower one dry-run cell."""
+    arch: str
+    shape: ShapeSpec
+    step_kind: str                  # train | prefill | decode | distill
+    step_fn: Callable
+    arg_structs: Tuple
+    in_shardings: Tuple
+    plan: ShardingPlan
+    model_cfg: ModelConfig
+
+
+def build_cell(arch: str, shape_name: str, mesh, step_override: Optional[str] = None,
+               rules_overrides: Optional[Dict] = None,
+               model_overrides: Optional[Dict] = None,
+               remat_policy: Optional[str] = None,
+               accum: int = 1,
+               use_blocked_ad: bool = True) -> Cell:
+    base = get_config(arch)
+    shape = SHAPES[shape_name]
+    multi_pod = "pod" in mesh.axis_names
+    rules = default_rules(multi_pod)
+    if rules_overrides:
+        rules.update(rules_overrides)
+    plan = ShardingPlan(mesh, rules)
+
+    mo = dict(model_overrides or {})
+    packed = bool(mo.pop("__packed__", False))
+    lpq = bool(mo.pop("__lpq__", False))
+    cfg = student_config(base, packed=packed)
+    if lpq:
+        cfg = cfg.replace(quant=dataclasses.replace(
+            cfg.quant, low_precision_quant=True))
+    if mo:
+        cfg = cfg.replace(**mo)
+    if remat_policy is not None:
+        cfg = cfg.replace(remat_policy=remat_policy)
+    model = build_model(cfg)
+    params_struct = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_shardings = plan.tree_shardings(model.param_axes(), params_struct)
+
+    step_kind = step_override or shape.kind
+    batch = input_structs(cfg, shape)
+    b_shardings = {k: plan.sharding(a, batch[k].shape)
+                   for k, a in batch_axes(batch).items()}
+
+    if step_kind in ("train", "distill"):
+        opt = AdamW(AdamWConfig(
+            state_dtype="int8_blockwise" if arch in BIG else "float32"))
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+        o_shardings = plan.tree_shardings(opt.state_axes(model.param_axes()),
+                                          opt_struct)
+        state_struct = TrainState(params_struct, opt_struct, S((), jnp.int32))
+        state_shard = TrainState(p_shardings, o_shardings,
+                                 NamedSharding(mesh, P()))
+        if step_kind == "train":
+            def grad_constraint(grads):
+                return jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, grads, p_shardings)
+            fn = make_train_step(model, opt, lambda s: jnp.float32(1e-4),
+                                 accum=accum, grad_constraint=grad_constraint)
+            return Cell(arch, shape, step_kind, fn, (state_struct, batch),
+                        (state_shard, b_shardings), plan, cfg)
+        # distill: teacher = FP config, frozen
+        tcfg = base.replace(vocab_pad_multiple=512)
+        teacher = build_model(tcfg)
+        t_struct = jax.eval_shape(lambda: teacher.init(jax.random.PRNGKey(1)))
+        t_shardings = plan.tree_shardings(teacher.param_axes(), t_struct)
+        dcfg = DistillConfig(distill_layer=default_distill_layer(cfg),
+                             use_ad=cfg.family != "ssm", blocked=use_blocked_ad)
+        fn = make_distill_step(model, teacher, opt,
+                               lambda s: jnp.float32(1e-4), dcfg)
+        return Cell(arch, shape, step_kind, fn,
+                    (state_struct, batch, t_struct),
+                    (state_shard, b_shardings, t_shardings), plan, cfg)
+
+    if step_kind == "prefill":
+        def prefill_fn(params, b):
+            logits, _, _ = _forward(model, cfg, params, b)
+            return logits
+        return Cell(arch, shape, step_kind, prefill_fn, (params_struct, batch),
+                    (p_shardings, b_shardings), plan, cfg)
+
+    # decode: one new token against a seq-long cache
+    cache_struct = jax.eval_shape(
+        lambda p: _init_cache(model, cfg, p, shape), params_struct)
+    c_shardings = plan.tree_shardings(_cache_axes(model, cfg), cache_struct)
+
+    def decode_fn(params, b, cache, index):
+        return model.decode_step(params, b["token"], cache, index)
+
+    args = (params_struct, batch, cache_struct, S((), jnp.int32))
+    shards = (p_shardings, b_shardings, c_shardings, NamedSharding(mesh, P()))
+    return Cell(arch, shape, step_kind, decode_fn, args, shards, plan, cfg)
+
+
+def _forward(model, cfg, params, batch):
+    if cfg.family == "audio":
+        return model.apply(params, batch["frames"], batch["tokens"])
+    return model.apply(params, batch["tokens"],
+                       memory=batch.get("image_embeds"))
+
+
+def _init_cache(model, cfg, params, shape: ShapeSpec):
+    b = shape.global_batch
+    if cfg.family == "audio":
+        frames = jnp.zeros((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return model.init_cache(params, b, shape.seq, jnp.bfloat16, frames=frames)
+    if cfg.family == "vlm":
+        mem = jnp.zeros((b, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+        return model.init_cache(params, b, shape.seq, jnp.bfloat16, memory=mem)
+    return model.init_cache(params, b, shape.seq, jnp.bfloat16)
+
+
+def _cache_axes(model, cfg):
+    return model.cache_axes()

@@ -1,0 +1,14 @@
+from repro.models.base import ModelConfig, get_config, list_configs, register
+from repro.models.lm import CausalLM
+from repro.models.encdec import EncDecLM
+
+
+def build_model(cfg: ModelConfig):
+    """Family-dispatching constructor used by launch/ and tests."""
+    if cfg.n_encoder_layers > 0:
+        return EncDecLM(cfg)
+    return CausalLM(cfg)
+
+
+__all__ = ["ModelConfig", "CausalLM", "EncDecLM", "build_model",
+           "get_config", "list_configs", "register"]

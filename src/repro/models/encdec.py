@@ -1,0 +1,103 @@
+"""Encoder-decoder LM (whisper-medium backbone).
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings [B, T_enc, d_model]; a learned linear
+projection + sinusoidal positions stand in for the mel conv stack.  The
+decoder is a causal stack whose every layer carries self- and cross-attention
+(pattern ``attn_cross``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+from repro.models.lm import CausalLM
+from repro.nn.layers import Embedding, RMSNorm
+from repro.nn.module import fan_in_init, split_keys
+from repro.nn.transformer import LayerSpec, Stack
+
+Params = dict
+
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / dim))
+    pe = jnp.zeros((length, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecLM:
+    cfg: ModelConfig
+
+    def __post_init__(self):
+        assert self.cfg.n_encoder_layers > 0
+
+    def _encoder(self) -> Stack:
+        c = self.cfg
+        enc_bc = dataclasses.replace(c.block_config(), causal=False)
+        return Stack(enc_bc, (LayerSpec("attn", "dense"),), c.n_encoder_layers,
+                     remat=c.remat, remat_policy=c.remat_policy)
+
+    def _decoder(self) -> CausalLM:
+        c = self.cfg.replace(pattern=(LayerSpec("attn_cross", "dense"),))
+        return CausalLM(c)
+
+    def init(self, key) -> Params:
+        c = self.cfg
+        ks = split_keys(key, ["front", "enc", "enc_norm", "dec"])
+        return {
+            "frontend": {"w": fan_in_init(ks["front"], (c.d_model, c.d_model),
+                                          c.policy().param_dtype)},
+            "encoder": self._encoder().init(ks["enc"]),
+            "enc_norm": RMSNorm(c.d_model, policy=c.policy()).init(ks["enc_norm"]),
+            "decoder": self._decoder().init(ks["dec"]),
+        }
+
+    def param_axes(self) -> Params:
+        c = self.cfg
+        return {
+            "frontend": {"w": ("embed", "embed_out")},
+            "encoder": self._encoder().param_axes(),
+            "enc_norm": RMSNorm(c.d_model).param_axes(),
+            "decoder": self._decoder().param_axes(),
+        }
+
+    # -- forward ------------------------------------------------------------------
+
+    def encode(self, p: Params, frames: jax.Array) -> jax.Array:
+        """frames [B, T_enc, d_model] (precomputed; conv frontend stubbed)."""
+        c = self.cfg
+        cd = c.policy().compute_dtype
+        x = jnp.matmul(frames.astype(cd), p["frontend"]["w"].astype(cd))
+        x = x + sinusoidal_positions(x.shape[1], c.d_model).astype(cd)[None]
+        x, _, _ = self._encoder().apply(p["encoder"], x)
+        return RMSNorm(c.d_model, policy=c.policy()).apply(p["enc_norm"], x)
+
+    def apply(self, p: Params, frames: jax.Array, tokens: jax.Array,
+              distill_layer: Optional[int] = None
+              ) -> Tuple[jax.Array, Optional[jax.Array], jax.Array]:
+        memory = self.encode(p, frames)
+        return self._decoder().apply(p["decoder"], tokens, memory=memory,
+                                     distill_layer=distill_layer)
+
+    # -- decode ---------------------------------------------------------------------
+
+    def init_cache(self, p: Params, batch: int, max_len: int,
+                   dtype=jnp.bfloat16, frames: Optional[jax.Array] = None) -> Params:
+        memory = None if frames is None else self.encode(p, frames)
+        return self._decoder().init_cache(p["decoder"], batch, max_len, dtype,
+                                          memory=memory)
+
+    def cache_axes(self) -> Params:
+        return self._decoder().cache_axes()
+
+    def decode_step(self, p: Params, token: jax.Array, cache: Params,
+                    cache_index: jax.Array) -> Tuple[jax.Array, Params]:
+        return self._decoder().decode_step(p["decoder"], token, cache, cache_index)

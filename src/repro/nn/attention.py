@@ -1,0 +1,313 @@
+"""Grouped-query multi-head attention with KV cache, cross-attention, SubLN,
+and BitLinear projections.
+
+Layouts: activations [B, S, D]; per-head tensors [B, S, H, Dh]; KV caches
+[B, Smax, Hkv, Dh].  All softmax math in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+from repro.core.bitlinear import BitLinear, SubLN
+from repro.nn.layers import RMSNorm, apply_rope
+from repro.nn.module import DTypePolicy, DEFAULT_POLICY, split_keys
+
+Params = dict
+NEG_INF = -2.0e38
+
+
+@dataclasses.dataclass(frozen=True)
+class Attention:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    causal: bool = True
+    cross: bool = False          # kv comes from encoder memory, never causal
+    logit_softcap: float = 0.0
+    subln: bool = False          # SubLN before the output projection (Eq. 4)
+    # perf knobs (§Perf hillclimb; baseline = paper-faithful naive):
+    #   scores_dtype: fp32 scores (baseline) vs bf16 scores w/ fp32 softmax
+    #   impl: "dense" materializes [S,T] scores; "blocked" streams KV blocks
+    #         flash-style (never materializes S×T in HBM)
+    scores_dtype: str = "float32"
+    impl: str = "dense"
+    block_kv: int = 1024
+    quant: Q.QuantConfig = Q.FP
+    policy: DTypePolicy = DEFAULT_POLICY
+
+    def __post_init__(self):
+        assert self.n_heads % self.n_kv_heads == 0
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    # -- submodules ----------------------------------------------------------
+
+    def _wq(self):
+        return BitLinear(self.d_model, self.q_dim, self.qkv_bias, self.quant,
+                         ("embed", "heads"), self.policy)
+
+    def _wk(self):
+        return BitLinear(self.d_model, self.kv_dim, self.qkv_bias, self.quant,
+                         ("embed", "kv_heads"), self.policy)
+
+    def _wv(self):
+        return BitLinear(self.d_model, self.kv_dim, self.qkv_bias, self.quant,
+                         ("embed", "kv_heads"), self.policy)
+
+    def _wo(self):
+        return BitLinear(self.q_dim, self.d_model, False, self.quant,
+                         ("heads", "embed"), self.policy)
+
+    def _subln(self):
+        return SubLN(self.q_dim, axis_name="heads", policy=self.policy)
+
+    def _qnorm(self):
+        return RMSNorm(self.head_dim, axis_name="head_dim", policy=self.policy)
+
+    def init(self, key) -> Params:
+        ks = split_keys(key, ["wq", "wk", "wv", "wo", "subln", "qn", "kn"])
+        p: Params = {
+            "wq": self._wq().init(ks["wq"]),
+            "wk": self._wk().init(ks["wk"]),
+            "wv": self._wv().init(ks["wv"]),
+            "wo": self._wo().init(ks["wo"]),
+        }
+        if self.subln:
+            p["subln"] = self._subln().init(ks["subln"])
+        if self.qk_norm:
+            p["q_norm"] = self._qnorm().init(ks["qn"])
+            p["k_norm"] = self._qnorm().init(ks["kn"])
+        return p
+
+    def param_axes(self) -> Params:
+        ax: Params = {
+            "wq": self._wq().param_axes(),
+            "wk": self._wk().param_axes(),
+            "wv": self._wv().param_axes(),
+            "wo": self._wo().param_axes(),
+        }
+        if self.subln:
+            ax["subln"] = self._subln().param_axes()
+        if self.qk_norm:
+            ax["q_norm"] = self._qnorm().param_axes()
+            ax["k_norm"] = self._qnorm().param_axes()
+        return ax
+
+    # -- projections ----------------------------------------------------------
+
+    def _project_q(self, p: Params, x: jax.Array, positions) -> jax.Array:
+        b, s, _ = x.shape
+        q = self._wq().apply(p["wq"], x).reshape(b, s, self.n_heads, self.head_dim)
+        if self.qk_norm:
+            q = self._qnorm().apply(p["q_norm"], q)
+        if self.use_rope and not self.cross:
+            q = apply_rope(q, positions, self.rope_theta)
+        return q
+
+    def _project_kv(self, p: Params, x: jax.Array, positions) -> Tuple[jax.Array, jax.Array]:
+        b, s, _ = x.shape
+        k = self._wk().apply(p["wk"], x).reshape(b, s, self.n_kv_heads, self.head_dim)
+        v = self._wv().apply(p["wv"], x).reshape(b, s, self.n_kv_heads, self.head_dim)
+        if self.qk_norm:
+            k = self._qnorm().apply(p["k_norm"], k)
+        if self.use_rope and not self.cross:
+            k = apply_rope(k, positions, self.rope_theta)
+        return k, v
+
+    # -- attention core --------------------------------------------------------
+
+    def _attend(self, q: jax.Array, k: jax.Array, v: jax.Array,
+                mask: Optional[jax.Array], kv_layout: str = "bshd") -> jax.Array:
+        """q [B,S,Hq,Dh]; k/v [B,T,Hkv,Dh] ("bshd") or pre-transposed
+        [B,Hkv,T,Dh] ("bhsd", the cache layout — avoids a full-cache
+        transpose copy every decode step); mask [B,1,S,T] bool (True=keep)."""
+        if self.impl == "blocked" and q.shape[1] > 1 and kv_layout == "bshd":
+            return self._attend_blocked(q, k, v, mask)
+        b, s, hq, dh = q.shape
+        g = hq // self.n_kv_heads
+        sd = jnp.dtype(self.scores_dtype)
+        # transpose small [.., S, Dh] head tensors up front so both score and
+        # context dots produce their natural layouts (no S×T transposes)
+        qg = q.reshape(b, s, self.n_kv_heads, g, dh).transpose(0, 2, 3, 1, 4)
+        if kv_layout == "bshd":
+            kf = k.transpose(0, 2, 1, 3)                       # [b,kv,t,dh]
+            vf = v.transpose(0, 2, 1, 3)
+        else:
+            kf, vf = k, v
+        t = kf.shape[2]
+        scores = jnp.einsum("bkgsd,bktd->bkgst", qg.astype(sd), kf.astype(sd),
+                            preferred_element_type=jnp.float32)
+        scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+        if self.logit_softcap > 0.0:
+            scores = self.logit_softcap * jnp.tanh(scores / self.logit_softcap)
+        if mask is not None:
+            scores = jnp.where(mask[:, :, None], scores,
+                               jnp.asarray(NEG_INF if sd == jnp.float32
+                                           else -3e38, jnp.float32))
+        if sd != jnp.float32:
+            # bf16 scores mode: keep fp32 MXU accumulation but store the
+            # [S,T] product in bf16 — halves the dominant prefill tensor.
+            # Softmax stability: subtract the row max first (exact in bf16).
+            m = jnp.max(scores, axis=-1, keepdims=True)
+            e = jnp.exp((scores - m).astype(sd))          # bf16 exp tensor
+            z = jnp.sum(e, axis=-1, keepdims=True, dtype=jnp.float32)
+            w = (e / z.astype(sd)).astype(sd)
+        else:
+            w = jax.nn.softmax(scores, axis=-1).astype(sd)
+        out = jnp.einsum("bkgst,bktd->bkgsd", w, vf.astype(sd),
+                         preferred_element_type=jnp.float32)
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, dh).astype(v.dtype)
+
+    def _attend_blocked(self, q: jax.Array, k: jax.Array, v: jax.Array,
+                        mask: Optional[jax.Array]) -> jax.Array:
+        """Flash-style: stream KV blocks with an online softmax; peak memory
+        O(S·block) instead of O(S·T).  Gradients via recompute (the scan body
+        is cheap to rebuild); causal masking by position arithmetic."""
+        b, s, hq, dh = q.shape
+        t = k.shape[1]
+        g = hq // self.n_kv_heads
+        blk = min(self.block_kv, t)
+        nb = -(-t // blk)
+        pad = nb * blk - t
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        colmask_full = None
+        if mask is not None:
+            colmask_full = jnp.pad(mask, ((0, 0), (0, 0), (0, 0), (0, pad)))
+
+        qg = (q.reshape(b, s, self.n_kv_heads, g, dh)
+              .transpose(0, 2, 3, 1, 4).astype(jnp.float32))   # [b,kv,g,s,dh]
+        scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+
+        def body(carry, i):
+            m, z, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(kp, i * blk, blk, 1)
+            vb = jax.lax.dynamic_slice_in_dim(vp, i * blk, blk, 1)
+            kb = kb.transpose(0, 2, 1, 3).astype(jnp.float32)  # [b,kv,blk,dh]
+            vb = vb.transpose(0, 2, 1, 3).astype(jnp.float32)
+            sc = jnp.einsum("bkgsd,bktd->bkgst", qg, kb) * scale
+            if self.logit_softcap > 0.0:
+                sc = self.logit_softcap * jnp.tanh(sc / self.logit_softcap)
+            valid = (i * blk + jnp.arange(blk)) < t
+            if colmask_full is not None:
+                cm = jax.lax.dynamic_slice_in_dim(colmask_full, i * blk, blk, 3)
+                sc = jnp.where(cm[:, :, None] & valid, sc, NEG_INF)
+            else:
+                sc = jnp.where(valid, sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1, keepdims=True))
+            c = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new)
+            z_new = z * c + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * c + jnp.einsum("bkgst,bktd->bkgsd", p, vb)
+            return (m_new, z_new, acc_new), None
+
+        m0 = jnp.full((b, self.n_kv_heads, g, s, 1), NEG_INF, jnp.float32)
+        z0 = jnp.zeros((b, self.n_kv_heads, g, s, 1), jnp.float32)
+        a0 = jnp.zeros((b, self.n_kv_heads, g, s, dh), jnp.float32)
+        (m, z, acc), _ = jax.lax.scan(body, (m0, z0, a0), jnp.arange(nb))
+        out = acc / jnp.maximum(z, 1e-30)
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, dh).astype(v.dtype)
+
+    # -- full-sequence forward (train / prefill) -------------------------------
+
+    def apply(self, p: Params, x: jax.Array,
+              positions: Optional[jax.Array] = None,
+              memory: Optional[jax.Array] = None,
+              memory_mask: Optional[jax.Array] = None,
+              collect_states: bool = False,
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]], Params]:
+        """Returns (y, aux_states, kv) where kv = {"k","v"} for cache seeding.
+
+        aux_states (when collect_states): {"q","k","v"} each [B, H, S, Dh] with
+        kv heads repeated to n_heads — the layout Algorithm 1 distills.
+        """
+        b, s, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        src = memory if self.cross else x
+        src_pos = None if self.cross else positions
+        q = self._project_q(p, x, positions)
+        k, v = self._project_kv(p, src, src_pos)
+
+        t = k.shape[1]
+        if self.cross:
+            mask = None if memory_mask is None else memory_mask[:, None, None, :]
+        elif self.causal:
+            mask = (jnp.arange(t)[None, :] <= jnp.arange(s)[:, None])[None, None]
+            mask = jnp.broadcast_to(mask, (b, 1, s, t))
+        else:
+            mask = None
+        ctx = self._attend(q, k, v, mask)
+
+        flat = ctx.reshape(b, s, self.q_dim)
+        if self.subln:
+            flat = self._subln().apply(p["subln"], flat)
+        y = self._wo().apply(p["wo"], flat)
+
+        aux = None
+        if collect_states:
+            g = self.n_heads // self.n_kv_heads
+            rep = lambda a: jnp.repeat(a, g, axis=2) if g > 1 else a
+            aux = {
+                "q": q.transpose(0, 2, 1, 3),
+                "k": rep(k).transpose(0, 2, 1, 3),
+                "v": rep(v).transpose(0, 2, 1, 3),
+            }
+        return y, aux, {"k": k, "v": v}
+
+    # -- single-token decode with cache ----------------------------------------
+
+    def decode(self, p: Params, x: jax.Array, cache: Params,
+               cache_index: jax.Array,
+               memory: Optional[jax.Array] = None) -> Tuple[jax.Array, Params]:
+        """x: [B, 1, D]; cache: {"k","v"} [B, Hkv, Smax, Dh] (attention
+        layout — no per-step transpose of the cache); returns (y, cache)."""
+        b = x.shape[0]
+        positions = jnp.broadcast_to(cache_index.reshape(-1, 1), (b, 1)).astype(jnp.int32)
+        q = self._project_q(p, x, positions)
+        if self.cross:
+            # cross-attention cache holds the projected encoder memory (static).
+            k, v = cache["k"], cache["v"]
+            mask = None
+        else:
+            k_new, v_new = self._project_kv(p, x, positions)
+            k_new = k_new.transpose(0, 2, 1, 3)  # [b,kv,1,dh] (tiny)
+            v_new = v_new.transpose(0, 2, 1, 3)
+            k = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new.astype(cache["k"].dtype), cache_index, axis=2)
+            v = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new.astype(cache["v"].dtype), cache_index, axis=2)
+            cache = {"k": k, "v": v}
+            t = k.shape[2]
+            mask = (jnp.arange(t)[None, :] <= cache_index)[:, None, None, :]
+            mask = jnp.broadcast_to(mask, (b, 1, 1, t))
+        ctx = self._attend(q, k, v, mask, kv_layout="bhsd")
+        flat = ctx.reshape(b, 1, self.q_dim)
+        if self.subln:
+            flat = self._subln().apply(p["subln"], flat)
+        return self._wo().apply(p["wo"], flat), cache
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+        shape = (batch, self.n_kv_heads, max_len, self.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+    @staticmethod
+    def cache_axes() -> Params:
+        return {"k": ("batch", "kv_heads", "kv_seq", "head_dim"),
+                "v": ("batch", "kv_heads", "kv_seq", "head_dim")}

@@ -1,0 +1,87 @@
+"""Basic layers: RMSNorm, Embedding, rotary embeddings, activations."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import DTypePolicy, DEFAULT_POLICY, truncated_normal_init
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSNorm:
+    dim: int
+    eps: float = 1e-6
+    axis_name: str = "embed"
+    policy: DTypePolicy = DEFAULT_POLICY
+
+    def init(self, key) -> Params:
+        del key
+        return {"scale": jnp.ones((self.dim,), self.policy.param_dtype)}
+
+    def param_axes(self) -> Params:
+        return {"scale": (self.axis_name,)}
+
+    def apply(self, p: Params, x: jax.Array) -> jax.Array:
+        xf = x.astype(jnp.float32)
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + self.eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Embedding:
+    vocab: int
+    dim: int
+    policy: DTypePolicy = DEFAULT_POLICY
+
+    def init(self, key) -> Params:
+        return {"table": truncated_normal_init(key, (self.vocab, self.dim),
+                                               self.policy.param_dtype, 0.02)}
+
+    def param_axes(self) -> Params:
+        return {"table": ("vocab", "embed")}
+
+    def apply(self, p: Params, ids: jax.Array) -> jax.Array:
+        return jnp.take(p["table"].astype(self.policy.compute_dtype), ids, axis=0)
+
+    def attend(self, p: Params, x: jax.Array) -> jax.Array:
+        """Tied LM head: logits in compute dtype (fp32 accumulation on MXU);
+        losses upcast per-token — keeps the [B,S,V] buffer at 2 bytes/elem."""
+        cd = self.policy.compute_dtype
+        return jnp.matmul(x.astype(cd), p["table"].astype(cd).T,
+                          preferred_element_type=jnp.float32).astype(cd)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: [B, S, H, Dh]; positions: [B, S] int32. Split-half convention."""
+    freqs = rope_frequencies(x.shape[-1], theta)              # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, Dh/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def silu(x: jax.Array) -> jax.Array:
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS = {"silu": silu, "gelu": gelu}

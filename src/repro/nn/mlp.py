@@ -1,0 +1,69 @@
+"""Gated MLPs (SwiGLU / GeGLU) with SubLN before the down projection (Eq. 5)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+
+from repro.core import quant as Q
+from repro.core.bitlinear import BitLinear, SubLN
+from repro.nn.layers import ACTIVATIONS
+from repro.nn.module import DTypePolicy, DEFAULT_POLICY, split_keys
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedMLP:
+    d_model: int
+    d_ff: int
+    activation: str = "silu"       # "silu" -> SwiGLU, "gelu" -> GeGLU (gemma)
+    gated: bool = True             # False -> plain 2-matrix MLP (whisper)
+    subln: bool = False
+    quant: Q.QuantConfig = Q.FP
+    policy: DTypePolicy = DEFAULT_POLICY
+
+    def _up(self):
+        return BitLinear(self.d_model, self.d_ff, False, self.quant,
+                         ("embed", "mlp"), self.policy)
+
+    def _gate(self):
+        return BitLinear(self.d_model, self.d_ff, False, self.quant,
+                         ("embed", "mlp"), self.policy)
+
+    def _down(self):
+        return BitLinear(self.d_ff, self.d_model, False, self.quant,
+                         ("mlp", "embed"), self.policy)
+
+    def _subln(self):
+        return SubLN(self.d_ff, axis_name="mlp", policy=self.policy)
+
+    def init(self, key) -> Params:
+        ks = split_keys(key, ["up", "gate", "down", "subln"])
+        p: Params = {"up": self._up().init(ks["up"]),
+                     "down": self._down().init(ks["down"])}
+        if self.gated:
+            p["gate"] = self._gate().init(ks["gate"])
+        if self.subln:
+            p["subln"] = self._subln().init(ks["subln"])
+        return p
+
+    def param_axes(self) -> Params:
+        ax: Params = {"up": self._up().param_axes(),
+                      "down": self._down().param_axes()}
+        if self.gated:
+            ax["gate"] = self._gate().param_axes()
+        if self.subln:
+            ax["subln"] = self._subln().param_axes()
+        return ax
+
+    def apply(self, p: Params, x: jax.Array) -> jax.Array:
+        act = ACTIVATIONS[self.activation]
+        if self.gated:
+            h = self._up().apply(p["up"], x) * act(self._gate().apply(p["gate"], x))
+        else:
+            h = act(self._up().apply(p["up"], x))
+        if self.subln:
+            h = self._subln().apply(p["subln"], h)
+        return self._down().apply(p["down"], h)

@@ -1,0 +1,84 @@
+"""Minimal functional module substrate (no flax dependency).
+
+Conventions
+-----------
+* A *module* is a frozen dataclass holding static hyperparameters with two
+  methods: ``init(key) -> params`` and ``apply(params, ...) -> outputs``.
+* ``params`` is a nested dict of jnp arrays (a pytree).
+* Every module also exposes ``axes() -> pytree`` with the SAME structure as
+  ``params`` whose leaves are tuples of *logical axis names* (one per array
+  dim).  The distributed layer (repro/distributed/sharding.py) maps logical
+  names to mesh axes; this file knows nothing about meshes.
+* Compute dtype vs param dtype are decoupled via ``DTypePolicy``: params are
+  stored in ``param_dtype`` and cast to ``compute_dtype`` at use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+Axes = Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    # reductions / softmax / norms always accumulate in fp32.
+
+    def cast(self, x: jax.Array) -> jax.Array:
+        return x.astype(self.compute_dtype)
+
+
+DEFAULT_POLICY = DTypePolicy()
+
+
+def truncated_normal_init(key: jax.Array, shape: Sequence[int], dtype,
+                          stddev: float) -> jax.Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+def fan_in_init(key: jax.Array, shape: Sequence[int], dtype) -> jax.Array:
+    """LeCun-normal-ish: stddev = 1/sqrt(fan_in) with fan_in = shape[0..-2]."""
+    fan_in = 1
+    for d in shape[:-1]:
+        fan_in *= d
+    return truncated_normal_init(key, shape, dtype, fan_in ** -0.5)
+
+
+def split_keys(key: jax.Array, names: Sequence[str]) -> Dict[str, jax.Array]:
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def tree_bytes(params: Params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(params))
+
+
+def flatten_with_paths(tree: Params) -> Dict[str, jax.Array]:
+    """{'a/b/c': leaf} view used by checkpointing and debugging."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        name = "/".join(_path_elem_str(p) for p in path)
+        flat[name] = leaf
+    return flat
+
+
+def _path_elem_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return str(p.key)
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return str(p.idx)
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return str(p.name)
+    return str(p)

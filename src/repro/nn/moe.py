@@ -1,0 +1,139 @@
+"""Top-k Mixture-of-Experts FFN with capacity-based one-hot dispatch.
+
+Dispatch is grouped (tokens reshaped into groups of ``group_size``) so the
+[G, S, E, C] dispatch/combine tensors stay bounded; under SPMD the group dim
+follows the batch sharding so dispatch stays device-local while expert weights
+are tensor-parallel over the `model` axis (expert dim when divisible, else the
+expert-internal ffn dim -- see distributed/sharding.py).
+
+Expert projections are BitLinear-quantized per expert (per-expert absmean
+scale), matching DESIGN.md §4: the 1.58-bit technique covers expert FFNs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+from repro.core.bitlinear import SubLN
+from repro.nn.layers import ACTIVATIONS
+from repro.nn.module import DTypePolicy, DEFAULT_POLICY, fan_in_init, split_keys
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEMLP:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int
+    activation: str = "silu"
+    capacity_factor: float = 1.25
+    group_size: int = 2048
+    subln: bool = False
+    aux_loss_weight: float = 0.01
+    router_z_weight: float = 1e-3
+    quant: Q.QuantConfig = Q.FP
+    policy: DTypePolicy = DEFAULT_POLICY
+
+    def init(self, key) -> Params:
+        ks = split_keys(key, ["router", "up", "gate", "down", "subln"])
+        e, d, f = self.n_experts, self.d_model, self.d_ff
+        pd = self.policy.param_dtype
+        p: Params = {
+            "router": {"w": fan_in_init(ks["router"], (d, e), jnp.float32)},
+            "up": {"w": fan_in_init(ks["up"], (e, d, f), pd)},
+            "gate": {"w": fan_in_init(ks["gate"], (e, d, f), pd)},
+            "down": {"w": fan_in_init(ks["down"], (e, f, d), pd)},
+        }
+        if self.subln:
+            p["subln"] = SubLN(f, axis_name="mlp", policy=self.policy).init(ks["subln"])
+        return p
+
+    def param_axes(self) -> Params:
+        ax: Params = {
+            "router": {"w": ("embed", "expert_router")},
+            "up": {"w": ("expert", "embed", "mlp")},
+            "gate": {"w": ("expert", "embed", "mlp")},
+            "down": {"w": ("expert", "mlp", "embed")},
+        }
+        if self.subln:
+            ax["subln"] = {"scale": ("mlp",)}
+        return ax
+
+    # -- expert weight quantization (QAT) -------------------------------------
+
+    def _maybe_quant(self, w: jax.Array) -> jax.Array:
+        if self.quant.mode == "qat":
+            return jax.vmap(lambda wi: Q.fake_quant_weight(
+                wi.astype(jnp.float32), scheme=self.quant.scheme,
+                block=self.quant.block))(w).astype(w.dtype)
+        return w
+
+    def apply(self, p: Params, x: jax.Array, full_capacity: bool = False
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """x: [B, S, D] -> (y, aux) with aux = {"moe_aux_loss"}.
+
+        full_capacity=True (decode / eval): capacity = group size, so no
+        token is ever dropped — routing becomes exact top-k."""
+        cd = self.policy.compute_dtype
+        b, s, d = x.shape
+        tokens = b * s
+        g = max(1, tokens // self.group_size) if tokens >= self.group_size else 1
+        while tokens % g:
+            g -= 1
+        gs = tokens // g
+        xg = x.reshape(g, gs, d)
+
+        # Router (always fp32 — routing decisions are precision-critical).
+        logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                            p["router"]["w"].astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(probs, self.top_k)          # [g, gs, k]
+        top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+        e = self.n_experts
+        if full_capacity:
+            cap = gs
+        else:
+            cap = int(max(1, round(gs * self.top_k / e * self.capacity_factor)))
+            cap = min(cap, gs)
+
+        # position of each (token, k) inside its expert's capacity buffer
+        onehot = jax.nn.one_hot(top_e, e, dtype=jnp.int32)       # [g, gs, k, e]
+        flat = onehot.reshape(g, gs * self.top_k, e)
+        pos = jnp.cumsum(flat, axis=1) - 1                       # [g, gs*k, e]
+        pos = pos.reshape(g, gs, self.top_k, e)
+        in_cap = (pos < cap) & (onehot > 0)
+        combine = jnp.einsum(
+            "gske,gskec->gsec",
+            (top_w[..., None] * in_cap.astype(jnp.float32)),
+            jax.nn.one_hot(jnp.clip(pos, 0, cap - 1), cap, dtype=jnp.float32)
+            * in_cap[..., None].astype(jnp.float32),
+        )                                                         # [g, gs, e, cap]
+        dispatch = (combine > 0).astype(cd)
+
+        # Dispatch -> expert FFN -> combine
+        xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg.astype(cd))
+        up = self._maybe_quant(p["up"]["w"]).astype(cd)
+        gate = self._maybe_quant(p["gate"]["w"]).astype(cd)
+        down = self._maybe_quant(p["down"]["w"]).astype(cd)
+        act = ACTIVATIONS[self.activation]
+        h = jnp.einsum("gecd,edf->gecf", xe, up) * act(
+            jnp.einsum("gecd,edf->gecf", xe, gate))
+        if self.subln:
+            h = SubLN(self.d_ff, axis_name="mlp", policy=self.policy).apply(p["subln"], h)
+        ye = jnp.einsum("gecf,efd->gecd", h, down)
+        y = jnp.einsum("gsec,gecd->gsd", combine.astype(cd), ye)
+
+        # Switch-style load-balance loss + router z-loss
+        density = jnp.mean(onehot.astype(jnp.float32), axis=(1, 2))      # [g, e]
+        density_proxy = jnp.mean(probs, axis=1)                          # [g, e]
+        lb = jnp.mean(jnp.sum(density * density_proxy, axis=-1)) * (e ** 2) / self.top_k
+        z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+        aux = {"moe_aux_loss": self.aux_loss_weight * lb + self.router_z_weight * z}
+        return y.reshape(b, s, d).astype(x.dtype), aux

@@ -1,0 +1,265 @@
+"""Mamba2 (SSD — state-space duality) block.
+
+Two equivalent forward paths:
+  * ``ssd_chunked``   — blocked matmul form (MXU friendly; what the dry-run
+                        lowers; mirrors the Pallas ``ssd_scan`` kernel tiling)
+  * ``ssd_sequential``— lax.scan over time, the oracle used in tests.
+
+Decode keeps an O(1) recurrent state [B, H, P, N] plus a (k-1)-deep conv tail,
+which is what makes the long_500k shape tractable for SSM/hybrid archs.
+
+BitLinear applies to in_proj / out_proj (DESIGN.md §4); the gated RMSNorm that
+Mamba2 already places before out_proj coincides with the paper's SubLN
+placement, so `subln=True` simply keeps it (and it is kept by default).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+from repro.core.bitlinear import BitLinear, SubLN
+from repro.distributed.sharding import constrain
+from repro.nn.layers import silu
+from repro.nn.module import DTypePolicy, DEFAULT_POLICY, split_keys
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Block:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 256
+    subln: bool = True
+    quant: Q.QuantConfig = Q.FP
+    policy: DTypePolicy = DEFAULT_POLICY
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+    @property
+    def in_dim(self) -> int:
+        # z, x, B, C, dt
+        return 2 * self.d_inner + 2 * self.d_state + self.n_heads
+
+    def _in_proj(self):
+        return BitLinear(self.d_model, self.in_dim, False, self.quant,
+                         ("embed", "ssm_in"), self.policy)
+
+    def _out_proj(self):
+        return BitLinear(self.d_inner, self.d_model, False, self.quant,
+                         ("ssm_inner", "embed"), self.policy)
+
+    def init(self, key) -> Params:
+        ks = split_keys(key, ["in", "out", "conv", "a", "dt", "norm"])
+        pd = self.policy.param_dtype
+        h = self.n_heads
+        p: Params = {
+            "in_proj": self._in_proj().init(ks["in"]),
+            "out_proj": self._out_proj().init(ks["out"]),
+            "conv_w": (jax.random.normal(ks["conv"], (self.conv_kernel, self.conv_dim),
+                                         jnp.float32) * 0.1).astype(pd),
+            "conv_b": jnp.zeros((self.conv_dim,), pd),
+            # A in [-8, -0.5]-ish via A = -exp(A_log); init A_log ~ U[0, log 8]
+            "A_log": jnp.log(1.0 + 7.0 * jax.random.uniform(ks["a"], (h,), jnp.float32)),
+            "D": jnp.ones((h,), jnp.float32),
+            "dt_bias": jnp.log(jnp.expm1(
+                jnp.exp(jax.random.uniform(ks["dt"], (h,), jnp.float32)
+                        * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3)))),
+        }
+        if self.subln:
+            p["norm"] = SubLN(self.d_inner, axis_name="ssm_inner",
+                              policy=self.policy).init(ks["norm"])
+        return p
+
+    def param_axes(self) -> Params:
+        ax: Params = {
+            "in_proj": self._in_proj().param_axes(),
+            "out_proj": self._out_proj().param_axes(),
+            "conv_w": ("conv_k", "ssm_conv"),
+            "conv_b": ("ssm_conv",),
+            "A_log": ("ssm_heads",),
+            "D": ("ssm_heads",),
+            "dt_bias": ("ssm_heads",),
+        }
+        if self.subln:
+            ax["norm"] = {"scale": ("ssm_inner",)}
+        return ax
+
+    # -- pieces ----------------------------------------------------------------
+
+    def _split(self, zxbcdt: jax.Array):
+        di, n, h = self.d_inner, self.d_state, self.n_heads
+        z = zxbcdt[..., :di]
+        xbc = zxbcdt[..., di:di + self.conv_dim]
+        dt = zxbcdt[..., di + self.conv_dim:]
+        return z, xbc, dt
+
+    def _conv(self, p: Params, xbc: jax.Array) -> jax.Array:
+        """Causal depthwise conv over [B, S, conv_dim]."""
+        k = self.conv_kernel
+        w = p["conv_w"].astype(jnp.float32)                     # [k, c]
+        pad = jnp.pad(xbc.astype(jnp.float32), ((0, 0), (k - 1, 0), (0, 0)))
+        out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k))
+        return silu(out + p["conv_b"].astype(jnp.float32)).astype(xbc.dtype)
+
+    def _gates(self, p: Params, dt_raw: jax.Array):
+        """dt [B,S,H] -> (a = exp(dt*A) in (0,1), dt) both fp32."""
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])
+        a = jnp.exp(dt * (-jnp.exp(p["A_log"]))[None, None, :])
+        return a, dt
+
+    # -- full-sequence forward ---------------------------------------------------
+
+    def apply(self, p: Params, u: jax.Array, sequential: bool = False) -> jax.Array:
+        b, s, _ = u.shape
+        di, n, h, pd = self.d_inner, self.d_state, self.n_heads, self.head_dim
+        zxbcdt = self._in_proj().apply(p["in_proj"], u)
+        z, xbc, dt_raw = self._split(zxbcdt)
+        xbc = self._conv(p, xbc)
+        # shard SSD compute (and its decay transients) across TP by heads
+        x = constrain(xbc[..., :di].reshape(b, s, h, pd),
+                      ("batch", "seq", "ssm_heads", "head_dim"))
+        B = xbc[..., di:di + n]
+        C = xbc[..., di + n:]
+        a, dt = self._gates(p, dt_raw)
+        a = constrain(a, ("batch", "seq", "ssm_heads"))
+
+        fn = ssd_sequential if sequential else ssd_chunked
+        y, _ = fn(x.astype(jnp.float32), a, dt, B.astype(jnp.float32),
+                  C.astype(jnp.float32), chunk=self.chunk)
+        y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+        y = y.reshape(b, s, di).astype(u.dtype)
+
+        y = y * silu(z)
+        if self.subln:
+            y = SubLN(di, axis_name="ssm_inner", policy=self.policy).apply(p["norm"], y)
+        return self._out_proj().apply(p["out_proj"], y)
+
+    # -- decode (single token, recurrent state) ----------------------------------
+
+    def init_cache(self, batch: int, dtype=jnp.float32) -> Params:
+        return {
+            "state": jnp.zeros((batch, self.n_heads, self.head_dim, self.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, self.conv_kernel - 1, self.conv_dim), dtype),
+        }
+
+    @staticmethod
+    def cache_axes() -> Params:
+        return {"state": ("batch", "ssm_heads", "head_dim", "ssm_state"),
+                "conv": ("batch", "conv_k", "ssm_conv")}
+
+    def decode(self, p: Params, u: jax.Array, cache: Params) -> Tuple[jax.Array, Params]:
+        """u: [B, 1, D] -> (y [B, 1, D], cache)."""
+        b = u.shape[0]
+        di, n, h, pd = self.d_inner, self.d_state, self.n_heads, self.head_dim
+        zxbcdt = self._in_proj().apply(p["in_proj"], u)
+        z, xbc_new, dt_raw = self._split(zxbcdt)
+
+        # conv over the cached tail + this token
+        hist = jnp.concatenate([cache["conv"], xbc_new.astype(cache["conv"].dtype)], axis=1)
+        w = p["conv_w"].astype(jnp.float32)
+        xbc = silu(jnp.sum(hist.astype(jnp.float32) * w[None], axis=1, keepdims=True)
+                   + p["conv_b"].astype(jnp.float32)[None, None]).astype(u.dtype)
+        conv_cache = hist[:, 1:]
+
+        x = xbc[..., :di].reshape(b, h, pd)
+        B = xbc[:, 0, di:di + n].astype(jnp.float32)
+        C = xbc[:, 0, di + n:].astype(jnp.float32)
+        a, dt = self._gates(p, dt_raw)                          # [b,1,h]
+        a1, dt1 = a[:, 0], dt[:, 0]
+
+        state = cache["state"] * a1[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt1, x.astype(jnp.float32), B)
+        y = jnp.einsum("bhpn,bn->bhp", state, C) + p["D"][None, :, None] * x.astype(jnp.float32)
+        y = y.reshape(b, 1, di).astype(u.dtype)
+
+        y = y * silu(z)
+        if self.subln:
+            y = SubLN(di, axis_name="ssm_inner", policy=self.policy).apply(p["norm"], y)
+        return (self._out_proj().apply(p["out_proj"], y),
+                {"state": state, "conv": conv_cache})
+
+
+# ---------------------------------------------------------------------------
+# SSD cores (shared by Mamba2Block and the Pallas kernel's reference)
+# ---------------------------------------------------------------------------
+
+def ssd_sequential(x, a, dt, B, C, chunk: int = 0, init_state=None):
+    """Oracle: scan over time.  x [b,s,h,p], a/dt [b,s,h], B/C [b,s,n].
+
+    Returns (y [b,s,h,p], final_state [b,h,p,n]).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    h0 = jnp.zeros((b, h, p, n), jnp.float32) if init_state is None else init_state
+
+    def step(hprev, t):
+        xt, at, dtt, Bt, Ct = x[:, t], a[:, t], dt[:, t], B[:, t], C[:, t]
+        hnew = hprev * at[:, :, None, None] + jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, Bt)
+        yt = jnp.einsum("bhpn,bn->bhp", hnew, Ct)
+        return hnew, yt
+
+    hT, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1), hT
+
+
+def ssd_chunked(x, a, dt, B, C, chunk: int = 256, init_state=None):
+    """Blocked SSD: intra-chunk attention-like matmul + inter-chunk recurrence."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+
+    xc = x.reshape(b, nc, q, h, p)
+    dc = dt.reshape(b, nc, q, h)
+    Bc = B.reshape(b, nc, q, n)
+    Cc = C.reshape(b, nc, q, n)
+    la = jnp.cumsum(jnp.log(jnp.maximum(a.reshape(b, nc, q, h), 1e-20)), axis=2)
+
+    # intra-chunk (the "diagonal block"): M[q,k] = C_q.B_k exp(la_q - la_k) dt_k
+    cb = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]            # [b,nc,q,k,h]
+    causal = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])[None, None, :, :, None]
+    decay = jnp.where(causal, jnp.exp(seg), 0.0)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckh,bckhp->bcqhp", cb, decay, dc, xc)
+
+    # chunk summary states: S_c = sum_k B_k (dt_k exp(la_last - la_k)) x_k
+    last = la[:, :, -1:, :]
+    wk = dc * jnp.exp(last - la)                                  # [b,nc,q,h]
+    S = jnp.einsum("bckn,bckh,bckhp->bchpn", Bc, wk, xc)
+
+    # inter-chunk recurrence over chunk index
+    a_chunk = jnp.exp(last[:, :, 0, :])                           # [b,nc,h]
+    h0 = jnp.zeros((b, h, p, n), jnp.float32) if init_state is None else init_state
+
+    def step(hprev, c):
+        hnew = hprev * a_chunk[:, c][:, :, None, None] + S[:, c]
+        return hnew, hprev
+
+    hT, hs = jax.lax.scan(step, h0, jnp.arange(nc))
+    h_in = jnp.moveaxis(hs, 0, 1)                                 # [b,nc,h,p,n]
+
+    # off-diagonal contribution: y_q += C_q . (exp(la_q) * h_in)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, jnp.exp(la), h_in)
+    y = (y_intra + y_off).reshape(b, s, h, p)
+    return y, hT

@@ -1,0 +1,358 @@
+"""Transformer blocks and scanned stacks.
+
+A *stack* is ``repeats`` copies of a ``pattern`` (tuple of LayerSpec).  Params
+for each pattern position are stacked over the repeat dim and the stack runs
+under ``jax.lax.scan`` (small HLO, fast SPMD partitioning, remat-friendly).
+Heterogeneous archs map naturally: jamba = pattern of 8 (1 attn + 7 mamba,
+alternating MoE), llama-3.2-vision = pattern of 5 (4 self + 1 cross), whisper
+decoder = pattern of 1 with fused self+cross block.
+
+QKV states for attention-relation distillation (Algorithm 1) are harvested
+from a single (repeat, position) without materializing all layers' states:
+the scan carries one [3, B, H, S, Dh] buffer that is overwritten only on the
+selected repeat.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as Q
+from repro.nn.attention import Attention
+from repro.nn.layers import RMSNorm
+from repro.nn.mlp import GatedMLP
+from repro.nn.moe import MoEMLP
+from repro.nn.module import DTypePolicy, DEFAULT_POLICY, split_keys
+from repro.nn.ssm import Mamba2Block
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"        # "attn" | "attn_cross" | "cross" | "mamba"
+    ffn: str = "dense"         # "dense" | "moe" | "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    d_model: int
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    head_dim: int = 64
+    d_ff: int = 0
+    activation: str = "silu"
+    mlp_gated: bool = True
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True
+    logit_softcap: float = 0.0
+    attn_scores_dtype: str = "float32"
+    attn_impl: str = "dense"        # "dense" | "blocked" (flash-style)
+    seq_shard_activations: bool = False   # Megatron-SP residual sharding
+    # MoE
+    n_experts: int = 0
+    top_k: int = 2
+    moe_group_size: int = 2048
+    capacity_factor: float = 1.25
+    # SSM
+    ssm_state: int = 128
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    # BitDistill stage-1
+    subln: bool = False
+    rms_eps: float = 1e-6
+    quant: Q.QuantConfig = Q.FP
+    policy: DTypePolicy = DEFAULT_POLICY
+
+
+class Block:
+    """One residual block: pre-norm mixer + pre-norm FFN."""
+
+    def __init__(self, cfg: BlockConfig, spec: LayerSpec):
+        self.cfg, self.spec = cfg, spec
+        c = cfg
+        self.norm1 = RMSNorm(c.d_model, c.rms_eps, policy=c.policy)
+        if spec.mixer in ("attn", "attn_cross"):
+            self.attn = Attention(
+                c.d_model, c.n_heads, c.n_kv_heads, c.head_dim,
+                qkv_bias=c.qkv_bias, qk_norm=c.qk_norm, rope_theta=c.rope_theta,
+                causal=c.causal, logit_softcap=c.logit_softcap, subln=c.subln,
+                scores_dtype=c.attn_scores_dtype, impl=c.attn_impl,
+                quant=c.quant, policy=c.policy)
+        if spec.mixer in ("cross", "attn_cross"):
+            self.xattn = Attention(
+                c.d_model, c.n_heads, c.n_kv_heads, c.head_dim,
+                qkv_bias=c.qkv_bias, qk_norm=c.qk_norm, use_rope=False,
+                causal=False, cross=True, subln=c.subln,
+                scores_dtype=c.attn_scores_dtype, impl=c.attn_impl,
+                quant=c.quant, policy=c.policy)
+            if spec.mixer == "attn_cross":
+                self.norm_x = RMSNorm(c.d_model, c.rms_eps, policy=c.policy)
+        if spec.mixer == "mamba":
+            self.mamba = Mamba2Block(
+                c.d_model, d_state=c.ssm_state, head_dim=c.ssm_head_dim,
+                chunk=c.ssm_chunk, subln=True, quant=c.quant, policy=c.policy)
+        if spec.ffn == "dense":
+            self.mlp = GatedMLP(c.d_model, c.d_ff, c.activation, gated=c.mlp_gated,
+                                subln=c.subln, quant=c.quant, policy=c.policy)
+            self.norm2 = RMSNorm(c.d_model, c.rms_eps, policy=c.policy)
+        elif spec.ffn == "moe":
+            self.mlp = MoEMLP(c.d_model, c.d_ff, c.n_experts, c.top_k,
+                              c.activation, capacity_factor=c.capacity_factor,
+                              group_size=c.moe_group_size, subln=c.subln,
+                              quant=c.quant, policy=c.policy)
+            self.norm2 = RMSNorm(c.d_model, c.rms_eps, policy=c.policy)
+
+    # -- params ---------------------------------------------------------------
+
+    def init(self, key) -> Params:
+        ks = split_keys(key, ["n1", "mix", "nx", "x", "n2", "ffn"])
+        p: Params = {"norm1": self.norm1.init(ks["n1"])}
+        if self.spec.mixer in ("attn", "attn_cross"):
+            p["attn"] = self.attn.init(ks["mix"])
+        if self.spec.mixer in ("cross", "attn_cross"):
+            if self.spec.mixer == "attn_cross":
+                p["norm_x"] = self.norm_x.init(ks["nx"])
+            p["xattn"] = self.xattn.init(ks["x"])
+        if self.spec.mixer == "mamba":
+            p["mamba"] = self.mamba.init(ks["mix"])
+        if self.spec.ffn != "none":
+            p["norm2"] = self.norm2.init(ks["n2"])
+            p["mlp"] = self.mlp.init(ks["ffn"])
+        return p
+
+    def param_axes(self) -> Params:
+        ax: Params = {"norm1": self.norm1.param_axes()}
+        if self.spec.mixer in ("attn", "attn_cross"):
+            ax["attn"] = self.attn.param_axes()
+        if self.spec.mixer in ("cross", "attn_cross"):
+            if self.spec.mixer == "attn_cross":
+                ax["norm_x"] = self.norm_x.param_axes()
+            ax["xattn"] = self.xattn.param_axes()
+        if self.spec.mixer == "mamba":
+            ax["mamba"] = self.mamba.param_axes()
+        if self.spec.ffn != "none":
+            ax["norm2"] = self.norm2.param_axes()
+            ax["mlp"] = self.mlp.param_axes()
+        return ax
+
+    # -- forward ---------------------------------------------------------------
+
+    def apply(self, p: Params, x: jax.Array, positions=None, memory=None,
+              memory_mask=None, collect_states: bool = False
+              ) -> Tuple[jax.Array, Optional[jax.Array], jax.Array]:
+        """Returns (x, qkv_states|None, moe_aux_loss scalar)."""
+        aux_states = None
+        moe_loss = jnp.zeros((), jnp.float32)
+        if self.spec.mixer in ("attn", "attn_cross"):
+            h, aux, _ = self.attn.apply(p["attn"], self.norm1.apply(p["norm1"], x),
+                                        positions=positions,
+                                        collect_states=collect_states)
+            x = x + h
+            if collect_states and aux is not None:
+                aux_states = jnp.stack([aux["q"], aux["k"], aux["v"]])
+        if self.spec.mixer in ("cross", "attn_cross"):
+            nname = "norm_x" if self.spec.mixer == "attn_cross" else "norm1"
+            h, _, _ = self.xattn.apply(p["xattn"],
+                                       self.norm_x.apply(p[nname], x) if self.spec.mixer == "attn_cross"
+                                       else self.norm1.apply(p["norm1"], x),
+                                       memory=memory, memory_mask=memory_mask)
+            x = x + h
+        if self.spec.mixer == "mamba":
+            x = x + self.mamba.apply(p["mamba"], self.norm1.apply(p["norm1"], x))
+        if self.spec.ffn == "dense":
+            x = x + self.mlp.apply(p["mlp"], self.norm2.apply(p["norm2"], x))
+        elif self.spec.ffn == "moe":
+            h, aux = self.mlp.apply(p["mlp"], self.norm2.apply(p["norm2"], x))
+            x = x + h
+            moe_loss = moe_loss + aux["moe_aux_loss"]
+        return x, aux_states, moe_loss
+
+    # -- decode ------------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   memory: Optional[jax.Array] = None) -> Params:
+        c: Params = {}
+        if self.spec.mixer in ("attn", "attn_cross"):
+            c["attn"] = self.attn.init_cache(batch, max_len, dtype)
+        if self.spec.mixer in ("cross", "attn_cross"):
+            # static projected encoder memory; filled by seed_cross_cache
+            t = 1 if memory is None else memory.shape[1]
+            c["xattn"] = self.xattn.init_cache(batch, t, dtype)
+        if self.spec.mixer == "mamba":
+            c["mamba"] = self.mamba.init_cache(batch, dtype)
+        return c
+
+    def cache_axes(self) -> Params:
+        ax: Params = {}
+        if self.spec.mixer in ("attn", "attn_cross"):
+            ax["attn"] = Attention.cache_axes()
+        if self.spec.mixer in ("cross", "attn_cross"):
+            ax["xattn"] = Attention.cache_axes()
+        if self.spec.mixer == "mamba":
+            ax["mamba"] = Mamba2Block.cache_axes()
+        return ax
+
+    def decode(self, p: Params, x: jax.Array, cache: Params,
+               cache_index: jax.Array) -> Tuple[jax.Array, Params]:
+        new_cache: Params = {}
+        if self.spec.mixer in ("attn", "attn_cross"):
+            h, kv = self.attn.decode(p["attn"], self.norm1.apply(p["norm1"], x),
+                                     cache["attn"], cache_index)
+            x = x + h
+            new_cache["attn"] = kv
+        if self.spec.mixer in ("cross", "attn_cross"):
+            nname = "norm_x" if self.spec.mixer == "attn_cross" else "norm1"
+            h, kv = self.xattn.decode(p["xattn"], self.norm_x.apply(p[nname], x)
+                                      if self.spec.mixer == "attn_cross"
+                                      else self.norm1.apply(p["norm1"], x),
+                                      cache["xattn"], cache_index)
+            x = x + h
+            new_cache["xattn"] = kv
+        if self.spec.mixer == "mamba":
+            h, sc = self.mamba.decode(p["mamba"], self.norm1.apply(p["norm1"], x),
+                                      cache["mamba"])
+            x = x + h
+            new_cache["mamba"] = sc
+        if self.spec.ffn == "dense":
+            x = x + self.mlp.apply(p["mlp"], self.norm2.apply(p["norm2"], x))
+        elif self.spec.ffn == "moe":
+            h, _ = self.mlp.apply(p["mlp"], self.norm2.apply(p["norm2"], x),
+                                  full_capacity=True)
+            x = x + h
+        return x, new_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class Stack:
+    """``repeats`` x ``pattern`` scanned transformer stack."""
+    cfg: BlockConfig
+    pattern: Tuple[LayerSpec, ...]
+    repeats: int
+    remat: bool = True
+    remat_policy: str = "nothing"   # "nothing" | "dots" | "none"
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.pattern) * self.repeats
+
+    def blocks(self):
+        return [Block(self.cfg, s) for s in self.pattern]
+
+    def layer_to_coords(self, layer: int) -> Tuple[int, int]:
+        """global layer index -> (repeat, pattern position)."""
+        return layer // len(self.pattern), layer % len(self.pattern)
+
+    # -- params -------------------------------------------------------------------
+
+    def init(self, key) -> Params:
+        keys = jax.random.split(key, self.repeats)
+        blocks = self.blocks()
+
+        def init_rep(k):
+            ks = jax.random.split(k, len(blocks))
+            return {f"pos{i}": b.init(ks[i]) for i, b in enumerate(blocks)}
+
+        return jax.vmap(init_rep)(keys)   # leaves stacked [repeats, ...]
+
+    def param_axes(self) -> Params:
+        blocks = self.blocks()
+        ax = {f"pos{i}": b.param_axes() for i, b in enumerate(blocks)}
+        return jax.tree_util.tree_map(lambda t: ("layers",) + t, ax,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+
+    # -- forward --------------------------------------------------------------------
+
+    def apply(self, p: Params, x: jax.Array, positions=None, memory=None,
+              memory_mask=None, distill_layer: Optional[int] = None
+              ) -> Tuple[jax.Array, Optional[jax.Array], jax.Array]:
+        """Returns (x, qkv_states at distill_layer or None, total moe loss)."""
+        blocks = self.blocks()
+        collect = distill_layer is not None
+        if collect:
+            sel_rep, sel_pos = self.layer_to_coords(distill_layer)
+            if blocks[sel_pos].spec.mixer not in ("attn", "attn_cross"):
+                raise ValueError(
+                    f"distill layer {distill_layer} is a "
+                    f"{blocks[sel_pos].spec.mixer!r} layer; attention-relation "
+                    "distillation needs an attention layer (DESIGN.md §4)")
+        else:
+            sel_rep = sel_pos = -1
+
+        b, s, _ = x.shape
+        c = self.cfg
+        if collect:
+            states0 = jnp.zeros((3, b, c.n_heads, s, c.head_dim), jnp.float32)
+        else:
+            states0 = jnp.zeros((), jnp.float32)
+
+        from repro.distributed.sharding import constrain
+
+        def body(carry, xs):
+            h, states, moe = carry
+            rep_params, rep_idx = xs
+            for i, blk in enumerate(blocks):
+                want = collect and i == sel_pos
+                h, st, ml = blk.apply(rep_params[f"pos{i}"], h, positions=positions,
+                                      memory=memory, memory_mask=memory_mask,
+                                      collect_states=want)
+                if want:
+                    hit = (rep_idx == sel_rep)
+                    states = jnp.where(hit, st.astype(jnp.float32), states)
+                moe = moe + ml
+            if c.seq_shard_activations:
+                # Megatron-SP: the inter-layer residual (which the scan saves
+                # for backward) lives sequence-sharded; per-layer gathers are
+                # inserted by SPMD where full-seq mixing needs them.
+                h = constrain(h, ("batch", "seq_sp", "act_embed"))
+            return (h, states, moe), None
+
+        if self.remat and self.remat_policy != "none":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if self.remat_policy == "dots" else None)
+            body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+
+        (x, states, moe), _ = jax.lax.scan(
+            body, (x, states0, jnp.zeros((), jnp.float32)),
+            (p, jnp.arange(self.repeats)))
+        return x, (states if collect else None), moe
+
+    # -- decode -------------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   memory: Optional[jax.Array] = None) -> Params:
+        blocks = self.blocks()
+
+        def one(_):
+            return {f"pos{i}": b.init_cache(batch, max_len, dtype, memory)
+                    for i, b in enumerate(blocks)}
+
+        return jax.vmap(one)(jnp.arange(self.repeats))
+
+    def cache_axes(self) -> Params:
+        blocks = self.blocks()
+        ax = {f"pos{i}": b.cache_axes() for i, b in enumerate(blocks)}
+        return jax.tree_util.tree_map(lambda t: ("layers",) + t, ax,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+
+    def decode(self, p: Params, x: jax.Array, cache: Params,
+               cache_index: jax.Array) -> Tuple[jax.Array, Params]:
+        blocks = self.blocks()
+
+        def body(h, xs):
+            rep_params, rep_cache = xs
+            new_caches = {}
+            for i, blk in enumerate(blocks):
+                h, nc = blk.decode(rep_params[f"pos{i}"], h,
+                                   rep_cache[f"pos{i}"], cache_index)
+                new_caches[f"pos{i}"] = nc
+            return h, new_caches
+
+        x, new_cache = jax.lax.scan(body, x, (p, cache))
+        return x, new_cache

@@ -1,0 +1,4 @@
+from repro.serving.engine import ServeConfig, ServingEngine
+from repro.serving.sampling import greedy, sample_top_p
+
+__all__ = ["ServingEngine", "ServeConfig", "greedy", "sample_top_p"]

@@ -1,0 +1,26 @@
+"""Token sampling (paper eval setting: top-p=1.0, temperature=0 => greedy)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_top_p(key: jax.Array, logits: jax.Array, top_p: float = 1.0,
+                 temperature: float = 1.0) -> jax.Array:
+    """Nucleus sampling; temperature==0 degenerates to greedy."""
+    if temperature == 0.0:
+        return greedy(logits)
+    logits = logits.astype(jnp.float32) / temperature
+    probs = jax.nn.softmax(logits, axis=-1)
+    sorted_probs = jnp.sort(probs, axis=-1)[..., ::-1]
+    csum = jnp.cumsum(sorted_probs, axis=-1)
+    cutoff_count = jnp.sum(csum < top_p, axis=-1, keepdims=True) + 1
+    threshold = jnp.take_along_axis(sorted_probs, cutoff_count - 1, axis=-1)
+    masked = jnp.where(probs >= threshold, probs, 0.0)
+    masked = masked / jnp.sum(masked, axis=-1, keepdims=True)
+    return jax.random.categorical(key, jnp.log(jnp.maximum(masked, 1e-30)),
+                                  axis=-1).astype(jnp.int32)

@@ -1,0 +1,23 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, base_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+    t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def warmup_constant(step, base_lr: float, warmup_steps: int):
+    step = jnp.asarray(step, jnp.float32)
+    return base_lr * jnp.minimum(1.0, step / jnp.maximum(warmup_steps, 1))
+
+
+def constant(step, base_lr: float):
+    del step
+    return jnp.float32(base_lr)

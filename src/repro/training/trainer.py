@@ -1,0 +1,191 @@
+"""Train-step factories: plain CE (stages 1-2 / SFT baselines) and the
+distillation step (stage 3), with gradient accumulation.
+
+Steps are pure jittable functions ``(state, batch [, teacher_params]) ->
+(state, metrics)`` — single-device in tests, pjit-wrapped with shardings by
+launch/train.py.  Gradient all-reduction across data shards is implicit in
+SPMD (batch is sharded, grads come out replicated/sharded per param specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distill import DistillConfig, bitdistill_loss, softmax_cross_entropy
+from repro.models.base import ModelConfig
+from repro.models.encdec import EncDecLM
+from repro.training.optimizer import AdamW, AdamWState
+
+Params = Any
+
+
+class TrainState(NamedTuple):
+    params: Params
+    opt_state: AdamWState
+    step: jax.Array
+
+
+def init_train_state(params: Params, optimizer: AdamW) -> TrainState:
+    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# forward adapters
+# ---------------------------------------------------------------------------
+
+def forward(model, params, batch: Dict[str, jax.Array],
+            distill_layer: Optional[int] = None):
+    """-> (logits, qkv_states|None, moe_loss) for any model family."""
+    if isinstance(model, EncDecLM):
+        return model.apply(params, batch["frames"], batch["tokens"],
+                           distill_layer=distill_layer)
+    return model.apply(params, batch["tokens"],
+                       memory=batch.get("image_embeds"),
+                       distill_layer=distill_layer)
+
+
+def default_distill_layer(cfg: ModelConfig) -> int:
+    """Fig. 3b: late layers distill best -> last attention-bearing layer."""
+    pat = cfg.resolved_pattern()
+    last = None
+    for li in range(cfg.n_layers - 1, -1, -1):
+        if pat[li % len(pat)].mixer in ("attn", "attn_cross"):
+            last = li
+            break
+    if last is None:
+        raise ValueError(f"{cfg.name}: no attention layers; AD inapplicable")
+    return last
+
+
+def _microbatches(batch: Dict[str, jax.Array], accum: int) -> Dict[str, jax.Array]:
+    def reshape(x):
+        return x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
+    return {k: reshape(v) for k, v in batch.items()}
+
+
+# ---------------------------------------------------------------------------
+# plain CE step (stage 2 continual pre-training, SFT baselines)
+# ---------------------------------------------------------------------------
+
+def make_train_step(model, optimizer: AdamW, lr_fn: Callable,
+                    accum: int = 1,
+                    grad_constraint: Optional[Callable] = None) -> Callable:
+    """grad_constraint: optional fn(grads)->grads placing sharding
+    constraints so SPMD reduce-scatters gradients straight to the parameter
+    shards (ZeRO-2/3 semantics) instead of all-reducing them."""
+    def loss_fn(params, mb):
+        logits, _, moe = forward(model, params, mb)
+        ce = softmax_cross_entropy(logits, mb["labels"], mb.get("loss_mask"))
+        return ce + moe, {"loss_ce": ce, "loss_moe": moe}
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            mbs = _microbatches(batch, accum)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                (l, m), g = grad_fn(state.params, mb)
+                return (jax.tree_util.tree_map(jnp.add, gacc, g), lacc + l), m
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss), ms = jax.lax.scan(body, (zeros, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = jax.tree_util.tree_map(jnp.mean, ms)
+        if grad_constraint is not None:
+            grads = grad_constraint(grads)
+        lr = lr_fn(state.step)
+        params, opt_state, opt_metrics = optimizer.update(
+            grads, state.opt_state, state.params, lr)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# stage-3 distillation step
+# ---------------------------------------------------------------------------
+
+def make_distill_step(student_model, teacher_model, optimizer: AdamW,
+                      lr_fn: Callable, dcfg: DistillConfig,
+                      accum: int = 1) -> Callable:
+    """step(state, batch, teacher_params) — teacher frozen, student QAT."""
+    want_states = dcfg.use_ad
+    dl = dcfg.distill_layer
+
+    def teacher_fwd(tparams, mb):
+        logits, states, _ = forward(teacher_model, tparams, mb,
+                                    distill_layer=dl if want_states else None)
+        return jax.lax.stop_gradient(logits), (
+            None if states is None else jax.lax.stop_gradient(states))
+
+    def loss_fn(params, mb, t_logits, t_states):
+        logits, states, moe = forward(student_model, params, mb,
+                                      distill_layer=dl if want_states else None)
+        loss, metrics = bitdistill_loss(
+            logits, t_logits if dcfg.use_ld else None,
+            states, t_states, mb["labels"], mb.get("loss_mask"), dcfg)
+        return loss + moe, metrics
+
+    def step(state: TrainState, batch, teacher_params):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        if accum == 1:
+            t_logits, t_states = teacher_fwd(teacher_params, batch)
+            (loss, metrics), grads = grad_fn(state.params, batch, t_logits, t_states)
+        else:
+            mbs = _microbatches(batch, accum)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                t_logits, t_states = teacher_fwd(teacher_params, mb)
+                (l, m), g = grad_fn(state.params, mb, t_logits, t_states)
+                return (jax.tree_util.tree_map(jnp.add, gacc, g), lacc + l), m
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss), ms = jax.lax.scan(body, (zeros, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = jax.tree_util.tree_map(jnp.mean, ms)
+        lr = lr_fn(state.step)
+        params, opt_state, opt_metrics = optimizer.update(
+            grads, state.opt_state, state.params, lr)
+        metrics = dict(metrics, **opt_metrics)
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# eval steps
+# ---------------------------------------------------------------------------
+
+def make_eval_loss(model) -> Callable:
+    @jax.jit
+    def eval_step(params, batch):
+        logits, _, _ = forward(model, params, batch)
+        return softmax_cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return eval_step
+
+
+def make_eval_classify(model, label_base: int, n_labels: int) -> Callable:
+    """Accuracy of the answer-position label-token argmax."""
+    @jax.jit
+    def eval_step(params, batch):
+        logits, _, _ = forward(model, params, batch)          # [B, S, V]
+        pos = batch["answer_pos"]                             # [B]
+        rows = jnp.take_along_axis(
+            logits, pos[:, None, None], axis=1)[:, 0]         # [B, V]
+        label_logits = jax.lax.dynamic_slice_in_dim(rows, label_base, n_labels, axis=1)
+        pred = jnp.argmax(label_logits, axis=-1)
+        return jnp.mean((pred == batch["class_label"]).astype(jnp.float32))
+    return eval_step

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Smoke tests and benches must see the single real CPU device; ONLY the
+# dry-run subprocesses set xla_force_host_platform_device_count.
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,104 @@
+"""Perf-variant equivalence: natural-layout dense attention, bf16 scores,
+flash-blocked attention, bhsd cache decode, low-precision quantizer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant as Q
+from repro.nn.attention import Attention
+
+
+def mk(hq=4, hkv=4, causal=True, softcap=0.0, **kw):
+    return Attention(64, hq, hkv, 16, causal=causal, logit_softcap=softcap, **kw)
+
+
+@pytest.fixture(scope="module")
+def xp():
+    att = mk()
+    p = att.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 64))
+    return att, p, x
+
+
+class TestVariants:
+    @pytest.mark.parametrize("hq,hkv,causal,softcap", [
+        (4, 4, True, 0.0), (8, 2, True, 30.0), (4, 4, False, 0.0)])
+    def test_blocked_matches_dense(self, hq, hkv, causal, softcap):
+        base = mk(hq, hkv, causal, softcap)
+        p = base.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 64))
+        y0, _, _ = base.apply(p, x)
+        yf, _, _ = mk(hq, hkv, causal, softcap, impl="blocked",
+                      block_kv=7).apply(p, x)
+        np.testing.assert_allclose(np.asarray(yf), np.asarray(y0),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_blocked_gradients(self, xp):
+        att, p, x = xp
+        attf = mk(impl="blocked", block_kv=8)
+        g0 = jax.grad(lambda x: jnp.sum(att.apply(p, x)[0] ** 2))(x)
+        gf = jax.grad(lambda x: jnp.sum(attf.apply(p, x)[0] ** 2))(x)
+        np.testing.assert_allclose(np.asarray(gf), np.asarray(g0),
+                                   rtol=5e-3, atol=5e-3)
+
+    def test_bf16_scores_close(self, xp):
+        att, p, x = xp
+        y0, _, _ = att.apply(p, x)
+        y1, _, _ = mk(scores_dtype="bfloat16").apply(p, x)
+        np.testing.assert_allclose(np.asarray(y1, np.float32),
+                                   np.asarray(y0, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+    def test_bhsd_cache_decode_matches_forward(self):
+        att = mk()
+        p = att.init(jax.random.PRNGKey(2))
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 10, 64))
+        full, _, _ = att.apply(p, x)
+        cache = att.init_cache(2, 12, jnp.float32)
+        assert cache["k"].shape == (2, 4, 12, 16)   # [B, Hkv, Smax, Dh]
+        outs = []
+        for t in range(10):
+            y, cache = att.decode(p, x[:, t:t + 1], cache, jnp.int32(t))
+            outs.append(y)
+        dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                                   rtol=2e-2, atol=2e-2)
+
+
+class TestLowPrecisionQuant:
+    def test_lp_matches_fp32_path_away_from_boundary(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (128, 64)).astype(jnp.bfloat16)
+        lp = Q.fake_quant_weight_lp(w)
+        hi = Q.fake_quant_weight(w.astype(jnp.float32))
+        # values should be identical except ~0.2% boundary flips
+        diff = jnp.mean((jnp.abs(lp.astype(jnp.float32) - hi) > 1e-3
+                         ).astype(jnp.float32))
+        assert float(diff) < 0.01
+
+    def test_lp_values_are_ternary_multiples(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 64)).astype(jnp.bfloat16)
+        lp = Q.fake_quant_weight_lp(w).astype(jnp.float32)
+        delta = float(jnp.mean(jnp.abs(w.astype(jnp.float32)))) + Q.EPS
+        ratio = lp / delta
+        assert float(jnp.max(jnp.abs(ratio - jnp.round(ratio)))) < 2e-2
+
+    def test_lp_ste_gradient(self):
+        w = jax.random.normal(jax.random.PRNGKey(2), (32, 32)).astype(jnp.bfloat16)
+        g = jax.grad(lambda w: jnp.sum(Q.fake_quant_weight_lp(w)
+                                       .astype(jnp.float32) ** 2))(w)
+        assert bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+
+
+class TestVariantRegistry:
+    def test_resolve_composition(self):
+        from repro.launch.specs import resolve_variants
+        r, m = resolve_variants("dp_zero3+bf16s+lpq")
+        assert r["heads"] == ((),)
+        assert m["attn_scores_dtype"] == "bfloat16"
+        assert m["__lpq__"] is True
+
+    def test_unknown_variant_raises(self):
+        from repro.launch.specs import resolve_variants
+        with pytest.raises(KeyError):
+            resolve_variants("nope")

@@ -1,0 +1,85 @@
+"""Checkpointing: roundtrip, atomicity, GC, async, reshard-on-restore."""
+import json
+import pathlib
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, load_checkpoint,
+                              save_checkpoint)
+from repro.checkpoint.ckpt import latest_step
+
+
+def tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 16)),
+                       "b": jnp.arange(4, dtype=jnp.float32)},
+            "step": jnp.int32(7)}
+
+
+class TestRoundtrip:
+    def test_save_load_exact(self, tmp_path):
+        t = tree()
+        save_checkpoint(tmp_path, 10, t, extra={"loader": {"step": 3}})
+        t2, extra, step = load_checkpoint(tmp_path, jax.eval_shape(lambda: t))
+        assert step == 10 and extra["loader"]["step"] == 3
+        for a, b in zip(jax.tree_util.tree_leaves(t),
+                        jax.tree_util.tree_leaves(t2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_latest_pointer_and_gc(self, tmp_path):
+        t = tree()
+        for s in (1, 2, 3, 4):
+            save_checkpoint(tmp_path, s, t, keep_last_k=2)
+        assert latest_step(tmp_path) == 4
+        dirs = sorted(p.name for p in pathlib.Path(tmp_path).iterdir()
+                      if p.is_dir())
+        assert dirs == ["step_00000003", "step_00000004"]
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        save_checkpoint(tmp_path, 1, tree())
+        bad = {"params": {"w": jnp.zeros((9, 16)), "b": jnp.zeros(4)},
+               "step": jnp.int32(0)}
+        with pytest.raises(ValueError):
+            load_checkpoint(tmp_path, jax.eval_shape(lambda: bad))
+
+    def test_atomic_no_tmp_left(self, tmp_path):
+        save_checkpoint(tmp_path, 5, tree())
+        assert not list(pathlib.Path(tmp_path).glob("*.tmp"))
+
+
+class TestAsync:
+    def test_async_save_then_wait(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), save_every=10)
+        assert mgr.should_save(10) and not mgr.should_save(11)
+        mgr.save_async(10, tree())
+        mgr.wait()
+        assert latest_step(tmp_path) == 10
+
+    def test_snapshot_semantics(self, tmp_path):
+        """mutating the live tree after save_async must not corrupt the save."""
+        mgr = CheckpointManager(str(tmp_path))
+        t = {"w": np.ones((4,), np.float32)}
+        mgr.save_async(1, t)
+        t["w"][:] = -1  # mutate after snapshot
+        mgr.wait()
+        t2, _, _ = load_checkpoint(tmp_path, {"w": jnp.zeros(4)})
+        np.testing.assert_array_equal(np.asarray(t2["w"]), 1.0)
+
+
+class TestReshard:
+    def test_restore_with_different_sharding(self, tmp_path):
+        """elastic restart: restore the same checkpoint under a new device
+        layout (single device here; sharding callback exercises the path)."""
+        t = tree()
+        save_checkpoint(tmp_path, 3, t)
+        dev = jax.devices()[0]
+        shard_fn = lambda path: jax.sharding.SingleDeviceSharding(dev)
+        t2, _, _ = load_checkpoint(tmp_path, jax.eval_shape(lambda: t),
+                                   shardings=shard_fn)
+        assert t2["params"]["w"].sharding == jax.sharding.SingleDeviceSharding(dev)
+        np.testing.assert_array_equal(np.asarray(t2["params"]["w"]),
+                                      np.asarray(t["params"]["w"]))

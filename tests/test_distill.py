@@ -1,0 +1,129 @@
+"""Distillation losses: Eq. 8 logits KD and Algorithm 1 attention-relation KD."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distill import (DistillConfig, attention_relation_loss,
+                                bitdistill_loss, kl_divergence,
+                                logits_distill_loss, relation_kl,
+                                relation_kl_blocked, softmax_cross_entropy)
+
+
+class TestLogitsKD:
+    def test_zero_when_identical(self):
+        z = jax.random.normal(jax.random.PRNGKey(0), (4, 16, 100))
+        assert float(logits_distill_loss(z, z)) < 1e-6
+
+    def test_positive_and_masked(self):
+        s = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 50))
+        t = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 50))
+        full = logits_distill_loss(s, t, tau=5.0)
+        assert float(full) > 0
+        mask = jnp.zeros((2, 8)).at[:, -1].set(1.0)
+        masked = logits_distill_loss(s, t, tau=5.0, mask=mask)
+        last = logits_distill_loss(s[:, -1:], t[:, -1:], tau=5.0)
+        np.testing.assert_allclose(float(masked), float(last), rtol=1e-5)
+
+    def test_temperature_softens(self):
+        s = jax.random.normal(jax.random.PRNGKey(3), (2, 4, 32)) * 5
+        t = jax.random.normal(jax.random.PRNGKey(4), (2, 4, 32)) * 5
+        assert float(logits_distill_loss(s, t, tau=10.0)) < \
+            float(logits_distill_loss(s, t, tau=1.0))
+
+    def test_teacher_gets_no_gradient(self):
+        s = jax.random.normal(jax.random.PRNGKey(5), (2, 4, 16))
+        t = jax.random.normal(jax.random.PRNGKey(6), (2, 4, 16))
+        gt = jax.grad(lambda t: logits_distill_loss(s, t))(t)
+        np.testing.assert_allclose(np.asarray(gt), 0.0, atol=1e-9)
+
+
+class TestAttentionRelationKD:
+    def _states(self, seed, B=2, H=4, L=32, Dh=16):
+        return jax.random.normal(jax.random.PRNGKey(seed), (3, B, H, L, Dh))
+
+    def test_zero_when_identical(self):
+        s = self._states(0)
+        assert float(attention_relation_loss(s, s, split_heads=2)) < 1e-6
+
+    def test_positive_and_alpha_scaling(self):
+        s, t = self._states(1), self._states(2)
+        l1 = attention_relation_loss(s, t, split_heads=2, alphas=(1, 1, 1))
+        l2 = attention_relation_loss(s, t, split_heads=2, alphas=(2, 2, 2))
+        assert float(l1) > 0
+        np.testing.assert_allclose(2 * float(l1), float(l2), rtol=1e-5)
+
+    def test_blocked_matches_dense(self):
+        s, t = self._states(3, L=50), self._states(4, L=50)
+        dense = attention_relation_loss(s, t, split_heads=2)
+        blocked = attention_relation_loss(s, t, split_heads=2, blocked=True)
+        np.testing.assert_allclose(float(dense), float(blocked), rtol=1e-5)
+        gd = jax.grad(lambda s: attention_relation_loss(s, t, split_heads=2))(s)
+        gb = jax.grad(lambda s: attention_relation_loss(s, t, split_heads=2,
+                                                        blocked=True))(s)
+        np.testing.assert_allclose(np.asarray(gb), np.asarray(gd),
+                                   rtol=1e-4, atol=1e-7)
+
+    def test_algorithm1_batchmean_semantics(self):
+        """KL reduction must equal F.kl_div(..., reduction='batchmean') over
+        rows of the [B*split*L, L] reshape — i.e. mean over all rows."""
+        B, H, L, Dh, split = 1, 2, 8, 4, 2
+        s = jax.random.normal(jax.random.PRNGKey(5), (B, H, L, Dh))
+        t = jax.random.normal(jax.random.PRNGKey(6), (B, H, L, Dh))
+        got = relation_kl(s, t, split)
+        # manual reference, torch-pseudocode order
+        def rel(x):
+            x = x.transpose(0, 2, 1, 3).reshape(B, L, split, H * Dh // split)
+            x = x.transpose(0, 2, 1, 3)
+            x = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+            r = jnp.einsum("bsld,bsmd->bslm", x, x)
+            return r.reshape(-1, L)
+        sp = jax.nn.softmax(rel(s), -1).clip(1e-8)
+        tp = jax.nn.softmax(rel(t), -1).clip(1e-8)
+        manual = jnp.sum(tp * (jnp.log(tp) - jnp.log(sp))) / sp.shape[0]
+        np.testing.assert_allclose(float(got), float(manual), rtol=1e-4)
+
+    def test_split_heads_changes_relation_granularity(self):
+        s, t = self._states(7), self._states(8)
+        l1 = attention_relation_loss(s, t, split_heads=1)
+        l4 = attention_relation_loss(s, t, split_heads=4)
+        assert abs(float(l1) - float(l4)) > 1e-8
+
+
+class TestCombinedLoss:
+    def test_eq13_composition(self):
+        B, S, V = 2, 8, 64
+        sl = jax.random.normal(jax.random.PRNGKey(0), (B, S, V))
+        tl = jax.random.normal(jax.random.PRNGKey(1), (B, S, V))
+        ss = jax.random.normal(jax.random.PRNGKey(2), (3, B, 2, S, 8))
+        ts = jax.random.normal(jax.random.PRNGKey(3), (3, B, 2, S, 8))
+        labels = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0, V)
+        cfg = DistillConfig(lambda_ld=10.0, gamma_ad=1e5, split_heads=2)
+        loss, m = bitdistill_loss(sl, tl, ss, ts, labels, None, cfg)
+        np.testing.assert_allclose(
+            float(loss),
+            float(m["loss_ce"]) + 10.0 * float(m["loss_ld"])
+            + 1e5 * float(m["loss_ad"]), rtol=1e-5)
+
+    def test_ce_only_when_disabled(self):
+        B, S, V = 2, 8, 32
+        sl = jax.random.normal(jax.random.PRNGKey(0), (B, S, V))
+        labels = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, V)
+        cfg = DistillConfig(use_ld=False, use_ad=False)
+        loss, m = bitdistill_loss(sl, None, None, None, labels, None, cfg)
+        np.testing.assert_allclose(float(loss), float(m["loss_ce"]))
+
+
+class TestCE:
+    def test_matches_manual(self):
+        logits = jax.random.normal(jax.random.PRNGKey(0), (3, 5, 11))
+        labels = jax.random.randint(jax.random.PRNGKey(1), (3, 5), 0, 11)
+        got = softmax_cross_entropy(logits, labels)
+        lp = jax.nn.log_softmax(logits, -1)
+        manual = -jnp.mean(jnp.take_along_axis(lp, labels[..., None], -1))
+        np.testing.assert_allclose(float(got), float(manual), rtol=1e-6)
+
+    def test_kl_nonneg(self):
+        p = jax.random.normal(jax.random.PRNGKey(2), (10, 20))
+        q = jax.random.normal(jax.random.PRNGKey(3), (10, 20))
+        assert float(jnp.min(kl_divergence(p, q))) >= -1e-6

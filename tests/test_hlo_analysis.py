@@ -1,0 +1,58 @@
+"""HLO analyzer: trip counts, dot flops, collective wire bytes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_computations
+from repro.launch.roofline import Roofline, model_flops
+
+
+class TestAnalyzer:
+    def test_plain_matmul_flops_exact(self):
+        m, k, n = 128, 256, 64
+        co = jax.jit(lambda a, b: a @ b).lower(
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((k, n), jnp.float32)).compile()
+        res = analyze(co.as_text(), 1)
+        assert res.flops == pytest.approx(2 * m * k * n, rel=1e-6)
+
+    def test_scan_trip_count_multiplies(self):
+        def f(x, ws):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+            y, _ = jax.lax.scan(body, x, ws)
+            return y
+        co = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((64, 64), jnp.float32),
+            jax.ShapeDtypeStruct((10, 64, 64), jnp.float32)).compile()
+        res = analyze(co.as_text(), 1)
+        assert res.flops == pytest.approx(10 * 2 * 64 ** 3, rel=0.05)
+        assert 10 in res.trip_counts.values()
+
+    def test_bytes_positive_and_bounded(self):
+        co = jax.jit(lambda a, b: a @ b).lower(
+            jax.ShapeDtypeStruct((64, 64), jnp.float32),
+            jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+        res = analyze(co.as_text(), 1)
+        # dot reads two 16KB operands and writes one
+        assert 3 * 64 * 64 * 4 <= res.hbm_bytes <= 10 * 64 * 64 * 4
+
+
+class TestRoofline:
+    def test_terms_and_bottleneck(self):
+        r = Roofline(flops=197e12 * 256, bytes_accessed=819e9,
+                     wire_bytes=0.0, n_devices=256)
+        assert r.t_compute == pytest.approx(1.0)
+        assert r.bottleneck == "compute"
+        r2 = Roofline(flops=1.0, bytes_accessed=819e9 * 256 * 2,
+                      wire_bytes=0.0, n_devices=256)
+        assert r2.bottleneck == "memory"
+        r3 = Roofline(flops=1.0, bytes_accessed=1.0,
+                      wire_bytes=50e9 * 3, n_devices=256)
+        assert r3.bottleneck == "collective"
+        assert r3.step_time == pytest.approx(3.0)
+
+    def test_model_flops(self):
+        assert model_flops(1e9, 1e9, 1000, "train") == 6e12
+        assert model_flops(1e9, 5e8, 1000, "decode") == 1e12

@@ -1,0 +1,154 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant as Q
+from repro.core.distill import attention_relation_loss
+from repro.kernels.bitlinear import ops as bl_ops, ref as bl_ref
+from repro.kernels.bitlinear.kernel import bitlinear_kernel
+from repro.kernels.relation_kd import ops as rk_ops, ref as rk_ref
+from repro.kernels.relation_kd.kernel import relation_kl_rows_kernel
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+from repro.kernels.w2a8_gemv import ops as w2_ops, ref as w2_ref
+from repro.nn.ssm import ssd_chunked, ssd_sequential
+
+
+class TestBitLinearKernel:
+    @pytest.mark.parametrize("m,k,n", [(8, 64, 32), (256, 512, 256),
+                                       (100, 300, 200), (1, 128, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, m, k, n, dtype):
+        x = jax.random.normal(jax.random.PRNGKey(0), (m, k), dtype)
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.02
+        qw, delta = Q.weight_quant_absmean(w)
+        gamma = jnp.max(jnp.abs(x.astype(jnp.float32)), -1, keepdims=True)
+        y_k = bitlinear_kernel(x, qw.astype(jnp.int8), gamma, delta,
+                               bm=128, bn=128, bk=128, interpret=True)
+        y_r = bl_ref.bitlinear_ref(x, qw.astype(jnp.int8), gamma, delta)
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                                   np.asarray(y_r, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_ops_match_fake_quant_forward(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (4, 32, 64))
+        w = jax.random.normal(jax.random.PRNGKey(3), (64, 48)) * 0.02
+        y = bl_ops.bitlinear_matmul(x, w)
+        y_ref = bl_ref.bitlinear_full_ref(x.reshape(-1, 64), w).reshape(4, 32, 48)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_ste_gradients(self):
+        x = jax.random.normal(jax.random.PRNGKey(4), (8, 64))
+        w = jax.random.normal(jax.random.PRNGKey(5), (64, 32)) * 0.02
+
+        def loss_kernel(x, w):
+            return jnp.sum(bl_ops.bitlinear_matmul(x, w) ** 2)
+
+        def loss_jnp(x, w):
+            xq = Q.fake_quant_act(x)
+            wq = Q.fake_quant_weight(w)
+            return jnp.sum((xq @ wq) ** 2)
+
+        gk = jax.grad(loss_kernel, (0, 1))(x, w)
+        gj = jax.grad(loss_jnp, (0, 1))(x, w)
+        np.testing.assert_allclose(np.asarray(gk[1]), np.asarray(gj[1]),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestW2A8:
+    @pytest.mark.parametrize("m,k,n", [(4, 128, 64), (16, 512, 256),
+                                       (2, 256, 100), (1, 1024, 128)])
+    def test_matches_ref(self, m, k, n):
+        x = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.02
+        qw, delta = Q.weight_quant_absmean(w)
+        wp = Q.pack_ternary(qw.astype(jnp.int8))
+        yk = w2_ops.w2a8_matmul(x, wp, delta)
+        yr = w2_ref.w2a8_ref(x, wp, delta)
+        np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_packed_equals_unpacked_bitlinear(self):
+        """decode path (packed kernel) == training fake-quant forward."""
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 256))
+        w = jax.random.normal(jax.random.PRNGKey(3), (256, 64)) * 0.02
+        qw, delta = Q.weight_quant_absmean(w)
+        wp = Q.pack_ternary(qw.astype(jnp.int8))
+        y_packed = w2_ops.w2a8_matmul(x, wp, delta)
+        y_qat = bl_ref.bitlinear_full_ref(x, w)
+        np.testing.assert_allclose(np.asarray(y_packed), np.asarray(y_qat),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestRelationKD:
+    @pytest.mark.parametrize("bh,l,d", [(2, 64, 32), (4, 100, 16), (3, 256, 64)])
+    def test_rows_match_ref(self, bh, l, d):
+        s = jax.random.normal(jax.random.PRNGKey(0), (bh, l, d))
+        s = s / jnp.linalg.norm(s, axis=-1, keepdims=True)
+        t = jax.random.normal(jax.random.PRNGKey(1), (bh, l, d))
+        t = t / jnp.linalg.norm(t, axis=-1, keepdims=True)
+        rk = relation_kl_rows_kernel(s, t, temp=1.0, bl=32, bj=32, interpret=True)
+        rr = rk_ref.relation_kl_rows_ref(s, t, 1.0)
+        np.testing.assert_allclose(np.asarray(rk), np.asarray(rr),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_zero_when_identical(self):
+        s = jax.random.normal(jax.random.PRNGKey(2), (2, 32, 16))
+        s = s / jnp.linalg.norm(s, axis=-1, keepdims=True)
+        rk = relation_kl_rows_kernel(s, s, interpret=True)
+        np.testing.assert_allclose(np.asarray(rk), 0.0, atol=1e-5)
+
+    def test_loss_and_grad_match_jnp_path(self):
+        ss = jax.random.normal(jax.random.PRNGKey(3), (3, 2, 4, 64, 16))
+        ts = jax.random.normal(jax.random.PRNGKey(4), (3, 2, 4, 64, 16))
+        l_j = attention_relation_loss(ss, ts, split_heads=2)
+        l_k = rk_ops.relation_kd_loss(ss, ts, split_heads=2)
+        np.testing.assert_allclose(float(l_j), float(l_k), rtol=1e-4)
+        g_j = jax.grad(lambda s: attention_relation_loss(s, ts, split_heads=2))(ss)
+        g_k = jax.grad(lambda s: rk_ops.relation_kd_loss(s, ts, split_heads=2))(ss)
+        np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_j),
+                                   rtol=1e-3, atol=1e-6)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("b,s,h,p,n", [(2, 64, 3, 16, 8), (1, 128, 2, 32, 16)])
+    def test_kernel_matches_sequential(self, b, s, h, p, n):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (b, s, h, p))
+        a = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(1), (b, s, h))) * 0.9 + 0.05
+        dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(2), (b, s, h)))
+        B = jax.random.normal(jax.random.PRNGKey(3), (b, s, n))
+        C = jax.random.normal(jax.random.PRNGKey(4), (b, s, n))
+        y_seq, _ = ssd_sequential(x, a, dt, B, C)
+        y_k = ssd_ops.ssd_scan(x, a, dt, B, C, chunk=16)
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_seq),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_chunked_matches_sequential(self):
+        key = jax.random.PRNGKey(5)
+        b, s, h, p, n = 2, 96, 2, 8, 4
+        x = jax.random.normal(key, (b, s, h, p))
+        a = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(6), (b, s, h)))
+        dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(7), (b, s, h)))
+        B = jax.random.normal(jax.random.PRNGKey(8), (b, s, n))
+        C = jax.random.normal(jax.random.PRNGKey(9), (b, s, n))
+        y1, h1 = ssd_sequential(x, a, dt, B, C)
+        y2, h2 = ssd_chunked(x, a, dt, B, C, chunk=32)
+        np.testing.assert_allclose(np.asarray(y2), np.asarray(y1), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h2), np.asarray(h1), rtol=1e-4, atol=1e-4)
+
+    def test_custom_vjp(self):
+        b, s, h, p, n = 1, 32, 2, 8, 4
+        x = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, p))
+        a = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(1), (b, s, h)))
+        dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(2), (b, s, h)))
+        B = jax.random.normal(jax.random.PRNGKey(3), (b, s, n))
+        C = jax.random.normal(jax.random.PRNGKey(4), (b, s, n))
+        gk = jax.grad(lambda x: jnp.sum(ssd_ops.ssd_scan(x, a, dt, B, C, 16) ** 2))(x)
+        gs = jax.grad(lambda x: jnp.sum(ssd_sequential(x, a, dt, B, C)[0] ** 2))(x)
+        np.testing.assert_allclose(np.asarray(gk), np.asarray(gs),
+                                   rtol=1e-3, atol=1e-3)

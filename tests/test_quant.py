@@ -1,0 +1,135 @@
+"""Unit + property tests for the 1.58-bit / int8 quantizers (paper Eqs. 1-3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant as Q
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def arrays(min_dim=2, max_dim=64):
+    return st.tuples(
+        st.integers(min_dim, max_dim), st.integers(min_dim, max_dim),
+        st.integers(0, 2 ** 31 - 1),
+    )
+
+
+class TestWeightQuant:
+    @given(arrays())
+    def test_absmean_values_are_ternary(self, dims):
+        k, n, seed = dims
+        w = jax.random.normal(jax.random.PRNGKey(seed), (k, n))
+        q, delta = Q.weight_quant_absmean(w)
+        assert bool(jnp.all(jnp.isin(q, jnp.array([-1.0, 0.0, 1.0]))))
+        assert float(delta) >= 0.0
+
+    @given(arrays())
+    def test_absmean_scale_is_mean_abs(self, dims):
+        k, n, seed = dims
+        w = jax.random.normal(jax.random.PRNGKey(seed), (k, n))
+        _, delta = Q.weight_quant_absmean(w)
+        np.testing.assert_allclose(float(delta), float(jnp.mean(jnp.abs(w))),
+                                   rtol=1e-5)
+
+    def test_quantization_error_bounded(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (256, 256)) * 0.05
+        q, delta = Q.weight_quant_absmean(w)
+        # RoundClip: |w - q·delta| <= delta/2 + clip region
+        err = jnp.abs(w - q * float(delta))
+        inside = jnp.abs(w / (float(delta) + Q.EPS)) <= 1.5
+        assert float(jnp.max(jnp.where(inside, err, 0.0))) <= float(delta) * 0.51 + 1e-5
+
+    def test_blockwise_matches_absmean_for_single_block(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+        qb, db = Q.weight_quant_blockwise(w, block=64)
+        # per-row absmean with block=row length
+        for r in range(8):
+            qr, dr = Q.weight_quant_absmean(w[r:r + 1])
+            np.testing.assert_allclose(np.asarray(db[r, 0]),
+                                       float(jnp.mean(jnp.abs(w[r]))), rtol=1e-5)
+
+    def test_gptq_and_awq_are_ternary(self):
+        w = jax.random.normal(jax.random.PRNGKey(2), (32, 16)) * 0.1
+        act = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (32,))) + 0.1
+        qg, dg = Q.weight_quant_gptq(w, act)
+        qa, da, s = Q.weight_quant_awq(w, act)
+        for q in (qg, qa):
+            assert bool(jnp.all(jnp.isin(q, jnp.array([-1.0, 0.0, 1.0]))))
+
+    def test_gptq_compensation_beats_naive_on_weighted_error(self):
+        key = jax.random.PRNGKey(4)
+        w = jax.random.normal(key, (64, 32)) * 0.1
+        act = jnp.abs(jax.random.normal(jax.random.PRNGKey(5), (64,))) * 3 + 0.1
+        x = jax.random.normal(jax.random.PRNGKey(6), (512, 64)) * act[None, :]
+        qn, dn = Q.weight_quant_absmean(w)
+        qg, dg = Q.weight_quant_gptq(w, act_scale=jnp.mean(jnp.abs(x), 0))
+        err_n = jnp.linalg.norm(x @ w - x @ (qn * dn))
+        err_g = jnp.linalg.norm(x @ w - x @ (qg * dg))
+        assert float(err_g) <= float(err_n) * 1.10  # compensation should not hurt
+
+
+class TestActQuant:
+    @given(arrays())
+    def test_int8_range_and_scale(self, dims):
+        b, d, seed = dims
+        x = jax.random.normal(jax.random.PRNGKey(seed), (b, d)) * 10
+        q, gamma = Q.act_quant_absmax_int8(x)
+        assert float(jnp.min(q)) >= -128 and float(jnp.max(q)) <= 127
+        np.testing.assert_allclose(
+            np.asarray(gamma[:, 0]), np.asarray(jnp.max(jnp.abs(x), -1)), rtol=1e-5)
+
+    def test_fake_quant_error_bound(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (16, 128))
+        y = Q.fake_quant_act(x)
+        # per-token error <= gamma/254 + eps
+        gamma = jnp.max(jnp.abs(x), -1, keepdims=True)
+        assert bool(jnp.all(jnp.abs(y - x) <= gamma / 254 + 1e-3))
+
+
+class TestSTE:
+    def test_ste_gradient_passthrough(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (32, 32))
+        g = jax.grad(lambda w: jnp.sum(Q.fake_quant_weight(w) ** 2))(w)
+        # STE: grad flows as if identity wrt the dequantized value
+        q, d = Q.weight_quant_absmean(w)
+        expected = 2 * q * d
+        np.testing.assert_allclose(np.asarray(g), np.asarray(expected),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_act_ste(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16))
+        g = jax.grad(lambda x: jnp.sum(Q.fake_quant_act(x)))(x)
+        np.testing.assert_allclose(np.asarray(g), 1.0, rtol=1e-6)
+
+
+class TestPacking:
+    @given(st.integers(1, 64), st.integers(1, 96), st.integers(0, 2 ** 31 - 1))
+    def test_pack_roundtrip(self, k4, n, seed):
+        k = k4 * 4
+        q = jax.random.randint(jax.random.PRNGKey(seed), (k, n), -1, 2
+                               ).astype(jnp.int8)
+        p = Q.pack_ternary(q)
+        assert p.shape == (k // 4, n) and p.dtype == jnp.uint8
+        r = Q.unpack_ternary(p, k)
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(q))
+
+    def test_memory_ratio(self):
+        q = jnp.zeros((1024, 256), jnp.int8)
+        p = Q.pack_ternary(q)
+        assert p.size * p.dtype.itemsize * 4 == q.size  # 4 weights/byte
+
+
+class TestAnalysis:
+    def test_boundary_mass_in_unit_range(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (128, 128))
+        bm = Q.boundary_mass(w)
+        assert 0.0 <= float(bm) <= 1.0
+
+    def test_ternary_histogram_sums(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+        h = Q.ternary_histogram(w)
+        assert int(jnp.sum(h)) == 64 * 64

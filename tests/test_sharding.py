@@ -1,0 +1,99 @@
+"""Sharding rules engine: specs, priorities, divisibility fallbacks."""
+import subprocess
+import sys
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+# The rules engine is pure logic over mesh *shapes*; we fake a mesh object so
+# these tests need no devices.
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def plan(multi_pod=False):
+    from repro.distributed.sharding import ShardingPlan, default_rules
+    shape = ({"pod": 2, "data": 16, "model": 16} if multi_pod
+             else {"data": 16, "model": 16})
+    return ShardingPlan(FakeMesh(shape), default_rules(multi_pod))
+
+
+def pad(spec, n):
+    """PartitionSpec trims trailing Nones; re-pad for positional asserts."""
+    t = tuple(spec)
+    return t + (None,) * (n - len(t))
+
+
+class TestSpecs:
+    def test_ffn_weight_fsdp_plus_tp(self):
+        p = plan()
+        assert p.spec(("embed", "mlp"), (1024, 2816)) == P("data", "model")
+
+    def test_vocab_fallback_when_indivisible(self):
+        p = plan()
+        # 49155 (granite) not divisible by 16 -> vocab falls through to data
+        # (also indivisible) -> replicated
+        s = p.spec(("vocab", "embed"), (49155, 1024))
+        assert s == P(None, "data")
+        assert any("vocab" in f for f in p.fallbacks)
+
+    def test_kv_heads_fallback_to_replication(self):
+        p = plan()
+        s = p.spec(("embed", "kv_heads"), (4096, 8 * 128))
+        # kv dim 1024 IS divisible by 16, so it shards; now with 8 heads as
+        # the head-count dim (e.g. cache layout) it cannot:
+        s2 = pad(p.spec(("batch", "kv_seq", "kv_heads", "head_dim"),
+                        (128, 32768, 8, 128)), 4)
+        # kv_heads indivisible (8 % 16) -> kv_seq takes model
+        assert s2[2] is None
+        assert s2[1] == "model"
+
+    def test_batch_prefers_pod_data(self):
+        p = plan(multi_pod=True)
+        s = p.spec(("batch", "seq"), (256, 4096))
+        assert s == P(("pod", "data"))
+
+    def test_batch_of_one_replicates(self):
+        p = plan(multi_pod=True)
+        s = pad(p.spec(("batch", "kv_seq", "kv_heads", "head_dim"),
+                       (1, 524288, 8, 128)), 4)
+        assert s[0] is None
+        assert s[1] == "model"     # sequence parallel attention
+
+    def test_no_axis_used_twice(self):
+        p = plan()
+        s = p.spec(("heads", "mlp"), (1024, 2816))
+        used = [a for a in s if a is not None]
+        assert len(set(used)) == len(used)
+
+    def test_priority_heads_beat_kvseq(self):
+        p = plan()
+        # whisper: kv=16 divisible -> heads get model, seq replicated
+        s = pad(p.spec(("batch", "kv_seq", "kv_heads", "head_dim"),
+                       (128, 32768, 16, 64)), 4)
+        assert s[2] == "model"
+        assert s[1] is None or s[1] == "data"
+
+
+class TestTreeSpecs:
+    def test_tree_shardings_structure(self):
+        import jax
+        import jax.numpy as jnp
+        p = plan()
+        axes = {"w": ("embed", "mlp"), "norm": {"scale": ("embed",)}}
+        shapes = {"w": jax.ShapeDtypeStruct((64, 32), jnp.float32),
+                  "norm": {"scale": jax.ShapeDtypeStruct((64,), jnp.float32)}}
+        specs = p.tree_specs(axes, shapes)
+        assert specs["w"] == P("data", "model")
+        assert specs["norm"]["scale"] == P("data")
+
+    def test_constrain_noop_without_plan(self):
+        import jax.numpy as jnp
+        from repro.distributed.sharding import constrain, get_plan
+        assert get_plan() is None
+        x = jnp.ones((4, 4))
+        assert constrain(x, ("batch", "seq")) is x
