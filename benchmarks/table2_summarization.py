@@ -12,21 +12,23 @@ from repro.data.loader import DataLoader
 from repro.data.synth import get_task
 from repro.eval.metrics import bleu, rouge_scores
 from repro.models import build_model
-from repro.serving.engine import Request, ServeConfig, ServingEngine
+from repro.serving.engine import Engine, Request, ServeConfig
 
 
 def generation_scores(cfg, params, pcfg, n_eval: int = 12) -> dict:
     """Greedy-decode summaries for held-out docs; score vs gold."""
     task = get_task("cnndm-syn", seed=pcfg.seed)
     rng = np.random.default_rng(12345)
-    eng = ServingEngine(cfg, params, ServeConfig(max_batch=8, max_len=12,
-                                                 eos_id=task.tok.eos_id))
     reqs, golds = [], []
     for i in range(n_eval):
         prompt, gold = task.sample(rng, pcfg.seq_len)
         ids = [task.tok.bos_id] + prompt + [task.tok.sep_id]
-        reqs.append(Request(uid=i, prompt=ids, max_tokens=len(gold) + 2))
+        reqs.append(Request(uid=i, prompt=ids, max_tokens=min(len(gold) + 2, 12)))
         golds.append(gold)
+    # max_len is the per-slot cache capacity (prompt + generated)
+    cap = max(len(r.prompt) + r.max_tokens for r in reqs)
+    eng = Engine(cfg, params, ServeConfig(max_batch=8, max_len=cap,
+                                          eos_id=task.tok.eos_id))
     outs = eng.generate(reqs)
     scores = {"bleu": 0.0, "rouge1": 0.0, "rouge2": 0.0, "rougeL": 0.0,
               "rougeLsum": 0.0}

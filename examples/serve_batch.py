@@ -1,8 +1,11 @@
-"""Batched serving of a 1.58-bit student with 2-bit-packed ternary weights.
+"""Continuous-batching serving of a 1.58-bit student with 2-bit-packed
+ternary weights.
 
 Trains a tiny student on the summarization task first (so generations are
-meaningful), converts it to the packed serving artifact, then serves a batch
-of requests with greedy decoding and reports tokens/s + weight-memory ratio.
+meaningful), converts it to the packed serving artifact, then serves requests
+through the continuous-batching engine: half the requests are submitted up
+front and the rest are injected mid-flight, with tokens streamed as they are
+generated.  Reports tokens/s + weight-memory ratio.
 
     PYTHONPATH=src python examples/serve_batch.py
 """
@@ -16,8 +19,8 @@ from repro.core.pipeline import BitDistillPipeline, PipelineConfig
 from repro.data.synth import get_task
 from repro.models.base import ModelConfig
 from repro.nn.module import tree_bytes
-from repro.serving.engine import (Request, ServeConfig, ServingEngine,
-                                  convert_to_packed)
+from repro.serving.api import SamplingParams
+from repro.serving.engine import Engine, ServeConfig, convert_to_packed
 
 CFG = ModelConfig(name="serve-demo", family="dense", vocab=288, d_model=128,
                   n_layers=3, n_heads=4, n_kv_heads=4, head_dim=32, d_ff=256,
@@ -44,23 +47,30 @@ def main():
 
     task = get_task("cnndm-syn")
     rng = np.random.default_rng(0)
-    reqs = []
+    prompts = []
     for i in range(8):
         doc, _ = task.sample(rng, 72)
-        reqs.append(Request(uid=i, prompt=[task.tok.bos_id] + doc +
-                            [task.tok.sep_id], max_tokens=10))
+        prompts.append([task.tok.bos_id] + doc + [task.tok.sep_id])
 
-    eng = ServingEngine(packed_cfg, packed_params,
-                        ServeConfig(max_batch=4, max_len=12,
-                                    eos_id=task.tok.eos_id))
+    plen = max(len(p) for p in prompts)
+    eng = Engine(packed_cfg, packed_params,
+                 ServeConfig(max_batch=4, max_len=plen + 10,
+                             eos_id=task.tok.eos_id))
+    sp = SamplingParams(max_tokens=10)
     t0 = time.time()
-    outs = eng.generate(reqs)
+    reqs = [eng.submit(p, sp) for p in prompts[:4]]
+    n, injected = 0, False
+    while eng.has_pending() or not injected:
+        for out in eng.step():
+            n += 1 if out.token >= 0 else 0
+        if not injected:   # continuous batching: add load mid-flight
+            reqs += [eng.submit(p, sp) for p in prompts[4:]]
+            injected = True
     dt = time.time() - t0
-    n = sum(len(v) for v in outs.values())
-    print(f"served {len(outs)} requests / {n} tokens in {dt:.1f}s "
-          f"({n/dt:.1f} tok/s, CPU interpret mode)")
-    for uid in sorted(outs)[:3]:
-        print(f"  req {uid}: {outs[uid]}")
+    print(f"served {len(reqs)} requests / {n} tokens in {dt:.1f}s "
+          f"({n/dt:.1f} tok/s, CPU interpret mode; 4 submitted mid-flight)")
+    for r in reqs[:3]:
+        print(f"  req {r.uid} [{r.finish_reason.value}]: {r.output_tokens}")
 
 
 if __name__ == "__main__":

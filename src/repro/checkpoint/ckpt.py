@@ -3,7 +3,8 @@
 Layout (one directory per step):
     <dir>/step_000123/
         manifest.json          # leaf paths, shapes, dtypes, extra state
-        arrays.msgpack.zst     # {path: raw bytes} (zstd-compressed msgpack)
+        arrays.msgpack.zst     # {path: raw bytes} (zstd-compressed msgpack;
+                               # plain arrays.msgpack when zstandard is absent)
     <dir>/LATEST               # atomic pointer file
 
 Properties needed at 1000-node scale (DESIGN.md §6):
@@ -31,15 +32,30 @@ import pathlib
 import shutil
 import threading
 import time
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional: fall back to uncompressed payloads when absent
+    import zstandard
+except ImportError:  # pragma: no cover - depends on environment
+    zstandard = None
 
 from repro.nn.module import flatten_with_paths
+
+_warned_no_zstd = False
+
+
+def _warn_no_zstd():
+    global _warned_no_zstd
+    if not _warned_no_zstd:
+        warnings.warn("zstandard not installed; writing uncompressed "
+                      "checkpoints (arrays.msgpack)", stacklevel=3)
+        _warned_no_zstd = True
 
 
 def _pack_tree(tree: Any) -> Tuple[Dict[str, np.ndarray], Any]:
@@ -69,9 +85,14 @@ def save_checkpoint(directory: str, step: int, tree: Any,
                    for k, v in arrays.items()},
     }
     payload = {k: v.tobytes() for k, v in arrays.items()}
-    cctx = zstandard.ZstdCompressor(level=3)
-    with open(tmp / "arrays.msgpack.zst", "wb") as f:
-        f.write(cctx.compress(msgpack.packb(payload)))
+    if zstandard is not None:
+        cctx = zstandard.ZstdCompressor(level=3)
+        with open(tmp / "arrays.msgpack.zst", "wb") as f:
+            f.write(cctx.compress(msgpack.packb(payload)))
+    else:
+        _warn_no_zstd()
+        with open(tmp / "arrays.msgpack", "wb") as f:
+            f.write(msgpack.packb(payload))
     (tmp / "manifest.json").write_text(json.dumps(manifest))
 
     if final.exists():
@@ -112,9 +133,17 @@ def load_checkpoint(directory: str, template: Any, step: Optional[int] = None,
             raise FileNotFoundError(f"no checkpoint under {directory}")
     src = d / f"step_{step:08d}"
     manifest = json.loads((src / "manifest.json").read_text())
-    dctx = zstandard.ZstdDecompressor()
-    with open(src / "arrays.msgpack.zst", "rb") as f:
-        payload = msgpack.unpackb(dctx.decompress(f.read()))
+    zst, raw = src / "arrays.msgpack.zst", src / "arrays.msgpack"
+    if zst.exists():
+        if zstandard is None:
+            raise ImportError(f"{zst} is zstd-compressed but the 'zstandard' "
+                              "module is not installed")
+        dctx = zstandard.ZstdDecompressor()
+        with open(zst, "rb") as f:
+            payload = msgpack.unpackb(dctx.decompress(f.read()))
+    else:
+        with open(raw, "rb") as f:
+            payload = msgpack.unpackb(f.read())
 
     flat_template = flatten_with_paths(template)
     flat_shard = flatten_with_paths(shardings) if (

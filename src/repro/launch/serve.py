@@ -1,8 +1,16 @@
-"""Serving launcher: batched generation with a (optionally packed-ternary)
-student.
+"""Serving launcher: continuous-batching generation with a (optionally
+packed-ternary) student.
+
+Closed-loop (submit everything, drain):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
         --packed --requests 8
+
+Open-loop load generator (Poisson arrivals at --arrival-rate req/s, requests
+admitted mid-flight by the scheduler) with per-token streaming output:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
+        --requests 16 --arrival-rate 4 --stream
 """
 from __future__ import annotations
 
@@ -15,8 +23,85 @@ import numpy as np
 from repro.core import quant as Q
 from repro.models import build_model
 from repro.models.base import get_config
-from repro.serving.engine import (Request, ServeConfig, ServingEngine,
-                                  convert_to_packed)
+from repro.serving.api import SamplingParams
+from repro.serving.engine import Engine, ServeConfig, convert_to_packed
+
+
+def build_engine(args) -> Engine:
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = cfg.with_quant(Q.QAT)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if args.packed:
+        cfg, params = convert_to_packed(cfg, params)
+        print("[packed] ternary 2-bit weights")
+    scfg = ServeConfig(max_batch=args.max_batch,
+                       max_len=args.prompt_len + args.max_tokens,
+                       temperature=args.temperature, top_p=args.top_p)
+    return Engine(cfg, params, scfg)
+
+
+def run_closed_loop(eng: Engine, args) -> None:
+    """Submit every request up front and drain the scheduler."""
+    rng = np.random.default_rng(0)
+    sp = SamplingParams(max_tokens=args.max_tokens,
+                        temperature=args.temperature, top_p=args.top_p)
+    reqs = [eng.submit(rng.integers(0, 64, args.prompt_len).tolist(), sp)
+            for _ in range(args.requests)]
+    t0 = time.time()
+    for out in eng.stream():
+        if args.stream and out.token >= 0:
+            print(f"  [uid {out.uid} #{out.index}] {out.token}"
+                  + (f"  <{out.finish_reason.value}>" if out.finished else ""))
+    dt = time.time() - t0
+    n_tok = sum(r.num_generated for r in reqs)
+    print(f"{len(reqs)} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok/max(dt, 1e-9):.1f} tok/s)")
+    for r in reqs:
+        print(f"  req {r.uid} [{r.finish_reason.value}]: "
+              f"{r.output_tokens[:12]}{'...' if r.num_generated > 12 else ''}")
+
+
+def run_open_loop(eng: Engine, args) -> None:
+    """Open-loop load generator: Poisson arrivals at --arrival-rate req/s;
+    the engine keeps stepping and the scheduler admits arrivals mid-flight,
+    which is exactly the regime where continuous batching pays off."""
+    rng = np.random.default_rng(0)
+    sp = SamplingParams(max_tokens=args.max_tokens,
+                        temperature=args.temperature, top_p=args.top_p)
+    gaps = rng.exponential(1.0 / args.arrival_rate, args.requests)
+    arrivals = np.cumsum(gaps)
+    t0 = time.time()
+    submitted, reqs, submit_ts, finish_ts = 0, [], {}, {}
+    n_tok = 0
+    while submitted < args.requests or eng.has_pending():
+        now = time.time() - t0
+        while submitted < args.requests and arrivals[submitted] <= now:
+            r = eng.submit(rng.integers(0, 64, args.prompt_len).tolist(), sp)
+            submit_ts[r.uid] = now
+            reqs.append(r)
+            submitted += 1
+        if not eng.has_pending():
+            # idle until the next arrival
+            time.sleep(max(0.0, arrivals[submitted] - (time.time() - t0)))
+            continue
+        for out in eng.step():
+            if out.token >= 0:
+                n_tok += 1
+            if args.stream and out.token >= 0:
+                print(f"  [uid {out.uid} #{out.index}] {out.token}")
+            if out.finished:
+                finish_ts[out.uid] = time.time() - t0
+    dt = time.time() - t0
+    lats = [finish_ts[u] - submit_ts[u] for u in finish_ts if u in submit_ts]
+    print(f"open loop: {len(reqs)} requests at {args.arrival_rate:.1f} req/s, "
+          f"{n_tok} tokens in {dt:.2f}s ({n_tok/max(dt, 1e-9):.1f} tok/s)")
+    if lats:
+        print(f"request latency: mean {np.mean(lats)*1e3:.0f} ms  "
+              f"p50 {np.percentile(lats, 50)*1e3:.0f} ms  "
+              f"p95 {np.percentile(lats, 95)*1e3:.0f} ms")
 
 
 def main(argv=None):
@@ -26,32 +111,21 @@ def main(argv=None):
     ap.add_argument("--packed", action="store_true")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are generated")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop Poisson arrivals (req/s); 0 = closed loop")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    cfg = cfg.with_quant(Q.QAT)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-
-    if args.packed:
-        cfg, params = convert_to_packed(cfg, params)
-        print("[packed] ternary 2-bit weights")
-
-    eng = ServingEngine(cfg, params, ServeConfig(max_len=args.max_tokens + 4))
-    rng = np.random.default_rng(0)
-    reqs = [Request(uid=i, prompt=rng.integers(0, 64, 12).tolist(),
-                    max_tokens=args.max_tokens)
-            for i in range(args.requests)]
-    t0 = time.time()
-    out = eng.generate(reqs)
-    dt = time.time() - t0
-    n_tok = sum(len(v) for v in out.values())
-    print(f"{len(out)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok/dt:.1f} tok/s)")
-    for uid, toks in sorted(out.items()):
-        print(f"  req {uid}: {toks[:12]}{'...' if len(toks) > 12 else ''}")
+    eng = build_engine(args)
+    if args.arrival_rate > 0:
+        run_open_loop(eng, args)
+    else:
+        run_closed_loop(eng, args)
 
 
 if __name__ == "__main__":

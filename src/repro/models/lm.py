@@ -158,14 +158,20 @@ class CausalLM:
     def _fill_cache_from_prompt(self, p, tokens, cache, memory):
         # A second pass that runs decode semantics over the prompt would be
         # O(S) sequential; instead we recompute per-layer inputs via the full
-        # forward with collectors.  For framework simplicity serving uses
-        # engine-level chunked prefill (serving/engine.py); here we return the
+        # forward with collectors.  For framework simplicity serving uses the
+        # engine's per-admission scan prefill (serving/engine.py:_prefill_impl,
+        # driven by the continuous-batching scheduler); here we return the
         # cache unchanged for API completeness.
         return cache
 
     def decode_step(self, p: Params, token: jax.Array, cache: Params,
                     cache_index: jax.Array) -> Tuple[jax.Array, Params]:
-        """token [B] int32 -> (fp32 logits [B, V], new cache)."""
+        """token [B] int32 -> (fp32 logits [B, V], new cache).
+
+        ``cache_index`` may be a scalar (uniform-depth batch) or an int32 [B]
+        vector of per-row cache positions — the continuous-batching scheduler
+        (serving/scheduler.py) keeps rows at different prompt/generation
+        depths in one decode batch."""
         c = self.cfg
         x = self._embed().apply(p["embed"], token[:, None])
         if c.embed_scale:

@@ -277,9 +277,16 @@ class Attention:
                cache_index: jax.Array,
                memory: Optional[jax.Array] = None) -> Tuple[jax.Array, Params]:
         """x: [B, 1, D]; cache: {"k","v"} [B, Hkv, Smax, Dh] (attention
-        layout — no per-step transpose of the cache); returns (y, cache)."""
+        layout — no per-step transpose of the cache); returns (y, cache).
+
+        ``cache_index`` is a scalar (all rows at the same depth) or an int32
+        [B] vector of per-row write positions — continuous batching runs rows
+        at different sequence depths in one step; each row writes its KV at
+        its own index and attends only to its own positions <= index."""
         b = x.shape[0]
-        positions = jnp.broadcast_to(cache_index.reshape(-1, 1), (b, 1)).astype(jnp.int32)
+        idx = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32).reshape(-1),
+                               (b,))
+        positions = idx[:, None]
         q = self._project_q(p, x, positions)
         if self.cross:
             # cross-attention cache holds the projected encoder memory (static).
@@ -289,13 +296,16 @@ class Attention:
             k_new, v_new = self._project_kv(p, x, positions)
             k_new = k_new.transpose(0, 2, 1, 3)  # [b,kv,1,dh] (tiny)
             v_new = v_new.transpose(0, 2, 1, 3)
-            k = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k_new.astype(cache["k"].dtype), cache_index, axis=2)
-            v = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v_new.astype(cache["v"].dtype), cache_index, axis=2)
+
+            def put(row_cache, row_new, row_idx):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    row_cache, row_new, row_idx, axis=1)
+
+            k = jax.vmap(put)(cache["k"], k_new.astype(cache["k"].dtype), idx)
+            v = jax.vmap(put)(cache["v"], v_new.astype(cache["v"].dtype), idx)
             cache = {"k": k, "v": v}
             t = k.shape[2]
-            mask = (jnp.arange(t)[None, :] <= cache_index)[:, None, None, :]
+            mask = (jnp.arange(t)[None, :] <= idx[:, None])[:, None, None, :]
             mask = jnp.broadcast_to(mask, (b, 1, 1, t))
         ctx = self._attend(q, k, v, mask, kv_layout="bhsd")
         flat = ctx.reshape(b, 1, self.q_dim)

@@ -343,6 +343,7 @@ class Stack:
 
     def decode(self, p: Params, x: jax.Array, cache: Params,
                cache_index: jax.Array) -> Tuple[jax.Array, Params]:
+        """cache_index: scalar or per-row [B] vector (mixed-depth batches)."""
         blocks = self.blocks()
 
         def body(h, xs):

@@ -1,4 +1,12 @@
-from repro.serving.engine import ServeConfig, ServingEngine
-from repro.serving.sampling import greedy, sample_top_p
+from repro.serving.api import (FinishReason, GenerationRequest, SamplingParams,
+                               StepOutput, make_request)
+from repro.serving.engine import (Engine, Request, ServeConfig, ServingEngine,
+                                  convert_to_packed)
+from repro.serving.sampling import greedy, sample_batch, sample_top_p
+from repro.serving.scheduler import Scheduler
 
-__all__ = ["ServingEngine", "ServeConfig", "greedy", "sample_top_p"]
+__all__ = [
+    "Engine", "ServingEngine", "ServeConfig", "Request", "convert_to_packed",
+    "FinishReason", "GenerationRequest", "SamplingParams", "StepOutput",
+    "make_request", "Scheduler", "greedy", "sample_batch", "sample_top_p",
+]

@@ -1,0 +1,81 @@
+"""Serving request-lifecycle API (the user-facing half of the engine).
+
+A caller builds a :class:`GenerationRequest` (prompt + per-request
+:class:`SamplingParams`), submits it to the :class:`~repro.serving.engine.
+Engine`, and consumes :class:`StepOutput` events — one per generated token —
+either via ``Engine.stream()`` / ``Engine.step()`` or a per-request
+``on_token`` callback.  When a request finishes, the final event carries a
+:class:`FinishReason`.
+
+This module is deliberately jax-free: it is the stable surface contract;
+scheduling lives in serving/scheduler.py and jitted compute in
+serving/engine.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, List, Optional, Sequence
+
+
+class FinishReason(str, enum.Enum):
+    STOP = "stop"          # hit an EOS / stop token
+    LENGTH = "length"      # max_tokens generated, or per-slot cache exhausted
+    ABORTED = "aborted"    # rejected (e.g. prompt longer than cache capacity)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode controls (engine defaults fill unset requests).
+
+    ``max_tokens`` counts *generated* tokens only — the prompt never counts,
+    and the first token (sampled from the prefill logits) does.
+    ``temperature == 0`` selects greedy decoding; otherwise top-p nucleus
+    sampling at the given temperature.  ``seed`` makes stochastic sampling
+    reproducible per request; ``None`` derives a seed from the engine seed
+    and the request uid.
+    """
+    max_tokens: int = 32
+    temperature: float = 0.0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+    ignore_eos: bool = False
+
+
+@dataclasses.dataclass
+class GenerationRequest:
+    """One prompt in flight.  Mutable runtime fields are engine-owned."""
+    uid: int
+    prompt: List[int]
+    params: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    on_token: Optional[Callable[["StepOutput"], None]] = None
+    # -- engine-owned runtime state ------------------------------------------
+    output_tokens: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: Optional[FinishReason] = None
+
+    @property
+    def done(self) -> bool:
+        return self.finish_reason is not None
+
+    @property
+    def num_generated(self) -> int:
+        return len(self.output_tokens)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepOutput:
+    """One generated token for one request (the streaming unit)."""
+    uid: int
+    token: int
+    index: int                                  # position in the output, 0-based
+    finished: bool = False
+    finish_reason: Optional[FinishReason] = None
+
+
+def make_request(prompt: Sequence[int], uid: int,
+                 params: Optional[SamplingParams] = None,
+                 on_token: Optional[Callable[[StepOutput], None]] = None,
+                 ) -> GenerationRequest:
+    return GenerationRequest(uid=uid, prompt=list(prompt),
+                             params=params or SamplingParams(),
+                             on_token=on_token)

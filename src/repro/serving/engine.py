@@ -1,24 +1,43 @@
-"""Batched serving engine for BitDistill students (and FP baselines).
+"""Continuous-batching serving engine for BitDistill students (and FP
+baselines).
 
 Serves the paper's inference story on TPU terms: the QAT student is converted
 to 2-bit-packed ternary weights (core.bitlinear.convert_linear_params_fp_to_
-packed → the w2a8 kernel path), cutting weight HBM traffic 8x vs bf16 in the
+packed -> the w2a8 kernel path), cutting weight HBM traffic 8x vs bf16 in the
 bandwidth-bound decode loop — the TPU analogue of the paper's 2.65x CPU
-speedup / 10x memory saving (EXPERIMENTS.md §Perf quantifies via roofline).
+speedup / 10x memory saving.  That bandwidth win only materializes when the
+decode batch stays full, which is what continuous batching is for.
 
-Mechanics:
-  * request queue with dynamic batching up to ``max_batch``
-  * one jitted prefill (per bucketed prompt length) seeds the KV/SSM caches
-    by running decode over prompt positions under lax.scan (shape-stable)
-  * one jitted decode step generates for the whole batch; finished rows are
-    masked and refilled (continuous-batching-lite)
-  * greedy / top-p sampling; per-request max_tokens and EOS stop
+Architecture (request lifecycle in serving/api.py, slot bookkeeping in
+serving/scheduler.py):
+
+  * ``Engine.submit()`` enqueues a :class:`GenerationRequest`; ``step()``
+    admits waiting requests into free decode slots and runs ONE jitted decode
+    step over the whole slot batch; ``stream()`` iterates steps and yields
+    :class:`StepOutput` tokens as they are produced; ``generate()`` is the
+    legacy blocking wrapper.
+  * one preallocated cache of shape [slots, max_len]; per-row int32 cache
+    indices let rows sit at different prompt/generation depths in the same
+    decode step, so finished rows are evicted and new requests admitted
+    without draining the batch.
+  * admission prefill: the prompt is right-padded to a power-of-two bucket
+    (bounds recompiles) and run through a lax.scan of decode steps on a
+    batch-of-one cache; cache updates are masked for pad positions (keeps SSM
+    states exact), then the filled rows are inserted into the slot's row of
+    the live cache.
+  * per-request sampling: temperature / top-p / PRNG-seed vectors ride along
+    the decode step, so greedy and stochastic requests share one compiled
+    step; ``max_tokens`` counts generated tokens (the first prefill-sampled
+    token included), EOS stops unless ``ignore_eos``.
+
+Known gaps recorded in ROADMAP.md Open items: no paged KV (a slot owns a
+contiguous max_len region), no prefix-cache sharing, admissions prefill one
+request at a time.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -26,22 +45,28 @@ import numpy as np
 
 from repro.models import build_model
 from repro.models.base import ModelConfig
-from repro.serving.sampling import greedy, sample_top_p
+from repro.serving.api import (FinishReason, GenerationRequest, SamplingParams,
+                               StepOutput, make_request)
+from repro.serving.sampling import sample_batch
+from repro.serving.scheduler import Scheduler
 
 
 @dataclasses.dataclass
 class ServeConfig:
-    max_batch: int = 8
-    max_len: int = 256
+    max_batch: int = 8               # concurrent decode slots
+    max_len: int = 256               # per-slot cache capacity (prompt + gen)
     eos_id: int = 258
     pad_id: int = 256
-    temperature: float = 0.0
+    temperature: float = 0.0         # default SamplingParams for bare submits
     top_p: float = 1.0
+    seed: int = 0                    # base for per-request PRNG derivation
+    prefill_bucket_min: int = 8      # smallest prompt bucket (powers of two up)
     cache_dtype: str = "float32"     # bfloat16 on real HW
 
 
 @dataclasses.dataclass
 class Request:
+    """Legacy request type, kept for the ``generate()`` compatibility path."""
     uid: int
     prompt: List[int]
     max_tokens: int = 32
@@ -49,99 +74,220 @@ class Request:
     done: bool = False
 
 
-class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig = ServeConfig()):
-        self.cfg, self.params, self.scfg = cfg, params, scfg
+class Engine:
+    """Continuous-batching facade: ``submit() / step() / stream()`` plus the
+    blocking ``generate()`` compatibility wrapper."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 scfg: Optional[ServeConfig] = None):
+        self.cfg, self.params = cfg, params
+        self.scfg = scfg if scfg is not None else ServeConfig()
         self.model = build_model(cfg)
-        self._decode = jax.jit(self._decode_impl)
-        self._prefill = jax.jit(self._prefill_impl)
+        self.sched = Scheduler(self.scfg.max_batch, self.scfg.max_len,
+                               self.scfg.eos_id, self.scfg.prefill_bucket_min)
+        # donate the cache (and key) buffers: step/admission outputs replace
+        # them, so XLA can update in place instead of copying the whole
+        # [slots, max_len] cache every generated token (no-op on backends
+        # without donation support, e.g. CPU)
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(2, 4))
+        self._prefill = jax.jit(self._prefill_impl,   # retraced per bucket
+                                donate_argnums=(3,))
+        self._insert = jax.jit(self._insert_impl,     # retraced per bucket
+                               donate_argnums=(0,))
+        self._uid_counter = 0
+        self._requests: Dict[int, GenerationRequest] = {}   # uid -> in flight
+        # live decode state, allocated lazily on first admission
+        self._cache = None
+        self._tokens = np.zeros((self.scfg.max_batch,), np.int32)
+        self._keys = None                             # uint32 [slots, 2]
 
     # -- jitted cores -----------------------------------------------------------
 
-    def _prefill_impl(self, params, tokens, lengths, cache):
-        """tokens [B, P] left-padded prompts; run decode over positions to
-        fill caches and return the last real token's logits."""
+    def _prefill_impl(self, params, tokens, length, cache, key, temp, top_p):
+        """tokens [1, P] right-padded to the bucket length; runs decode over
+        positions 0..P-1 under lax.scan.  Cache updates at pad positions
+        (t >= length) are masked out, so KV rows beyond the prompt stay zero
+        and recurrent SSM states are exactly the length-token state.  Returns
+        (first sampled token [1], filled cache, advanced PRNG key)."""
         b, plen = tokens.shape
 
         def step(carry, t):
             cache, last_logits = carry
-            logits, cache = self.model.decode_step(
+            logits, new_cache = self.model.decode_step(
                 params, tokens[:, t], cache, jnp.int32(t))
-            is_last = (t == lengths - 1)[:, None]
-            last_logits = jnp.where(is_last, logits, last_logits)
+            keep = t < length
+            cache = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(keep, n, o), new_cache, cache)
+            last_logits = jnp.where(t == length - 1, logits, last_logits)
             return (cache, last_logits), None
 
         v = self.cfg.padded_vocab
         init = (cache, jnp.zeros((b, v), logits_dtype(self.cfg)))
         (cache, last_logits), _ = jax.lax.scan(step, init, jnp.arange(plen))
-        return last_logits, cache
+        key, sub = jax.random.split(key)
+        first = sample_batch(sub[None], last_logits,
+                             jnp.reshape(temp, (1,)), jnp.reshape(top_p, (1,)))
+        return first, cache, key
 
-    def _decode_impl(self, params, token, cache, index, key):
-        logits, cache = self.model.decode_step(params, token, cache, index)
-        if self.scfg.temperature == 0.0:
-            nxt = greedy(logits)
-        else:
-            nxt = sample_top_p(key, logits, self.scfg.top_p,
-                               self.scfg.temperature)
-        return nxt, cache
+    def _decode_impl(self, params, tokens, cache, index, keys, temps, top_ps):
+        """One continuous-batching step: tokens [B], per-row cache index [B],
+        per-row PRNG keys [B, 2] and sampling params [B]."""
+        logits, cache = self.model.decode_step(params, tokens, cache, index)
+        split = jax.vmap(jax.random.split)(keys)       # [B, 2, 2]
+        new_keys, subs = split[:, 0], split[:, 1]
+        nxt = sample_batch(subs, logits, temps, top_ps)
+        return nxt, cache, new_keys
 
-    # -- batch serving ------------------------------------------------------------
+    def _insert_impl(self, cache, pcache, slot):
+        """Write a batch-of-one prefill cache into row ``slot`` of the live
+        cache (positions 0..bucket-1; later positions belong to decode)."""
+        def put(big, small):
+            start = (0, slot) + (0,) * (big.ndim - 2)
+            return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
+                                                start)
+        return jax.tree_util.tree_map(put, cache, pcache)
 
-    def generate(self, requests: Sequence[Request]) -> Dict[int, List[int]]:
-        """Run all requests to completion with dynamic batching."""
-        scfg = self.scfg
-        pending = list(requests)
-        results: Dict[int, List[int]] = {}
-        while pending:
-            batch = pending[:scfg.max_batch]
-            pending = pending[scfg.max_batch:]
-            self._run_batch(batch)
-            for r in batch:
-                results[r.uid] = r.output
+    # -- request lifecycle --------------------------------------------------------
+
+    def submit(self, prompt: Sequence[int],
+               params: Optional[SamplingParams] = None,
+               uid: Optional[int] = None,
+               on_token=None) -> GenerationRequest:
+        """Enqueue a prompt; returns the live GenerationRequest handle."""
+        if uid is None:
+            uid = self._uid_counter
+        self._uid_counter = max(self._uid_counter, uid) + 1
+        if params is None:
+            params = SamplingParams(temperature=self.scfg.temperature,
+                                    top_p=self.scfg.top_p)
+        req = make_request(prompt, uid, params, on_token)
+        return self.submit_request(req)
+
+    def submit_request(self, req: GenerationRequest) -> GenerationRequest:
+        self._requests[req.uid] = req
+        self.sched.submit(req)
+        return req
+
+    def has_pending(self) -> bool:
+        return self.sched.has_work()
+
+    def step(self) -> List[StepOutput]:
+        """Admit waiting requests, then run one decode step over the slot
+        batch.  Returns the StepOutputs produced (admission first-tokens,
+        then one token per active slot)."""
+        outs: List[StepOutput] = []
+        admitted, rejected = self.sched.admit()
+        outs.extend(rejected)
+        for slot, req in admitted:
+            outs.append(self._admit(slot, req))
+
+        active = self.sched.active_slots()
+        if active:
+            sc = self.sched
+            tok, self._cache, self._keys = self._decode(
+                self.params, jnp.asarray(self._tokens), self._cache,
+                jnp.asarray(sc.positions), self._keys,
+                jnp.asarray(sc.temperatures), jnp.asarray(sc.top_ps))
+            tok_np = np.asarray(tok)
+            self._tokens = tok_np.copy()
+            for slot in active:
+                outs.append(self.sched.record(slot, int(tok_np[slot])))
+
+        for out in outs:
+            req = self._requests.get(out.uid)
+            if req is not None and req.on_token is not None:
+                req.on_token(out)
+            if out.finished:
+                self._requests.pop(out.uid, None)
+        return outs
+
+    def stream(self) -> Iterator[StepOutput]:
+        """Drive steps until all submitted work finishes, yielding tokens in
+        generation order (interleaved across requests)."""
+        while self.sched.has_work():
+            for out in self.step():
+                yield out
+
+    # -- compatibility wrapper ------------------------------------------------------
+
+    def generate(self, requests: Sequence[Union[Request, GenerationRequest]]
+                 ) -> Dict[int, List[int]]:
+        """Blocking run-to-completion over a request list (legacy API).
+        Accepts old-style :class:`Request` (mirrors results into ``.output``/
+        ``.done``) or :class:`GenerationRequest`.
+
+        Note the semantics change from the pre-continuous-batching engine:
+        ``ServeConfig.max_len`` is the per-slot cache capacity (prompt +
+        generated), no longer a generated-token budget on top of a cache
+        sized to the prompt.  Legacy Requests have no finish_reason to
+        surface an admission rejection on, so an oversized prompt raises
+        here instead of silently returning an empty output."""
+        legacy: Dict[int, Request] = {}
+        handles: Dict[int, GenerationRequest] = {}
+        bad = [r.uid for r in requests
+               if not isinstance(r, GenerationRequest)
+               and (not r.prompt or len(r.prompt) + 1 > self.scfg.max_len)]
+        if bad:
+            raise ValueError(
+                f"prompts of requests {bad} are empty or exceed the per-slot "
+                f"cache capacity (ServeConfig.max_len={self.scfg.max_len}, "
+                "which counts prompt + generated tokens)")
+        for r in requests:
+            if isinstance(r, GenerationRequest):
+                self.submit_request(r)
+                handles[r.uid] = r
+            else:
+                params = SamplingParams(max_tokens=r.max_tokens,
+                                        temperature=self.scfg.temperature,
+                                        top_p=self.scfg.top_p)
+                handles[r.uid] = self.submit(r.prompt, params, uid=r.uid)
+                legacy[r.uid] = r
+        for _ in self.stream():
+            pass
+        results = {uid: list(h.output_tokens) for uid, h in handles.items()}
+        for uid, r in legacy.items():
+            r.output = results[uid]
+            r.done = handles[uid].done
         return results
 
-    def _run_batch(self, batch: List[Request]):
-        scfg = self.scfg
-        b = len(batch)
-        plen = max(len(r.prompt) for r in batch)
-        toks = np.full((b, plen), scfg.pad_id, np.int32)
-        lens = np.zeros((b,), np.int32)
-        for i, r in enumerate(batch):
-            toks[i, :len(r.prompt)] = r.prompt
-            lens[i] = len(r.prompt)
+    # -- internals ---------------------------------------------------------------
 
-        cache = self.model.init_cache(self.params, b,
-                                      plen + scfg.max_len,
-                                      jnp.dtype(scfg.cache_dtype))
-        logits, cache = self._prefill(self.params, jnp.asarray(toks),
-                                      jnp.asarray(lens), cache)
-        token = greedy(logits) if scfg.temperature == 0.0 else \
-            sample_top_p(jax.random.PRNGKey(0), logits, scfg.top_p,
-                         scfg.temperature)
+    def _ensure_state(self):
+        if self._cache is None:
+            self._cache = self.model.init_cache(
+                self.params, self.scfg.max_batch, self.scfg.max_len,
+                jnp.dtype(self.scfg.cache_dtype))
+            self._keys = jnp.zeros((self.scfg.max_batch, 2), jnp.uint32)
 
-        done = np.zeros((b,), bool)
-        key = jax.random.PRNGKey(1234)
-        for i, r in enumerate(batch):
-            r.output.append(int(token[i]))
-        # NOTE: per-row cache index = its own prompt length; we use a shared
-        # max index for shape stability and rely on left-aligned prompts +
-        # causal masking (pad tokens attend but carry no loss; acceptable for
-        # the framework demo — a production engine would use per-row indices)
-        for t in range(scfg.max_len - 1):
-            idx = jnp.int32(plen + t)
-            key, sub = jax.random.split(key)
-            token, cache = self._decode(self.params, token, cache, idx, sub)
-            tok_np = np.asarray(token)
-            for i, r in enumerate(batch):
-                if done[i]:
-                    continue
-                tid = int(tok_np[i])
-                r.output.append(tid)
-                if tid == scfg.eos_id or len(r.output) >= r.max_tokens:
-                    done[i] = True
-                    r.done = True
-            if done.all():
-                break
+    def _request_key(self, req: GenerationRequest) -> jax.Array:
+        seed = req.params.seed
+        if seed is None:
+            seed = (self.scfg.seed + 0x9E3779B9 * (req.uid + 1)) & 0x7FFFFFFF
+        return jax.random.PRNGKey(seed)
+
+    def _admit(self, slot: int, req: GenerationRequest) -> StepOutput:
+        """Prefill the prompt on a batch-of-one bucketed cache, insert it
+        into the slot's row, and record the first sampled token."""
+        self._ensure_state()
+        sc, scfg = self.sched, self.scfg
+        plen = len(req.prompt)
+        bucket = sc.bucket(plen)
+        toks = np.full((1, bucket), scfg.pad_id, np.int32)
+        toks[0, :plen] = req.prompt
+        pcache = self.model.init_cache(self.params, 1, bucket,
+                                       jnp.dtype(scfg.cache_dtype))
+        first, pcache, key = self._prefill(
+            self.params, jnp.asarray(toks), jnp.int32(plen), pcache,
+            self._request_key(req), jnp.float32(req.params.temperature),
+            jnp.float32(req.params.top_p))
+        self._cache = self._insert(self._cache, pcache, jnp.int32(slot))
+        self._keys = self._keys.at[slot].set(key)
+        self._tokens[slot] = int(first[0])
+        return self.sched.record(slot, int(first[0]))
+
+
+# retained name: the pre-continuous-batching engine class
+ServingEngine = Engine
 
 
 def logits_dtype(cfg: ModelConfig):

@@ -1,4 +1,10 @@
-"""Token sampling (paper eval setting: top-p=1.0, temperature=0 => greedy)."""
+"""Token sampling (paper eval setting: top-p=1.0, temperature=0 => greedy).
+
+``sample_top_p`` is the scalar-hyperparameter path (whole batch shares one
+temperature/top-p); ``sample_batch`` is the continuous-batching path — one
+PRNG key, temperature and top-p *per row*, so a single jitted decode step
+serves requests with different sampling params.
+"""
 from __future__ import annotations
 
 import jax
@@ -9,18 +15,34 @@ def greedy(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
-def sample_top_p(key: jax.Array, logits: jax.Array, top_p: float = 1.0,
-                 temperature: float = 1.0) -> jax.Array:
-    """Nucleus sampling; temperature==0 degenerates to greedy."""
-    if temperature == 0.0:
-        return greedy(logits)
-    logits = logits.astype(jnp.float32) / temperature
-    probs = jax.nn.softmax(logits, axis=-1)
+def sample_batch(keys: jax.Array, logits: jax.Array, temperature: jax.Array,
+                 top_p: jax.Array) -> jax.Array:
+    """Per-row sampling: keys uint32 [B, 2], logits [B, V], temperature [B],
+    top_p [B].  Rows with temperature == 0 decode greedily (traced select, so
+    one compiled step covers mixed greedy/stochastic batches)."""
+    greedy_tok = greedy(logits)
+    safe_t = jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = logits.astype(jnp.float32) / safe_t
+    probs = jax.nn.softmax(scaled, axis=-1)
     sorted_probs = jnp.sort(probs, axis=-1)[..., ::-1]
     csum = jnp.cumsum(sorted_probs, axis=-1)
-    cutoff_count = jnp.sum(csum < top_p, axis=-1, keepdims=True) + 1
+    cutoff_count = jnp.sum(csum < top_p[:, None], axis=-1, keepdims=True) + 1
     threshold = jnp.take_along_axis(sorted_probs, cutoff_count - 1, axis=-1)
     masked = jnp.where(probs >= threshold, probs, 0.0)
     masked = masked / jnp.sum(masked, axis=-1, keepdims=True)
-    return jax.random.categorical(key, jnp.log(jnp.maximum(masked, 1e-30)),
-                                  axis=-1).astype(jnp.int32)
+    logp = jnp.log(jnp.maximum(masked, 1e-30))
+    sampled = jax.vmap(lambda k, lg: jax.random.categorical(k, lg))(keys, logp)
+    return jnp.where(temperature == 0.0, greedy_tok,
+                     sampled.astype(jnp.int32))
+
+
+def sample_top_p(key: jax.Array, logits: jax.Array, top_p: float = 1.0,
+                 temperature: float = 1.0) -> jax.Array:
+    """Nucleus sampling with one shared temperature/top-p; temperature==0
+    degenerates to greedy.  Thin wrapper over ``sample_batch``."""
+    if temperature == 0.0:
+        return greedy(logits)
+    b = logits.shape[0]
+    keys = jax.random.split(key, b)
+    return sample_batch(keys, logits, jnp.full((b,), temperature, jnp.float32),
+                        jnp.full((b,), top_p, jnp.float32))

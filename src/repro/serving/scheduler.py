@@ -1,0 +1,133 @@
+"""Slot-based continuous-batching scheduler (host-side bookkeeping).
+
+The decode batch is a fixed array of ``n_slots`` rows over one preallocated
+cache of per-slot capacity ``max_len`` (prompt + generated tokens).  Each slot
+independently tracks which request occupies it and the row's cache position,
+so rows at different sequence depths coexist in a single jitted decode step —
+the engine passes a per-row int32 index vector down to the attention cache
+update (nn/attention.py:Attention.decode).
+
+Lifecycle per engine step:
+  1. ``admit()`` moves FIFO-waiting requests into free slots (one prefill per
+     admission, bucketed by prompt length to bound recompilation). Prompts
+     that cannot fit (len(prompt) + 1 > max_len) finish immediately as
+     ABORTED.
+  2. the engine runs one decode step over all slots; for every *active* slot
+     it calls ``record(slot, token)``, which appends the token, applies the
+     request's stop conditions (EOS unless ignore_eos, max_tokens counted as
+     generated tokens, per-slot cache capacity) and frees the slot when the
+     request finishes — the next ``admit()`` immediately refills it.
+
+The scheduler owns the per-slot sampling-parameter vectors (temperature,
+top-p) that the engine feeds the jitted sampler; idle rows decode a pad token
+greedily at the last cache position and their output is discarded (their
+stale cache write is overwritten before any real row can attend to it).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.api import (FinishReason, GenerationRequest, SamplingParams,
+                               StepOutput)
+
+
+def bucket_length(n: int, lo: int, hi: int) -> int:
+    """Round ``n`` up to a power of two in [lo, hi] (bounds recompiles to
+    O(log(max_len)) prefill shapes)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return min(b, hi)
+
+
+class Scheduler:
+    def __init__(self, n_slots: int, max_len: int, eos_id: int,
+                 bucket_min: int = 8):
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.bucket_min = bucket_min
+        self.waiting: Deque[GenerationRequest] = deque()
+        self.slots: List[Optional[GenerationRequest]] = [None] * n_slots
+        # per-slot cache index of the *next* decode write; invariant for an
+        # occupied slot: position = prompt_len + num_generated - 1 (the first
+        # generated token comes from prefill logits and is written to the
+        # cache only when the next decode step consumes it). Idle rows park at
+        # max_len - 1, a position any real row overwrites before attending.
+        self.positions = np.full((n_slots,), max_len - 1, np.int32)
+        self.temperatures = np.zeros((n_slots,), np.float32)
+        self.top_ps = np.ones((n_slots,), np.float32)
+
+    # -- queue / slot management ---------------------------------------------
+
+    def submit(self, req: GenerationRequest) -> None:
+        self.waiting.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(r is not None for r in self.slots)
+
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is not None]
+
+    def bucket(self, prompt_len: int) -> int:
+        return bucket_length(prompt_len, self.bucket_min, self.max_len)
+
+    def admit(self) -> Tuple[List[Tuple[int, GenerationRequest]],
+                             List[StepOutput]]:
+        """Fill free slots from the waiting queue (FIFO).  Returns the newly
+        admitted (slot, request) pairs plus StepOutputs for any request
+        rejected up front (empty prompt, or prompt too long for the per-slot
+        cache)."""
+        admitted: List[Tuple[int, GenerationRequest]] = []
+        rejected: List[StepOutput] = []
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        while free and self.waiting:
+            req = self.waiting.popleft()
+            if not req.prompt or len(req.prompt) + 1 > self.max_len:
+                req.finish_reason = FinishReason.ABORTED
+                rejected.append(StepOutput(uid=req.uid, token=-1, index=-1,
+                                           finished=True,
+                                           finish_reason=FinishReason.ABORTED))
+                continue
+            slot = free.pop(0)
+            self.slots[slot] = req
+            self.positions[slot] = len(req.prompt)
+            self.temperatures[slot] = req.params.temperature
+            self.top_ps[slot] = req.params.top_p
+            admitted.append((slot, req))
+        return admitted, rejected
+
+    def _free(self, slot: int) -> None:
+        self.slots[slot] = None
+        self.positions[slot] = self.max_len - 1
+        self.temperatures[slot] = 0.0
+        self.top_ps[slot] = 1.0
+
+    # -- per-token lifecycle ---------------------------------------------------
+
+    def record(self, slot: int, token: int) -> StepOutput:
+        """Append one generated token to the slot's request, apply stop
+        conditions, and free the slot if the request finished."""
+        req = self.slots[slot]
+        assert req is not None, f"record() on idle slot {slot}"
+        req.output_tokens.append(token)
+        self.positions[slot] = len(req.prompt) + req.num_generated - 1
+
+        reason: Optional[FinishReason] = None
+        if token == self.eos_id and not req.params.ignore_eos:
+            reason = FinishReason.STOP
+        elif req.num_generated >= req.params.max_tokens:
+            reason = FinishReason.LENGTH
+        elif self.positions[slot] > self.max_len - 1:
+            reason = FinishReason.LENGTH   # per-slot cache exhausted
+
+        out = StepOutput(uid=req.uid, token=token,
+                         index=req.num_generated - 1,
+                         finished=reason is not None, finish_reason=reason)
+        if reason is not None:
+            req.finish_reason = reason
+            self._free(slot)
+        return out

@@ -1,0 +1,54 @@
+"""Minimal deterministic stand-in for `hypothesis` when it is not installed.
+
+Supports exactly the subset test_quant.py uses: ``st.integers``, ``st.tuples``,
+``@given(...)`` (runs each property 5 times on seeded pseudo-random samples),
+and the ``settings`` profile no-ops.  Not a shrinker — just enough to keep the
+property tests exercising a spread of shapes in dependency-light containers.
+"""
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self.sampler = sampler
+
+
+class _Integers:
+    @staticmethod
+    def integers(lo: int, hi: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    @staticmethod
+    def tuples(*strategies: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.sampler(rng) for s in strategies))
+
+
+st = _Integers()
+
+
+def given(*strategies: _Strategy, n_examples: int = 5):
+    def deco(fn):
+        def wrapper(*bound):
+            # `bound` is (self,) for methods, () for plain functions.
+            rng = random.Random(1234)
+            for _ in range(n_examples):
+                fn(*bound, *(s.sampler(rng) for s in strategies))
+        # plain name copy only: functools.wraps would expose fn's signature
+        # via __wrapped__ and pytest would try to inject the property args
+        # as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+class settings:  # noqa: N801 - mirrors hypothesis' name
+    @staticmethod
+    def register_profile(name, **kw):
+        pass
+
+    @staticmethod
+    def load_profile(name):
+        pass

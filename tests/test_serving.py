@@ -1,4 +1,11 @@
-"""Serving engine: generation, EOS/stop handling, packed-weight conversion."""
+"""Serving: continuous-batching engine, request lifecycle, sampling, packed
+conversion.
+
+The load-bearing test is mixed-depth parity: requests admitted mid-stream
+into a running batch must produce token-for-token identical greedy outputs to
+running each request alone (per-slot cache indices, ISSUE acceptance
+criterion).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,9 +13,12 @@ import pytest
 
 from repro.core import quant as Q
 from repro.models import build_model, get_config
-from repro.serving.engine import (Request, ServeConfig, ServingEngine,
+from repro.serving.api import (FinishReason, GenerationRequest, SamplingParams,
+                               StepOutput)
+from repro.serving.engine import (Engine, Request, ServeConfig, ServingEngine,
                                   convert_to_packed)
-from repro.serving.sampling import greedy, sample_top_p
+from repro.serving.sampling import greedy, sample_batch, sample_top_p
+from repro.serving.scheduler import Scheduler, bucket_length
 
 
 @pytest.fixture(scope="module")
@@ -18,6 +28,23 @@ def small_lm():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def qat_lm():
+    cfg = get_config("qwen1.5-0.5b").reduced().replace(
+        compute_dtype="float32", param_dtype="float32").with_quant(Q.QAT)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def run_alone(eng: Engine, prompt, sp: SamplingParams):
+    """Reference: one request at a time through the same engine."""
+    req = eng.submit(list(prompt), sp)
+    for _ in eng.stream():
+        pass
+    return req
 
 
 class TestSampling:
@@ -38,33 +65,221 @@ class TestSampling:
             s = sample_top_p(jax.random.PRNGKey(seed), logits, 0.75, 1.0)
             assert int(s[0]) in (0, 1)
 
+    def test_sample_batch_mixed_rows(self):
+        """One step can mix greedy rows (temp 0) with stochastic rows."""
+        logits = jax.random.normal(jax.random.PRNGKey(3), (3, 64))
+        keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(3, dtype=jnp.uint32))
+        temps = jnp.array([0.0, 1.0, 0.0], jnp.float32)
+        tops = jnp.array([1.0, 0.9, 1.0], jnp.float32)
+        got = np.asarray(sample_batch(keys, logits, temps, tops))
+        ref = np.asarray(greedy(logits))
+        assert got[0] == ref[0] and got[2] == ref[2]
 
-class TestEngine:
-    def test_batched_generation(self, small_lm):
+    def test_sample_batch_top_p_restricts_support(self):
+        logits = jnp.log(jnp.array([[0.7, 0.2, 0.05, 0.05]]))
+        for seed in range(20):
+            s = sample_batch(jax.random.PRNGKey(seed)[None], logits,
+                             jnp.ones((1,)), jnp.full((1,), 0.75))
+            assert int(s[0]) in (0, 1)
+
+
+class TestScheduler:
+    def test_bucket_length_pow2(self):
+        assert bucket_length(3, 8, 64) == 8
+        assert bucket_length(9, 8, 64) == 16
+        assert bucket_length(33, 8, 64) == 64
+        assert bucket_length(60, 8, 64) == 64   # clamped to max_len
+
+    def test_admit_and_free(self):
+        sc = Scheduler(n_slots=2, max_len=16, eos_id=99)
+        for uid in range(3):
+            sc.submit(GenerationRequest(uid=uid, prompt=[1, 2, 3],
+                                        params=SamplingParams(max_tokens=2)))
+        admitted, rejected = sc.admit()
+        assert [s for s, _ in admitted] == [0, 1] and not rejected
+        assert sc.positions[0] == 3            # next write = prompt_len
+        out = sc.record(0, token=7)            # 1st generated token
+        assert not out.finished and sc.positions[0] == 3
+        out = sc.record(0, token=8)            # hits max_tokens=2
+        assert out.finished and out.finish_reason == FinishReason.LENGTH
+        assert sc.slots[0] is None             # slot freed for re-admission
+        admitted, _ = sc.admit()
+        assert [s for s, _ in admitted] == [0]  # third request backfills
+
+    def test_oversized_prompt_aborted(self):
+        sc = Scheduler(n_slots=1, max_len=8, eos_id=99)
+        req = GenerationRequest(uid=0, prompt=list(range(8)))
+        sc.submit(req)
+        admitted, rejected = sc.admit()
+        assert not admitted and rejected[0].finish_reason == FinishReason.ABORTED
+        assert req.done and not sc.has_work()
+
+    def test_eos_stop(self):
+        sc = Scheduler(n_slots=1, max_len=16, eos_id=42)
+        sc.submit(GenerationRequest(uid=0, prompt=[1],
+                                    params=SamplingParams(max_tokens=10)))
+        sc.admit()
+        out = sc.record(0, token=42)
+        assert out.finished and out.finish_reason == FinishReason.STOP
+
+
+class TestContinuousBatching:
+    def test_mixed_depth_matches_single(self, small_lm):
+        """Requests admitted mid-stream into a running batch generate
+        token-for-token what they generate alone (greedy)."""
         cfg, model, params = small_lm
-        eng = ServingEngine(cfg, params, ServeConfig(max_batch=4, max_len=8))
+        prompts = [[1, 2, 3], [5, 6, 7, 8, 9], [11, 12], [3, 1, 4, 1, 5, 9]]
+        sp = SamplingParams(max_tokens=8, ignore_eos=True)
+        eng = Engine(cfg, params, ServeConfig(max_batch=3, max_len=24))
+        refs = [run_alone(eng, p, sp).output_tokens for p in prompts]
+
+        eng2 = Engine(cfg, params, ServeConfig(max_batch=3, max_len=24))
+        r0 = eng2.submit(prompts[0], sp)
+        eng2.step(); eng2.step()                       # r0 is 2 tokens deep
+        r1 = eng2.submit(prompts[1], sp)
+        eng2.step()                                    # r1 admitted mid-stream
+        r2 = eng2.submit(prompts[2], sp)
+        r3 = eng2.submit(prompts[3], sp)               # queues until a slot frees
+        for _ in eng2.stream():
+            pass
+        got = [r.output_tokens for r in (r0, r1, r2, r3)]
+        assert got == refs
+
+    def test_streaming_order_and_finish(self, small_lm):
+        cfg, model, params = small_lm
+        eng = Engine(cfg, params, ServeConfig(max_batch=2, max_len=16))
+        sp = SamplingParams(max_tokens=4, ignore_eos=True)
+        ra, rb = eng.submit([1, 2], sp), eng.submit([3, 4, 5], sp)
+        outs = list(eng.stream())
+        for r in (ra, rb):
+            mine = [o for o in outs if o.uid == r.uid]
+            assert [o.index for o in mine] == list(range(4))
+            assert [o.token for o in mine] == r.output_tokens
+            assert [o.finished for o in mine] == [False, False, False, True]
+            assert mine[-1].finish_reason == FinishReason.LENGTH
+
+    def test_callback_streaming(self, small_lm):
+        cfg, model, params = small_lm
+        eng = Engine(cfg, params, ServeConfig(max_batch=2, max_len=16))
+        got = []
+        r = eng.submit([1, 2, 3], SamplingParams(max_tokens=3, ignore_eos=True),
+                       on_token=lambda o: got.append((o.index, o.token)))
+        for _ in eng.stream():
+            pass
+        assert got == list(enumerate(r.output_tokens))
+
+    def test_max_tokens_counts_generated_only(self, small_lm):
+        """max_tokens bounds *generated* tokens exactly — the first
+        prefill-sampled token counts, the prompt does not."""
+        cfg, model, params = small_lm
+        eng = Engine(cfg, params, ServeConfig(max_batch=2, max_len=16))
+        for n in (1, 3):
+            r = eng.submit([1, 2, 3, 4],
+                           SamplingParams(max_tokens=n, ignore_eos=True))
+            for _ in eng.stream():
+                pass
+            assert r.num_generated == n
+            assert r.finish_reason == FinishReason.LENGTH
+
+    def test_eos_finishes_with_stop(self, small_lm):
+        cfg, model, params = small_lm
+        # probe the greedy continuation, then rig eos_id to its 2nd token
+        eng = Engine(cfg, params, ServeConfig(max_batch=1, max_len=16))
+        probe = eng.submit([9, 8, 7], SamplingParams(max_tokens=4,
+                                                     ignore_eos=True))
+        for _ in eng.stream():
+            pass
+        eos = probe.output_tokens[1]
+        eng2 = Engine(cfg, params, ServeConfig(max_batch=1, max_len=16,
+                                               eos_id=eos))
+        r = eng2.submit([9, 8, 7], SamplingParams(max_tokens=10))
+        for _ in eng2.stream():
+            pass
+        assert r.finish_reason == FinishReason.STOP
+        assert r.output_tokens == probe.output_tokens[:2]
+
+    def test_cache_capacity_finishes_with_length(self, small_lm):
+        cfg, model, params = small_lm
+        eng = Engine(cfg, params, ServeConfig(max_batch=1, max_len=8))
+        r = eng.submit([1, 2, 3, 4, 5],
+                       SamplingParams(max_tokens=50, ignore_eos=True))
+        for _ in eng.stream():
+            pass
+        assert r.finish_reason == FinishReason.LENGTH
+        # prompt fills 0..4; decode writes at 5,6,7 produce one token each and
+        # the final sampled token needs no cache write: 8 - 5 + 1 generated
+        assert r.num_generated == 4
+
+    def test_seeded_sampling_reproducible(self, small_lm):
+        cfg, model, params = small_lm
+        eng = Engine(cfg, params, ServeConfig(max_batch=3, max_len=16))
+        sp7 = SamplingParams(max_tokens=6, temperature=1.0, seed=7,
+                             ignore_eos=True)
+        sp8 = SamplingParams(max_tokens=6, temperature=1.0, seed=8,
+                             ignore_eos=True)
+        a, b, c = (eng.submit([1, 2, 3], sp) for sp in (sp7, sp7, sp8))
+        for _ in eng.stream():
+            pass
+        assert a.output_tokens == b.output_tokens
+        assert a.output_tokens != c.output_tokens
+
+    def test_quantized_paths_through_scheduler(self, qat_lm):
+        """QAT and packed students both serve mixed-depth batches identically
+        to single-request runs (the decode-bandwidth story needs the packed
+        path correct under continuous batching)."""
+        qcfg, _, qparams = qat_lm
+        pcfg, pparams = convert_to_packed(qcfg, qparams)
+        prompts = [[1, 2, 3], [5, 6, 7, 8, 9]]
+        sp = SamplingParams(max_tokens=5, ignore_eos=True)
+        for cfg, params in ((qcfg, qparams), (pcfg, pparams)):
+            eng = Engine(cfg, params, ServeConfig(max_batch=2, max_len=20))
+            refs = [run_alone(eng, p, sp).output_tokens for p in prompts]
+            ra = eng.submit(prompts[0], sp)
+            eng.step()                              # stagger depths
+            rb = eng.submit(prompts[1], sp)
+            for _ in eng.stream():
+                pass
+            assert [ra.output_tokens, rb.output_tokens] == refs
+
+
+class TestEngineCompat:
+    def test_generate_wrapper_legacy_requests(self, small_lm):
+        cfg, model, params = small_lm
+        eng = ServingEngine(cfg, params, ServeConfig(max_batch=4, max_len=16))
         reqs = [Request(uid=i, prompt=[1, 2, 3 + i], max_tokens=6)
                 for i in range(6)]
         out = eng.generate(reqs)
         assert set(out) == {0, 1, 2, 3, 4, 5}
-        for toks in out.values():
-            assert 1 <= len(toks) <= 6
-            assert all(0 <= t < cfg.padded_vocab for t in toks)
+        for r in reqs:
+            assert r.done and r.output == out[r.uid]
+            assert 1 <= len(r.output) <= 6
+            assert all(0 <= t < cfg.padded_vocab for t in r.output)
 
     def test_deterministic_greedy(self, small_lm):
         cfg, model, params = small_lm
-        eng = ServingEngine(cfg, params, ServeConfig(max_len=6))
+        eng = ServingEngine(cfg, params, ServeConfig(max_batch=2, max_len=12))
         r1 = eng.generate([Request(uid=0, prompt=[5, 6, 7], max_tokens=5)])
         r2 = eng.generate([Request(uid=0, prompt=[5, 6, 7], max_tokens=5)])
-        assert r1[0] == r2[0]
+        assert r1[0] == r2[0] and len(r1[0]) == 5
+
+    def test_generate_rejects_oversized_legacy_prompt(self, small_lm):
+        """Legacy Requests can't surface FinishReason.ABORTED, so generate()
+        fails fast instead of silently returning an empty output."""
+        cfg, model, params = small_lm
+        eng = ServingEngine(cfg, params, ServeConfig(max_batch=1, max_len=8))
+        with pytest.raises(ValueError, match="cache"):
+            eng.generate([Request(uid=0, prompt=list(range(12)))])
+
+    def test_default_config_not_shared(self, small_lm):
+        cfg, model, params = small_lm
+        e1, e2 = Engine(cfg, params), Engine(cfg, params)
+        e1.scfg.max_len = 999
+        assert e2.scfg.max_len != 999
 
 
 class TestPacked:
-    def test_packed_conversion_preserves_logits(self):
-        cfg = get_config("qwen1.5-0.5b").reduced().replace(
-            compute_dtype="float32", param_dtype="float32").with_quant(Q.QAT)
-        model = build_model(cfg)
-        params = model.init(jax.random.PRNGKey(0))
+    def test_packed_conversion_preserves_logits(self, qat_lm):
+        cfg, model, params = qat_lm
         toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
         logits_qat, _, _ = model.apply(params, toks)
 
