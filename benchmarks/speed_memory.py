@@ -105,6 +105,55 @@ def continuous_batching_toks(n_requests: int = 6, max_tokens: int = 8) -> dict:
     return out
 
 
+def paged_kv_footprint(n_requests: int = 10, max_tokens: int = 8) -> dict:
+    """KV-cache bytes + tok/s, contiguous vs paged, on a mixed-length
+    workload (short chats next to one long prompt).  Contiguous must size
+    every slot for the longest request; the paged pool holds only the blocks
+    the workload actually touches — the KV-side analogue of the paper's
+    packed-weight memory saving."""
+    from repro.models import build_model
+    from repro.serving.api import SamplingParams
+    from repro.serving.engine import Engine, ServeConfig
+
+    cfg = get_config("qwen1.5-0.5b").reduced(layers=2).replace(
+        compute_dtype="float32", param_dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    max_len, bs = 96, 8
+    # mixed depths: mostly short prompts, one near-capacity straggler
+    lens = [int(rng.integers(4, 16)) for _ in range(n_requests - 1)]
+    lens.append(max_len - max_tokens - 1)
+    prompts = [rng.integers(0, 64, n).tolist() for n in lens]
+    # blocks for the observed peak: 4 slots, average footprint well under
+    # max_len; generous +4 slack so only admission order changes, not outputs
+    peak_tokens = sum(sorted(n + max_tokens for n in lens)[-4:])
+    num_blocks = 1 + (-(-peak_tokens // bs)) + 4
+
+    def serve(scfg) -> dict:
+        eng = Engine(cfg, params, scfg)
+        sp = SamplingParams(max_tokens=max_tokens)
+        reqs = [eng.submit(p, sp) for p in prompts]
+        t0 = time.perf_counter()
+        for _ in eng.stream():
+            pass
+        dt = time.perf_counter() - t0
+        n = sum(r.num_generated for r in reqs)
+        return {"kv_cache_bytes": eng.kv_cache_bytes(), "tokens": n,
+                "wall_s": dt, "tok_per_s": n / max(dt, 1e-9),
+                "outputs": [r.output_tokens for r in reqs]}
+
+    contig = serve(ServeConfig(max_batch=4, max_len=max_len, paged=False))
+    paged = serve(ServeConfig(max_batch=4, max_len=max_len, paged=True,
+                              kv_block_size=bs, num_kv_blocks=num_blocks))
+    assert paged["outputs"] == contig["outputs"], \
+        "paged engine diverged from contiguous greedy outputs"
+    for v in (contig, paged):
+        v.pop("outputs")
+    return {"contiguous": contig, "paged": paged,
+            "kv_bytes_ratio": contig["kv_cache_bytes"]
+            / max(paged["kv_cache_bytes"], 1)}
+
+
 def decode_memory_term() -> dict:
     """weight-bytes component of the decode_32k memory term, bf16 vs packed."""
     out = {}
@@ -127,6 +176,7 @@ def main(force: bool = False):
         "kernels": kernel_times(),
         "decode": decode_memory_term(),
         "continuous_batching": continuous_batching_toks(),
+        "paged_kv": paged_kv_footprint(),
     }, force)
     print("\n== Fig 1 (memory footprint / decode weight traffic) ==")
     for arch, v in res["footprint"].items():
@@ -148,6 +198,19 @@ def main(force: bool = False):
                   f"= {v['tok_per_s']:.1f} tok/s")
             emit(f"speed_memory/cb_{mode}_tok_s", v["tok_per_s"],
                  "interpret-mode")
+    pk = res.get("paged_kv", {})
+    if pk:
+        print("paged KV cache (mixed-length workload, reduced cfg):")
+        for mode in ("contiguous", "paged"):
+            v = pk[mode]
+            print(f"  {mode:10s} kv {v['kv_cache_bytes'] / 2 ** 10:.0f} KiB  "
+                  f"{v['tok_per_s']:.1f} tok/s")
+            emit(f"speed_memory/kv_{mode}_bytes", v["kv_cache_bytes"],
+                 "mixed-length")
+        print(f"  kv-bytes ratio (contiguous/paged) = "
+              f"{pk['kv_bytes_ratio']:.2f}x")
+        emit("speed_memory/kv_bytes_ratio", pk["kv_bytes_ratio"],
+             "contiguous/paged")
     return res
 
 

@@ -55,6 +55,10 @@ def run_cell(arch: str, shape: str, multi_pod: bool, step_override=None,
 
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            # jaxlib API drift: newer versions return one flat dict, older
+            # ones a list with one per-executable dict
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
     finally:
         shlib.set_plan(None)

@@ -39,8 +39,17 @@ def build_engine(args) -> Engine:
         print("[packed] ternary 2-bit weights")
     scfg = ServeConfig(max_batch=args.max_batch,
                        max_len=args.prompt_len + args.max_tokens,
-                       temperature=args.temperature, top_p=args.top_p)
-    return Engine(cfg, params, scfg)
+                       temperature=args.temperature, top_p=args.top_p,
+                       # None = auto: paged for attention-only stacks,
+                       # contiguous for SSM/hybrid/cross caches
+                       paged=False if args.contiguous_kv else None,
+                       kv_block_size=args.kv_block_size,
+                       num_kv_blocks=args.num_kv_blocks)
+    eng = Engine(cfg, params, scfg)
+    mode = (f"paged bs={scfg.kv_block_size} blocks={scfg.pool_blocks()}"
+            if eng.paged else "contiguous")
+    print(f"[kv-cache] {mode}, {eng.kv_cache_bytes() / 2**20:.2f} MiB")
+    return eng
 
 
 def run_closed_loop(eng: Engine, args) -> None:
@@ -119,6 +128,14 @@ def main(argv=None):
                     help="print tokens as they are generated")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="open-loop Poisson arrivals (req/s); 0 = closed loop")
+    ap.add_argument("--contiguous-kv", action="store_true",
+                    help="per-slot contiguous KV regions instead of the "
+                         "paged block pool")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="tokens per paged-KV block")
+    ap.add_argument("--num-kv-blocks", type=int, default=None,
+                    help="paged-KV pool size incl. trash block "
+                         "(default: full capacity)")
     args = ap.parse_args(argv)
 
     eng = build_engine(args)

@@ -99,5 +99,9 @@ class EncDecLM:
         return self._decoder().cache_axes()
 
     def decode_step(self, p: Params, token: jax.Array, cache: Params,
-                    cache_index: jax.Array) -> Tuple[jax.Array, Params]:
-        return self._decoder().decode_step(p["decoder"], token, cache, cache_index)
+                    cache_index: jax.Array,
+                    block_tables: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, Params]:
+        return self._decoder().decode_step(p["decoder"], token, cache,
+                                           cache_index,
+                                           block_tables=block_tables)

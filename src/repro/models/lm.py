@@ -165,17 +165,23 @@ class CausalLM:
         return cache
 
     def decode_step(self, p: Params, token: jax.Array, cache: Params,
-                    cache_index: jax.Array) -> Tuple[jax.Array, Params]:
+                    cache_index: jax.Array,
+                    block_tables: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, Params]:
         """token [B] int32 -> (fp32 logits [B, V], new cache).
 
         ``cache_index`` may be a scalar (uniform-depth batch) or an int32 [B]
         vector of per-row cache positions — the continuous-batching scheduler
         (serving/scheduler.py) keeps rows at different prompt/generation
-        depths in one decode batch."""
+        depths in one decode batch.  ``block_tables`` (int32 [B, L]) selects
+        the paged KV layout: the cache is a shared block pool per layer and
+        row ``b``'s position ``i`` lives in pool block
+        ``block_tables[b, i // block_size]`` (serving/paged.py)."""
         c = self.cfg
         x = self._embed().apply(p["embed"], token[:, None])
         if c.embed_scale:
             x = x * jnp.sqrt(c.d_model).astype(x.dtype)
-        x, cache = self._stack().decode(p["stack"], x, cache, cache_index)
+        x, cache = self._stack().decode(p["stack"], x, cache, cache_index,
+                                        block_tables=block_tables)
         x = self._final_norm().apply(p["final_norm"], x)
         return self._logits(p, x)[:, 0], cache

@@ -275,14 +275,24 @@ class Attention:
 
     def decode(self, p: Params, x: jax.Array, cache: Params,
                cache_index: jax.Array,
-               memory: Optional[jax.Array] = None) -> Tuple[jax.Array, Params]:
+               memory: Optional[jax.Array] = None,
+               block_tables: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, Params]:
         """x: [B, 1, D]; cache: {"k","v"} [B, Hkv, Smax, Dh] (attention
         layout — no per-step transpose of the cache); returns (y, cache).
 
         ``cache_index`` is a scalar (all rows at the same depth) or an int32
         [B] vector of per-row write positions — continuous batching runs rows
         at different sequence depths in one step; each row writes its KV at
-        its own index and attends only to its own positions <= index."""
+        its own index and attends only to its own positions <= index.
+
+        ``block_tables`` (int32 [B, L]) switches the cache to the *paged*
+        layout: {"k","v"} become shared pools [num_blocks, Hkv, bs, Dh] and
+        logical position ``i`` of row ``b`` lives at pool block
+        ``block_tables[b, i // bs]``, offset ``i % bs``.  The row writes its
+        new KV into its owned block and attends over the gather of its table
+        (position-masked, so trash-block garbage beyond ``index`` is never
+        mixed in)."""
         b = x.shape[0]
         idx = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32).reshape(-1),
                                (b,))
@@ -292,6 +302,9 @@ class Attention:
             # cross-attention cache holds the projected encoder memory (static).
             k, v = cache["k"], cache["v"]
             mask = None
+        elif block_tables is not None:
+            k, v, cache, mask = self._paged_update(
+                p, x, cache, idx, block_tables, positions)
         else:
             k_new, v_new = self._project_kv(p, x, positions)
             k_new = k_new.transpose(0, 2, 1, 3)  # [b,kv,1,dh] (tiny)
@@ -312,6 +325,43 @@ class Attention:
         if self.subln:
             flat = self._subln().apply(p["subln"], flat)
         return self._wo().apply(p["wo"], flat), cache
+
+    def _paged_update(self, p: Params, x: jax.Array, cache: Params,
+                      idx: jax.Array, block_tables: jax.Array,
+                      positions: jax.Array):
+        """Scatter the new KV into the row's owned pool block, then gather
+        the row's block table into a contiguous [B, Hkv, L*bs, Dh] window.
+
+        Idle rows point every table entry at the trash block (block 0); their
+        scatter collides only with other idle rows and their gathered garbage
+        is discarded by the caller, so no occupancy branch is traced."""
+        b = idx.shape[0]
+        pool_k, pool_v = cache["k"], cache["v"]   # [N, Hkv, bs, Dh]
+        bs = pool_k.shape[2]
+        nlog = block_tables.shape[1]
+        k_new, v_new = self._project_kv(p, x, positions)   # [B, 1, Hkv, Dh]
+        k_new, v_new = k_new[:, 0], v_new[:, 0]            # [B, Hkv, Dh]
+        # the caller may pass a table truncated to the active batch's depth
+        # (engine buckets the width to bound retraces); idle rows park at
+        # max_len - 1, beyond such a window — their rows are all trash
+        # block, so clamping keeps their (discarded) write deterministic
+        # instead of relying on platform-defined out-of-bounds gather
+        blk = jnp.minimum(idx // bs, nlog - 1)
+        bid = jnp.take_along_axis(block_tables, blk[:, None], 1)[:, 0]
+        off = idx % bs
+        # advanced indices split by the Hkv slice -> result dims [B, Hkv, Dh]
+        pool_k = pool_k.at[bid, :, off].set(k_new.astype(pool_k.dtype))
+        pool_v = pool_v.at[bid, :, off].set(v_new.astype(pool_v.dtype))
+        k = pool_k[block_tables]                  # [B, L, Hkv, bs, Dh]
+        v = pool_v[block_tables]
+        k = k.transpose(0, 2, 1, 3, 4).reshape(
+            b, self.n_kv_heads, nlog * bs, self.head_dim)
+        v = v.transpose(0, 2, 1, 3, 4).reshape(
+            b, self.n_kv_heads, nlog * bs, self.head_dim)
+        t = nlog * bs
+        mask = (jnp.arange(t)[None, :] <= idx[:, None])[:, None, None, :]
+        mask = jnp.broadcast_to(mask, (b, 1, 1, t))
+        return k, v, {"k": pool_k, "v": pool_v}, mask
 
     def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
         shape = (batch, self.n_kv_heads, max_len, self.head_dim)

@@ -200,11 +200,14 @@ class Block:
         return ax
 
     def decode(self, p: Params, x: jax.Array, cache: Params,
-               cache_index: jax.Array) -> Tuple[jax.Array, Params]:
+               cache_index: jax.Array,
+               block_tables: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, Params]:
         new_cache: Params = {}
         if self.spec.mixer in ("attn", "attn_cross"):
             h, kv = self.attn.decode(p["attn"], self.norm1.apply(p["norm1"], x),
-                                     cache["attn"], cache_index)
+                                     cache["attn"], cache_index,
+                                     block_tables=block_tables)
             x = x + h
             new_cache["attn"] = kv
         if self.spec.mixer in ("cross", "attn_cross"):
@@ -342,8 +345,13 @@ class Stack:
                                       is_leaf=lambda t: isinstance(t, tuple))
 
     def decode(self, p: Params, x: jax.Array, cache: Params,
-               cache_index: jax.Array) -> Tuple[jax.Array, Params]:
-        """cache_index: scalar or per-row [B] vector (mixed-depth batches)."""
+               cache_index: jax.Array,
+               block_tables: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, Params]:
+        """cache_index: scalar or per-row [B] vector (mixed-depth batches);
+        block_tables: int32 [B, L] selects the paged-pool cache layout (the
+        table is scan-invariant — every repeat indexes its own pool leaf with
+        the same logical->physical block mapping)."""
         blocks = self.blocks()
 
         def body(h, xs):
@@ -351,7 +359,8 @@ class Stack:
             new_caches = {}
             for i, blk in enumerate(blocks):
                 h, nc = blk.decode(rep_params[f"pos{i}"], h,
-                                   rep_cache[f"pos{i}"], cache_index)
+                                   rep_cache[f"pos{i}"], cache_index,
+                                   block_tables=block_tables)
                 new_caches[f"pos{i}"] = nc
             return h, new_caches
 

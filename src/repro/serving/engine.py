@@ -30,8 +30,17 @@ serving/scheduler.py):
     step; ``max_tokens`` counts generated tokens (the first prefill-sampled
     token included), EOS stops unless ``ignore_eos``.
 
-Known gaps recorded in ROADMAP.md Open items: no paged KV (a slot owns a
-contiguous max_len region), no prefix-cache sharing, admissions prefill one
+KV-cache layout is selectable: ``ServeConfig(paged=True)`` (the default for
+attention-only models) replaces the per-slot contiguous [slots, max_len]
+regions with one block pool per layer [num_kv_blocks, Hkv, block_size, Dh]
+plus per-slot block tables (serving/paged.py) — resident KV bytes track the
+actual token footprint instead of worst-case capacity, admission waits on
+blocks as well as slots, and pool exhaustion mid-decode preempts a slot
+(recompute on re-admission).  ``paged=False`` keeps the contiguous path; both
+produce token-for-token identical greedy outputs (tests/test_paged_kv.py).
+
+Known gaps recorded in ROADMAP.md Open items: no prefix-cache sharing (the
+block allocator's refcounts are the stub for it), admissions prefill one
 request at a time.
 """
 from __future__ import annotations
@@ -47,8 +56,9 @@ from repro.models import build_model
 from repro.models.base import ModelConfig
 from repro.serving.api import (FinishReason, GenerationRequest, SamplingParams,
                                StepOutput, make_request)
+from repro.serving.paged import BlockAllocator
 from repro.serving.sampling import sample_batch
-from repro.serving.scheduler import Scheduler
+from repro.serving.scheduler import Scheduler, bucket_length
 
 
 @dataclasses.dataclass
@@ -62,6 +72,38 @@ class ServeConfig:
     seed: int = 0                    # base for per-request PRNG derivation
     prefill_bucket_min: int = 8      # smallest prompt bucket (powers of two up)
     cache_dtype: str = "float32"     # bfloat16 on real HW
+    # -- paged KV cache (serving/paged.py) --------------------------------
+    # block-pooled KV cache: True / False force it on/off; None (default)
+    # auto-selects — paged for attention-only stacks, contiguous for models
+    # with SSM / cross-attention caches (which have no paged layout)
+    paged: Optional[bool] = None
+    kv_block_size: int = 16          # tokens per KV block
+    # pool size incl. the reserved trash block; None = full capacity
+    # (max_batch slots at max_len depth — no admission ever waits on blocks)
+    num_kv_blocks: Optional[int] = None
+
+    def __post_init__(self):
+        if self.prefill_bucket_min < 1:
+            raise ValueError(
+                f"prefill_bucket_min={self.prefill_bucket_min} must be >= 1 "
+                "(bucket_length would loop forever)")
+        if self.kv_block_size < 1:
+            raise ValueError(f"kv_block_size={self.kv_block_size} must be >= 1")
+        if self.num_kv_blocks is not None and self.num_kv_blocks < 2:
+            raise ValueError(
+                f"num_kv_blocks={self.num_kv_blocks}: need the reserved trash "
+                "block plus at least one allocatable block")
+
+    @property
+    def blocks_per_slot(self) -> int:
+        """Logical blocks covering one slot's max_len positions."""
+        return -(-self.max_len // self.kv_block_size)
+
+    def pool_blocks(self) -> int:
+        """Physical pool size (trash block + allocatable blocks)."""
+        if self.num_kv_blocks is not None:
+            return self.num_kv_blocks
+        return 1 + self.max_batch * self.blocks_per_slot
 
 
 @dataclasses.dataclass
@@ -83,22 +125,40 @@ class Engine:
         self.cfg, self.params = cfg, params
         self.scfg = scfg if scfg is not None else ServeConfig()
         self.model = build_model(cfg)
+        attn_only = all(s.mixer == "attn" for s in cfg.resolved_pattern())
+        if self.scfg.paged and not attn_only:
+            raise ValueError(
+                "paged KV cache supports attention-only decoder stacks; "
+                f"config {cfg.name!r} has mixers "
+                f"{[s.mixer for s in cfg.resolved_pattern()]} — pass "
+                "ServeConfig(paged=False) for the contiguous cache")
+        self.paged = attn_only if self.scfg.paged is None else self.scfg.paged
+        self.allocator = (BlockAllocator(self.scfg.pool_blocks(),
+                                         self.scfg.kv_block_size)
+                          if self.paged else None)
         self.sched = Scheduler(self.scfg.max_batch, self.scfg.max_len,
-                               self.scfg.eos_id, self.scfg.prefill_bucket_min)
+                               self.scfg.eos_id, self.scfg.prefill_bucket_min,
+                               allocator=self.allocator)
         # donate the cache (and key) buffers: step/admission outputs replace
         # them, so XLA can update in place instead of copying the whole
-        # [slots, max_len] cache every generated token (no-op on backends
-        # without donation support, e.g. CPU)
+        # cache (contiguous [slots, max_len] regions or the paged block pool)
+        # every generated token (no-op on backends without donation support,
+        # e.g. CPU)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(2, 4))
         self._prefill = jax.jit(self._prefill_impl,   # retraced per bucket
                                 donate_argnums=(3,))
         self._insert = jax.jit(self._insert_impl,     # retraced per bucket
                                donate_argnums=(0,))
+        self._insert_paged = jax.jit(self._insert_paged_impl,
+                                     donate_argnums=(0,))
         self._uid_counter = 0
         self._requests: Dict[int, GenerationRequest] = {}   # uid -> in flight
-        # live decode state, allocated lazily on first admission
+        # live decode state, allocated lazily on first admission; idle rows
+        # hold pad_id so their (discarded) compute never depends on a dead
+        # request's last token
         self._cache = None
-        self._tokens = np.zeros((self.scfg.max_batch,), np.int32)
+        self._tokens = np.full((self.scfg.max_batch,), self.scfg.pad_id,
+                               np.int32)
         self._keys = None                             # uint32 [slots, 2]
 
     # -- jitted cores -----------------------------------------------------------
@@ -129,10 +189,13 @@ class Engine:
                              jnp.reshape(temp, (1,)), jnp.reshape(top_p, (1,)))
         return first, cache, key
 
-    def _decode_impl(self, params, tokens, cache, index, keys, temps, top_ps):
+    def _decode_impl(self, params, tokens, cache, index, keys, temps, top_ps,
+                     block_tables=None):
         """One continuous-batching step: tokens [B], per-row cache index [B],
-        per-row PRNG keys [B, 2] and sampling params [B]."""
-        logits, cache = self.model.decode_step(params, tokens, cache, index)
+        per-row PRNG keys [B, 2] and sampling params [B].  ``block_tables``
+        (int32 [B, L]) selects the paged-pool cache layout."""
+        logits, cache = self.model.decode_step(params, tokens, cache, index,
+                                               block_tables=block_tables)
         split = jax.vmap(jax.random.split)(keys)       # [B, 2, 2]
         new_keys, subs = split[:, 0], split[:, 1]
         nxt = sample_batch(subs, logits, temps, top_ps)
@@ -146,6 +209,27 @@ class Engine:
             return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
                                                 start)
         return jax.tree_util.tree_map(put, cache, pcache)
+
+    def _insert_paged_impl(self, pool, pcache, block_ids):
+        """Scatter a batch-of-one prefill cache into the slot's allocated
+        pool blocks.  ``block_ids`` int32 [nb] maps the bucket's logical
+        blocks to pool blocks; entries past the slot's allocation point at
+        the trash block (the bucket may round past the allocated coverage —
+        those positions are pad zeros nothing will attend to).
+
+        Leaves: pool [R, N, Hkv, bs, Dh], pcache [R, 1, Hkv, bucket, Dh]
+        (R = scanned stack repeats)."""
+        nb = block_ids.shape[0]
+
+        def put(big, small):
+            bs = big.shape[-2]
+            r, _, hkv, bucket, dh = small.shape
+            s = small[:, 0]                            # [R, Hkv, bucket, Dh]
+            s = jnp.pad(s, ((0, 0), (0, 0), (0, nb * bs - bucket), (0, 0)))
+            s = s.reshape(r, hkv, nb, bs, dh).transpose(0, 2, 1, 3, 4)
+            return big.at[:, block_ids].set(s.astype(big.dtype))
+
+        return jax.tree_util.tree_map(put, pool, pcache)
 
     # -- request lifecycle --------------------------------------------------------
 
@@ -164,6 +248,11 @@ class Engine:
         return self.submit_request(req)
 
     def submit_request(self, req: GenerationRequest) -> GenerationRequest:
+        if req.uid in self._requests:
+            raise ValueError(
+                f"uid {req.uid} already belongs to an in-flight request; "
+                "reusing it would orphan that request's callback and finish "
+                "bookkeeping")
         self._requests[req.uid] = req
         self.sched.submit(req)
         return req
@@ -184,14 +273,30 @@ class Engine:
         active = self.sched.active_slots()
         if active:
             sc = self.sched
+            bt = None
+            if self.paged:
+                # gather only the blocks covering the deepest active row
+                # (power-of-two widths bound retraces, like prefill
+                # buckets) — per-step KV gather bandwidth then tracks the
+                # batch's actual depth instead of max_len
+                depth = int(sc.positions[active].max()) + 1
+                width = bucket_length(self.allocator.blocks_for(depth), 1,
+                                      sc.block_tables.shape[1])
+                bt = jnp.asarray(sc.block_tables[:, :width])
             tok, self._cache, self._keys = self._decode(
                 self.params, jnp.asarray(self._tokens), self._cache,
                 jnp.asarray(sc.positions), self._keys,
-                jnp.asarray(sc.temperatures), jnp.asarray(sc.top_ps))
+                jnp.asarray(sc.temperatures), jnp.asarray(sc.top_ps), bt)
             tok_np = np.asarray(tok)
             self._tokens = tok_np.copy()
             for slot in active:
                 outs.append(self.sched.record(slot, int(tok_np[slot])))
+
+        # any slot freed this step (finish, abort, or paged preemption) must
+        # decode the pad token while idle, not the dead request's last token
+        for slot, req in enumerate(self.sched.slots):
+            if req is None:
+                self._tokens[slot] = self.scfg.pad_id
 
         for out in outs:
             req = self._requests.get(out.uid)
@@ -224,14 +329,22 @@ class Engine:
         here instead of silently returning an empty output."""
         legacy: Dict[int, Request] = {}
         handles: Dict[int, GenerationRequest] = {}
+
+        def rejected(prompt):
+            if not prompt or len(prompt) + 1 > self.scfg.max_len:
+                return True
+            return (self.allocator is not None and
+                    self.allocator.blocks_for(len(prompt) + 1)
+                    > self.allocator.allocatable)
+
         bad = [r.uid for r in requests
-               if not isinstance(r, GenerationRequest)
-               and (not r.prompt or len(r.prompt) + 1 > self.scfg.max_len)]
+               if not isinstance(r, GenerationRequest) and rejected(r.prompt)]
         if bad:
             raise ValueError(
                 f"prompts of requests {bad} are empty or exceed the per-slot "
                 f"cache capacity (ServeConfig.max_len={self.scfg.max_len}, "
-                "which counts prompt + generated tokens)")
+                "which counts prompt + generated tokens) or the paged KV "
+                "pool (ServeConfig.num_kv_blocks)")
         for r in requests:
             if isinstance(r, GenerationRequest):
                 self.submit_request(r)
@@ -254,10 +367,24 @@ class Engine:
 
     def _ensure_state(self):
         if self._cache is None:
-            self._cache = self.model.init_cache(
-                self.params, self.scfg.max_batch, self.scfg.max_len,
-                jnp.dtype(self.scfg.cache_dtype))
+            if self.paged:
+                # the block pool *is* an init_cache with batch=num_blocks and
+                # per-"row" length block_size: [R, N, Hkv, bs, Dh] per layer
+                self._cache = self.model.init_cache(
+                    self.params, self.scfg.pool_blocks(),
+                    self.scfg.kv_block_size, jnp.dtype(self.scfg.cache_dtype))
+            else:
+                self._cache = self.model.init_cache(
+                    self.params, self.scfg.max_batch, self.scfg.max_len,
+                    jnp.dtype(self.scfg.cache_dtype))
             self._keys = jnp.zeros((self.scfg.max_batch, 2), jnp.uint32)
+
+    def kv_cache_bytes(self) -> int:
+        """Resident KV-cache bytes of the live decode state (the paged pool
+        or the contiguous [slots, max_len] regions)."""
+        self._ensure_state()
+        return sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(
+            self._cache))
 
     def _request_key(self, req: GenerationRequest) -> jax.Array:
         seed = req.params.seed
@@ -266,24 +393,40 @@ class Engine:
         return jax.random.PRNGKey(seed)
 
     def _admit(self, slot: int, req: GenerationRequest) -> StepOutput:
-        """Prefill the prompt on a batch-of-one bucketed cache, insert it
-        into the slot's row, and record the first sampled token."""
+        """Prefill the prompt on a batch-of-one bucketed contiguous cache,
+        insert it into the slot's cache (contiguous row or allocated pool
+        blocks), and record the first sampled token.  A preempted request
+        re-admits with its generated tokens appended to the prefill, resuming
+        where it left off (recompute preemption)."""
         self._ensure_state()
         sc, scfg = self.sched, self.scfg
-        plen = len(req.prompt)
+        tokens = list(req.prompt) + list(req.output_tokens)
+        plen = len(tokens)
         bucket = sc.bucket(plen)
         toks = np.full((1, bucket), scfg.pad_id, np.int32)
-        toks[0, :plen] = req.prompt
+        toks[0, :plen] = tokens
         pcache = self.model.init_cache(self.params, 1, bucket,
                                        jnp.dtype(scfg.cache_dtype))
         first, pcache, key = self._prefill(
             self.params, jnp.asarray(toks), jnp.int32(plen), pcache,
             self._request_key(req), jnp.float32(req.params.temperature),
             jnp.float32(req.params.top_p))
-        self._cache = self._insert(self._cache, pcache, jnp.int32(slot))
+        if self.paged:
+            # the slot's block-table row is already owned-ids followed by
+            # trash padding, so bucket blocks past the allocation land in
+            # the trash block (their positions are pad zeros)
+            nb = self.allocator.blocks_for(bucket)
+            ids = sc.block_tables[slot][:nb]
+            self._cache = self._insert_paged(self._cache, pcache,
+                                             jnp.asarray(ids))
+        else:
+            self._cache = self._insert(self._cache, pcache, jnp.int32(slot))
         self._keys = self._keys.at[slot].set(key)
         self._tokens[slot] = int(first[0])
-        return self.sched.record(slot, int(first[0]))
+        out = self.sched.record(slot, int(first[0]))
+        if self.sched.slots[slot] is None:      # finished (or preempted)
+            self._tokens[slot] = scfg.pad_id    # at the first token
+        return out
 
 
 # retained name: the pre-continuous-batching engine class

@@ -1,0 +1,92 @@
+"""Block-pooled paged KV cache: host-side allocator and block tables.
+
+Instead of every decode slot owning a contiguous ``max_len`` KV region
+(`n_slots * max_len` positions resident whether used or not), each attention
+layer's cache is one shared pool of fixed-size blocks
+``[num_blocks, Hkv, block_size, Dh]`` and every slot holds an int32 *block
+table* mapping logical block ``j`` (positions ``j*bs .. (j+1)*bs - 1``) to a
+pool block id.  The scheduler allocates blocks on admission (enough to cover
+the prompt plus the first decode write), grows a slot one block at a time as
+decoding advances, and returns blocks to the free list when the request
+finishes, aborts, or is preempted — so resident KV bytes track the *actual*
+token footprint of the batch, the paper's serving-memory story applied to
+the cache instead of the weights.
+
+Block 0 is reserved as the **trash block**: idle decode rows (and insert
+writes past a slot's allocation) are pointed at it, so the jitted decode step
+never needs a branch on slot occupancy; trash contents are never attended by
+a live row because live rows only gather their own exclusively-owned blocks.
+
+``refcounts`` is the prefix-cache-sharing entry point (ROADMAP): a shared
+prompt prefix becomes shared block-table entries with ``share()`` bumping the
+count and ``free()`` only recycling a block when its count hits zero.
+Nothing calls ``share()`` yet — the allocator is shaped for it, the radix
+prefix index on top is the follow-up PR.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, List, Optional, Sequence
+
+import numpy as np
+
+TRASH_BLOCK = 0
+
+
+class BlockAllocator:
+    """Free-list allocator over a fixed pool of KV blocks."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError(
+                f"num_blocks={num_blocks}: need at least the reserved trash "
+                "block plus one allocatable block")
+        if block_size < 1:
+            raise ValueError(f"block_size={block_size} must be >= 1")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # per-block reference counts; the prefix-sharing stub.  Block 0 (the
+        # trash block) is pinned with refcount 1 and never enters the free
+        # list.
+        self.refcounts = np.zeros((num_blocks,), np.int32)
+        self.refcounts[TRASH_BLOCK] = 1
+        self._free: Deque[int] = deque(range(1, num_blocks))
+
+    # -- capacity ------------------------------------------------------------
+
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def allocatable(self) -> int:
+        """Total blocks a single request could ever hold."""
+        return self.num_blocks - 1
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to cover ``n_tokens`` cache positions."""
+        return -(-n_tokens // self.block_size)
+
+    # -- alloc / free ----------------------------------------------------------
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` blocks (refcount 1 each); None if fewer are free —
+        callers treat that as 'wait', never as partial allocation."""
+        if n > len(self._free):
+            return None
+        ids = [self._free.popleft() for _ in range(n)]
+        self.refcounts[ids] = 1
+        return ids
+
+    def share(self, block_id: int) -> int:
+        """Prefix-sharing stub: add a reference to an allocated block."""
+        assert self.refcounts[block_id] > 0, f"share() on free block {block_id}"
+        self.refcounts[block_id] += 1
+        return int(self.refcounts[block_id])
+
+    def free(self, ids: Sequence[int]) -> None:
+        for b in ids:
+            assert b != TRASH_BLOCK, "free() on the reserved trash block"
+            assert self.refcounts[b] > 0, f"double free of block {b}"
+            self.refcounts[b] -= 1
+            if self.refcounts[b] == 0:
+                self._free.append(b)

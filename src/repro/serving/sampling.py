@@ -27,6 +27,10 @@ def sample_batch(keys: jax.Array, logits: jax.Array, temperature: jax.Array,
     sorted_probs = jnp.sort(probs, axis=-1)[..., ::-1]
     csum = jnp.cumsum(sorted_probs, axis=-1)
     cutoff_count = jnp.sum(csum < top_p[:, None], axis=-1, keepdims=True) + 1
+    # top_p == 1.0 + float rounding can leave every csum < top_p, making
+    # cutoff_count == V + 1; clamp so the take_along_axis index stays in
+    # bounds (out-of-range gathers are silently clamped platform-dependently)
+    cutoff_count = jnp.minimum(cutoff_count, probs.shape[-1])
     threshold = jnp.take_along_axis(sorted_probs, cutoff_count - 1, axis=-1)
     masked = jnp.where(probs >= threshold, probs, 0.0)
     masked = masked / jnp.sum(masked, axis=-1, keepdims=True)

@@ -1,17 +1,31 @@
 """Slot-based continuous-batching scheduler (host-side bookkeeping).
 
-The decode batch is a fixed array of ``n_slots`` rows over one preallocated
-cache of per-slot capacity ``max_len`` (prompt + generated tokens).  Each slot
+The decode batch is a fixed array of ``n_slots`` rows.  Each slot
 independently tracks which request occupies it and the row's cache position,
 so rows at different sequence depths coexist in a single jitted decode step —
 the engine passes a per-row int32 index vector down to the attention cache
 update (nn/attention.py:Attention.decode).
 
+Cache layouts (engine-selected):
+
+* **contiguous** — one preallocated cache region of per-slot capacity
+  ``max_len``; the slot index is the cache row.
+* **paged** — the scheduler additionally owns a :class:`~repro.serving.paged.
+  BlockAllocator` and a per-slot int32 block table.  Admission allocates
+  enough blocks to cover the prompt plus the first decode write and *waits on
+  blocks as well as slots* (strict FIFO: a blocked queue head is not
+  overtaken); ``record`` grows the slot one block at a time as the write
+  position advances; finishing frees the blocks.  If the pool is exhausted
+  mid-decode, the slot is **preempted**: its blocks are freed and the request
+  returns to the front of the queue, to be re-admitted later by re-prefilling
+  prompt + generated-so-far (vLLM-style recompute preemption — greedy decoding
+  resumes token-for-token; stochastic requests restart their PRNG stream).
+
 Lifecycle per engine step:
   1. ``admit()`` moves FIFO-waiting requests into free slots (one prefill per
      admission, bucketed by prompt length to bound recompilation). Prompts
-     that cannot fit (len(prompt) + 1 > max_len) finish immediately as
-     ABORTED.
+     that cannot fit (len(prompt) + 1 > max_len, or more blocks than the
+     whole pool) finish immediately as ABORTED.
   2. the engine runs one decode step over all slots; for every *active* slot
      it calls ``record(slot, token)``, which appends the token, applies the
      request's stop conditions (EOS unless ignore_eos, max_tokens counted as
@@ -20,8 +34,9 @@ Lifecycle per engine step:
 
 The scheduler owns the per-slot sampling-parameter vectors (temperature,
 top-p) that the engine feeds the jitted sampler; idle rows decode a pad token
-greedily at the last cache position and their output is discarded (their
-stale cache write is overwritten before any real row can attend to it).
+greedily at the last cache position and their output is discarded (contiguous:
+their stale cache write is overwritten before any real row can attend to it;
+paged: their block table points every entry at the trash block).
 """
 from __future__ import annotations
 
@@ -32,25 +47,40 @@ import numpy as np
 
 from repro.serving.api import (FinishReason, GenerationRequest, SamplingParams,
                                StepOutput)
+from repro.serving.paged import BlockAllocator, TRASH_BLOCK
 
 
 def bucket_length(n: int, lo: int, hi: int) -> int:
     """Round ``n`` up to a power of two in [lo, hi] (bounds recompiles to
     O(log(max_len)) prefill shapes)."""
+    if lo < 1:
+        raise ValueError(f"bucket lower bound {lo} must be >= 1")
     b = lo
     while b < n:
         b *= 2
     return min(b, hi)
 
 
+def total_len(req: GenerationRequest) -> int:
+    """Tokens the request's cache must currently hold: the prompt plus every
+    generated token (nonzero generated happens on preemption re-admission)."""
+    return len(req.prompt) + req.num_generated
+
+
 class Scheduler:
     def __init__(self, n_slots: int, max_len: int, eos_id: int,
-                 bucket_min: int = 8):
+                 bucket_min: int = 8,
+                 allocator: Optional[BlockAllocator] = None):
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.bucket_min = bucket_min
         self.waiting: Deque[GenerationRequest] = deque()
+        # uid -> arrival sequence number; preemption reinserts by arrival
+        # order so an older request is never overtaken (strict FIFO even
+        # when several slots preempt in one step)
+        self._seq = 0
+        self._arrival: dict = {}
         self.slots: List[Optional[GenerationRequest]] = [None] * n_slots
         # per-slot cache index of the *next* decode write; invariant for an
         # occupied slot: position = prompt_len + num_generated - 1 (the first
@@ -60,10 +90,23 @@ class Scheduler:
         self.positions = np.full((n_slots,), max_len - 1, np.int32)
         self.temperatures = np.zeros((n_slots,), np.float32)
         self.top_ps = np.ones((n_slots,), np.float32)
+        # -- paged state (allocator is None on the contiguous path) ----------
+        self.allocator = allocator
+        if allocator is not None:
+            self.block_tables = np.full(
+                (n_slots, allocator.blocks_for(max_len)), TRASH_BLOCK,
+                np.int32)
+            self.block_ids: List[List[int]] = [[] for _ in range(n_slots)]
+        else:
+            self.block_tables = None
+            self.block_ids = None
 
     # -- queue / slot management ---------------------------------------------
 
     def submit(self, req: GenerationRequest) -> None:
+        if req.uid not in self._arrival:
+            self._arrival[req.uid] = self._seq
+            self._seq += 1
         self.waiting.append(req)
 
     def has_work(self) -> bool:
@@ -79,24 +122,51 @@ class Scheduler:
                              List[StepOutput]]:
         """Fill free slots from the waiting queue (FIFO).  Returns the newly
         admitted (slot, request) pairs plus StepOutputs for any request
-        rejected up front (empty prompt, or prompt too long for the per-slot
-        cache)."""
+        rejected up front (empty prompt, prompt too long for the per-slot
+        cache, or needing more blocks than the whole pool holds).  On the
+        paged path a queue head that merely has to *wait* for blocks stays
+        queued and is not overtaken (strict FIFO, no starvation)."""
         admitted: List[Tuple[int, GenerationRequest]] = []
         rejected: List[StepOutput] = []
         free = [i for i, r in enumerate(self.slots) if r is None]
         while free and self.waiting:
-            req = self.waiting.popleft()
-            if not req.prompt or len(req.prompt) + 1 > self.max_len:
+            req = self.waiting[0]
+            total = total_len(req)
+            # cache positions the slot must hold right away: the prompt (plus
+            # any regenerated tokens) and the next decode write — except that
+            # positions >= max_len are never written (LENGTH fires first), so
+            # a resumed request sitting exactly at capacity needs no extra
+            # block for a write that will never happen
+            cover = min(total + 1, self.max_len)
+            alloc = self.allocator
+            too_long = (total + 1 > self.max_len if req.num_generated == 0
+                        else total > self.max_len)
+            if not req.prompt or too_long or (
+                    alloc is not None
+                    and alloc.blocks_for(cover) > alloc.allocatable):
+                self.waiting.popleft()
+                self._arrival.pop(req.uid, None)
                 req.finish_reason = FinishReason.ABORTED
                 rejected.append(StepOutput(uid=req.uid, token=-1, index=-1,
                                            finished=True,
                                            finish_reason=FinishReason.ABORTED))
                 continue
+            ids: List[int] = []
+            if alloc is not None:
+                got = alloc.alloc(alloc.blocks_for(cover))
+                if got is None:
+                    break          # head waits for blocks; FIFO preserved
+                ids = got
+            self.waiting.popleft()
             slot = free.pop(0)
             self.slots[slot] = req
-            self.positions[slot] = len(req.prompt)
+            self.positions[slot] = total
             self.temperatures[slot] = req.params.temperature
             self.top_ps[slot] = req.params.top_p
+            if alloc is not None:
+                self.block_ids[slot] = ids
+                self.block_tables[slot, :] = TRASH_BLOCK
+                self.block_tables[slot, :len(ids)] = ids
             admitted.append((slot, req))
         return admitted, rejected
 
@@ -105,12 +175,19 @@ class Scheduler:
         self.positions[slot] = self.max_len - 1
         self.temperatures[slot] = 0.0
         self.top_ps[slot] = 1.0
+        if self.allocator is not None:
+            self.allocator.free(self.block_ids[slot])
+            self.block_ids[slot] = []
+            self.block_tables[slot, :] = TRASH_BLOCK
 
     # -- per-token lifecycle ---------------------------------------------------
 
     def record(self, slot: int, token: int) -> StepOutput:
         """Append one generated token to the slot's request, apply stop
-        conditions, and free the slot if the request finished."""
+        conditions, and free the slot if the request finished.  On the paged
+        path, grow the slot's block table when the next write position
+        crosses into an unallocated block; if the pool is exhausted the slot
+        is preempted (freed + requeued at the front) instead."""
         req = self.slots[slot]
         assert req is not None, f"record() on idle slot {slot}"
         req.output_tokens.append(token)
@@ -123,11 +200,49 @@ class Scheduler:
             reason = FinishReason.LENGTH
         elif self.positions[slot] > self.max_len - 1:
             reason = FinishReason.LENGTH   # per-slot cache exhausted
+        elif self.allocator is not None and not self._grow(slot):
+            # re-admission must cover prompt + generated (+ the next write
+            # where one can still happen, mirroring admit())
+            cover = min(total_len(req) + 1, self.max_len)
+            if self.allocator.blocks_for(cover) > self.allocator.allocatable:
+                # the whole pool is smaller than this one request: finish
+                # cleanly with the output kept instead of losing it to a
+                # preempt->abort cycle
+                reason = FinishReason.LENGTH
+            else:
+                self._preempt(slot)
 
         out = StepOutput(uid=req.uid, token=token,
                          index=req.num_generated - 1,
                          finished=reason is not None, finish_reason=reason)
         if reason is not None:
             req.finish_reason = reason
+            self._arrival.pop(req.uid, None)
             self._free(slot)
         return out
+
+    def _grow(self, slot: int) -> bool:
+        """Ensure the slot's allocation covers its next write position."""
+        need = int(self.positions[slot]) // self.allocator.block_size + 1
+        while len(self.block_ids[slot]) < need:
+            got = self.allocator.alloc(1)
+            if got is None:
+                return False
+            self.block_ids[slot].extend(got)
+            self.block_tables[slot, len(self.block_ids[slot]) - 1] = got[0]
+        return True
+
+    def _preempt(self, slot: int) -> None:
+        """Recompute preemption: free the slot and its blocks, requeue the
+        request in arrival order (admitted requests always predate everyone
+        still waiting, so this lands at/near the front).  Re-admission
+        prefills prompt + generated tokens, so the request resumes where it
+        left off."""
+        req = self.slots[slot]
+        seq = self._arrival[req.uid]
+        i = 0
+        while i < len(self.waiting) and \
+                self._arrival[self.waiting[i].uid] < seq:
+            i += 1
+        self.waiting.insert(i, req)
+        self._free(slot)

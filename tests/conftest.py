@@ -6,6 +6,13 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running (minutes on CPU); excluded from the CI gate "
+        "via -m 'not slow', still part of the full tier-1 run")
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)

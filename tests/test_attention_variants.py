@@ -71,9 +71,15 @@ class TestLowPrecisionQuant:
         w = jax.random.normal(jax.random.PRNGKey(0), (128, 64)).astype(jnp.bfloat16)
         lp = Q.fake_quant_weight_lp(w)
         hi = Q.fake_quant_weight(w.astype(jnp.float32))
-        # values should be identical except ~0.2% boundary flips
-        diff = jnp.mean((jnp.abs(lp.astype(jnp.float32) - hi) > 1e-3
-                         ).astype(jnp.float32))
+        # compare ternary *codes*, not dequantized values: the LP path's
+        # scale is the bf16 cast of the fp32 absmean (up to 2^-9 relative
+        # off), so dequantized values legitimately differ by ~delta/512 on
+        # every nonzero code.  Codes should be identical except ~0.2%
+        # rounding-boundary flips.
+        code_lp = jnp.round(lp.astype(jnp.float32)
+                            / jnp.max(jnp.abs(lp).astype(jnp.float32)))
+        code_hi = jnp.round(hi / jnp.max(jnp.abs(hi)))
+        diff = jnp.mean((code_lp != code_hi).astype(jnp.float32))
         assert float(diff) < 0.01
 
     def test_lp_values_are_ternary_multiples(self):

@@ -122,8 +122,11 @@ class TestCollectives:
         """)
 
 
+@pytest.mark.slow
 class TestDryRunSmoke:
-    """End-to-end dry-run machinery on a small cell (512 fake devices)."""
+    """End-to-end dry-run machinery on a small cell (512 fake devices) —
+    by far the slowest test in the suite (SPMD compile in a subprocess);
+    slow-marked, runs in the full tier-1 suite only."""
 
     def test_dryrun_cell_produces_roofline(self):
         r = subprocess.run(

@@ -1,0 +1,337 @@
+"""Paged KV cache: block allocator, block-aware scheduling, and — the
+load-bearing check — token-for-token greedy parity between the paged and
+contiguous engines on a mixed-depth continuous-batching workload, including
+under pools tight enough to force admission waits and mid-decode preemption.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import build_model, get_config
+from repro.serving.api import FinishReason, GenerationRequest, SamplingParams
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.paged import TRASH_BLOCK, BlockAllocator
+from repro.serving.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = get_config("qwen1.5-0.5b").reduced().replace(
+        compute_dtype="float32", param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+class TestBlockAllocator:
+    def test_alloc_free_reuse(self):
+        a = BlockAllocator(num_blocks=5, block_size=4)
+        assert a.available() == 4 and a.allocatable == 4
+        ids = a.alloc(3)
+        assert len(ids) == 3 and TRASH_BLOCK not in ids
+        assert a.available() == 1
+        a.free(ids)
+        assert a.available() == 4
+        again = a.alloc(4)
+        assert sorted(again) == [1, 2, 3, 4]   # freed blocks recycled
+
+    def test_exhaustion_returns_none_not_partial(self):
+        a = BlockAllocator(num_blocks=4, block_size=4)
+        assert a.alloc(5) is None
+        assert a.available() == 3               # nothing leaked
+        assert a.alloc(3) is not None
+        assert a.alloc(1) is None
+
+    def test_blocks_for(self):
+        a = BlockAllocator(num_blocks=4, block_size=8)
+        assert a.blocks_for(1) == 1
+        assert a.blocks_for(8) == 1
+        assert a.blocks_for(9) == 2
+
+    def test_refcount_share_stub(self):
+        """Prefix-sharing entry point: a shared block survives one free and
+        is recycled only when the last reference drops."""
+        a = BlockAllocator(num_blocks=3, block_size=4)
+        (b,) = a.alloc(1)
+        assert a.share(b) == 2
+        a.free([b])
+        assert a.available() == 1               # still referenced
+        a.free([b])
+        assert a.available() == 2               # now recycled
+
+    def test_too_small_pool_rejected(self):
+        with pytest.raises(ValueError, match="trash"):
+            BlockAllocator(num_blocks=1, block_size=4)
+
+
+class TestPagedScheduler:
+    def _sched(self, n_slots=2, max_len=16, num_blocks=9, bs=4):
+        alloc = BlockAllocator(num_blocks, bs)
+        return Scheduler(n_slots, max_len, eos_id=99, allocator=alloc), alloc
+
+    def test_admission_allocates_blocks(self):
+        sc, alloc = self._sched()
+        sc.submit(GenerationRequest(uid=0, prompt=[1, 2, 3]))
+        admitted, rejected = sc.admit()
+        assert [s for s, _ in admitted] == [0] and not rejected
+        # 3-token prompt + first decode write = 4 positions = 1 block of 4
+        assert len(sc.block_ids[0]) == 1
+        assert alloc.available() == 7
+        assert sc.block_tables[0, 0] == sc.block_ids[0][0]
+        assert (sc.block_tables[0, 1:] == TRASH_BLOCK).all()
+
+    def test_exhaustion_request_stays_queued_fifo(self):
+        """Admission waits on blocks, not just slots: a blocked queue head
+        stays queued (and is not overtaken) until blocks free up."""
+        sc, alloc = self._sched(n_slots=2, num_blocks=4, bs=4)  # 3 allocatable
+        sc.submit(GenerationRequest(uid=0, prompt=list(range(8))))   # 3 blocks
+        sc.submit(GenerationRequest(uid=1, prompt=[1, 2]))           # 1 block
+        admitted, rejected = sc.admit()
+        assert [r.uid for _, r in admitted] == [0] and not rejected
+        assert alloc.available() == 0
+        admitted, rejected = sc.admit()          # slot 1 free, no blocks
+        assert not admitted and not rejected
+        assert [r.uid for r in sc.waiting] == [1]
+        sc._free(0)                              # blocks return to the pool
+        admitted, _ = sc.admit()
+        assert [r.uid for _, r in admitted] == [1]
+
+    def test_never_fitting_request_aborted(self):
+        sc, _ = self._sched(n_slots=1, max_len=64, num_blocks=3, bs=4)
+        req = GenerationRequest(uid=0, prompt=list(range(12)))  # needs 4 > 2
+        sc.submit(req)
+        admitted, rejected = sc.admit()
+        assert not admitted
+        assert rejected[0].finish_reason == FinishReason.ABORTED
+        assert req.done and not sc.has_work()
+
+    def test_decode_growth_one_block_at_a_time(self):
+        sc, alloc = self._sched(n_slots=1, num_blocks=9, bs=4)
+        sc.submit(GenerationRequest(
+            uid=0, prompt=[1, 2, 3],
+            params=SamplingParams(max_tokens=10, ignore_eos=True)))
+        sc.admit()
+        assert len(sc.block_ids[0]) == 1
+        for tok in range(5):                     # positions advance 3..7
+            sc.record(0, token=tok)
+        # next write position 7 crosses into logical block 1
+        assert len(sc.block_ids[0]) == 2
+        assert sc.block_tables[0, 1] == sc.block_ids[0][1]
+
+    def test_preemption_requeues_in_arrival_order(self):
+        """Pool exhausted by a competing slot: the loser is preempted with
+        its generated tokens kept and requeued by arrival order."""
+        sc, alloc = self._sched(n_slots=2, max_len=32, num_blocks=4, bs=4)
+        sp = SamplingParams(max_tokens=20, ignore_eos=True)
+        r0 = GenerationRequest(uid=0, prompt=[1, 2], params=sp)
+        r1 = GenerationRequest(uid=1, prompt=[3, 4], params=sp)
+        sc.submit(r0); sc.submit(r1)
+        sc.admit()                               # 1 block each, 1 spare
+        for t in range(2):
+            sc.record(0, t); sc.record(1, t)
+        # third token: next write crosses into block 1 for both rows —
+        # slot 0 grabs the last free block, slot 1 must preempt
+        out0 = sc.record(0, 10)
+        out1 = sc.record(1, 11)
+        assert not out0.finished and not out1.finished
+        assert sc.slots[0] is r0 and sc.slots[1] is None
+        assert list(sc.waiting) == [r1]
+        assert r1.output_tokens == [0, 1, 11]    # generated tokens kept
+        assert alloc.available() == 1            # r1's block returned
+
+    def test_pool_smaller_than_request_finishes_length(self):
+        """Growth failure with no possible re-admission (the whole pool is
+        smaller than the request) finishes LENGTH, keeping the output,
+        instead of a preempt->abort cycle that would lose it."""
+        sc, alloc = self._sched(n_slots=1, max_len=32, num_blocks=2, bs=4)
+        req = GenerationRequest(
+            uid=0, prompt=[1, 2],
+            params=SamplingParams(max_tokens=20, ignore_eos=True))
+        sc.submit(req)
+        sc.admit()
+        outs = [sc.record(0, token=t) for t in (5, 6, 7)]
+        assert outs[-1].finished
+        assert outs[-1].finish_reason == FinishReason.LENGTH
+        assert req.output_tokens == [5, 6, 7]
+        assert alloc.available() == 1
+
+    def test_free_resets_paged_state(self):
+        sc, alloc = self._sched()
+        sc.submit(GenerationRequest(uid=0, prompt=[1, 2, 3, 4, 5]))
+        sc.admit()
+        sc._free(0)
+        assert sc.block_ids[0] == []
+        assert (sc.block_tables[0] == TRASH_BLOCK).all()
+        assert alloc.available() == 8
+
+
+def run_workload(cfg, params, scfg, prompts, sp):
+    """Mixed-depth continuous batching with mid-flight admissions."""
+    eng = Engine(cfg, params, scfg)
+    r0 = eng.submit(prompts[0], sp)
+    eng.step(); eng.step()                       # r0 runs 2 tokens deep
+    r1 = eng.submit(prompts[1], sp)
+    eng.step()                                   # r1 admitted mid-stream
+    rest = [eng.submit(p, sp) for p in prompts[2:]]
+    steps = 0
+    for _ in eng.stream():
+        steps += 1
+        assert steps < 2000, "serving loop made no progress"
+    return eng, [r.output_tokens for r in [r0, r1] + rest]
+
+
+class TestPagedEngineParity:
+    PROMPTS = [[1, 2, 3], [5, 6, 7, 8, 9], [11, 12], [3, 1, 4, 1, 5, 9],
+               [13, 7, 5, 3, 11, 2, 6], [21, 22]]
+    SP = SamplingParams(max_tokens=8, ignore_eos=True)
+
+    def test_paged_matches_contiguous_token_for_token(self, small_lm):
+        """ISSUE acceptance: paged engine reproduces contiguous greedy
+        outputs on a mixed-depth workload with mid-flight admissions."""
+        cfg, _, params = small_lm
+        _, ref = run_workload(cfg, params,
+                              ServeConfig(max_batch=3, max_len=24, paged=False),
+                              self.PROMPTS, self.SP)
+        _, got = run_workload(
+            cfg, params,
+            ServeConfig(max_batch=3, max_len=24, paged=True, kv_block_size=4),
+            self.PROMPTS, self.SP)
+        assert got == ref
+
+    def test_parity_under_tight_pool_with_preemption(self, small_lm):
+        """A pool too small for all slots at full depth forces admission
+        waits and recompute preemption; greedy outputs must not change."""
+        cfg, _, params = small_lm
+        _, ref = run_workload(cfg, params,
+                              ServeConfig(max_batch=3, max_len=24, paged=False),
+                              self.PROMPTS, self.SP)
+        eng, got = run_workload(
+            cfg, params,
+            ServeConfig(max_batch=3, max_len=24, paged=True, kv_block_size=4,
+                        num_kv_blocks=11),
+            self.PROMPTS, self.SP)
+        assert got == ref
+        # every block back on the free list once all requests finish
+        assert eng.allocator.available() == eng.allocator.allocatable
+
+    def test_parity_at_capacity_edge_with_preemption(self, small_lm):
+        """A request preempted near max_len must still emit every token the
+        contiguous engine would (re-admission covers min(total+1, max_len)
+        positions — positions >= max_len are never written, so the capacity
+        edge needs no phantom block and must not truncate early)."""
+        cfg, _, params = small_lm
+        prompts = [[1, 2, 3, 4, 5, 6], [7, 8, 9, 10, 11, 12]]
+        sp = SamplingParams(max_tokens=8, ignore_eos=True)
+
+        def run(scfg):
+            eng = Engine(cfg, params, scfg)
+            rs = [eng.submit(p, sp) for p in prompts]
+            steps = 0
+            for _ in eng.stream():
+                steps += 1
+                assert steps < 2000, "serving loop made no progress"
+            return [r.output_tokens for r in rs]
+
+        ref = run(ServeConfig(max_batch=2, max_len=10, paged=False))
+        got = run(ServeConfig(max_batch=2, max_len=10, paged=True,
+                              kv_block_size=4, num_kv_blocks=5))
+        assert got == ref
+        # both rows run to the cache-capacity LENGTH stop, not max_tokens
+        assert all(len(o) == 5 for o in ref)
+
+    def test_paged_pool_smaller_than_contiguous(self, small_lm):
+        """The memory claim: a right-sized pool holds fewer resident KV
+        bytes than contiguous slots*max_len, same outputs (checked above)."""
+        cfg, _, params = small_lm
+        contig = Engine(cfg, params,
+                        ServeConfig(max_batch=3, max_len=24, paged=False))
+        paged = Engine(cfg, params,
+                       ServeConfig(max_batch=3, max_len=24, paged=True,
+                                   kv_block_size=4, num_kv_blocks=11))
+        assert paged.kv_cache_bytes() < contig.kv_cache_bytes()
+
+    def test_paged_rejects_non_attention_models(self, small_lm):
+        cfg = get_config("mamba2-780m").reduced()
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="paged"):
+            Engine(cfg, params, ServeConfig(paged=True))
+        # default auto-selects the contiguous path for SSM stacks
+        assert Engine(cfg, params, ServeConfig()).paged is False
+        assert Engine(cfg, params, ServeConfig(paged=False)).paged is False
+
+    def test_paged_auto_default_for_attention_models(self, small_lm):
+        cfg, _, params = small_lm
+        assert Engine(cfg, params, ServeConfig()).paged is True
+
+
+class TestRegressions:
+    def test_idle_rows_decode_pad_not_dead_history(self, small_lm):
+        """Engine._tokens starts at pad_id and freed slots reset to pad_id,
+        so idle-row compute never depends on a dead request's last token."""
+        cfg, _, params = small_lm
+        for paged in (False, True):
+            eng = Engine(cfg, params, ServeConfig(max_batch=3, max_len=16,
+                                                  paged=paged))
+            assert (eng._tokens == eng.scfg.pad_id).all()   # init, not 0
+            r = eng.submit([1, 2, 3], SamplingParams(max_tokens=3,
+                                                     ignore_eos=True))
+            for _ in eng.stream():
+                pass
+            assert r.done
+            assert (eng._tokens == eng.scfg.pad_id).all()   # reset on free
+
+    def test_uid_collision_raises(self, small_lm):
+        cfg, _, params = small_lm
+        eng = Engine(cfg, params, ServeConfig(max_batch=2, max_len=16))
+        hits = []
+        eng.submit([1, 2, 3], SamplingParams(max_tokens=4), uid=7,
+                   on_token=lambda o: hits.append(o))
+        with pytest.raises(ValueError, match="uid 7"):
+            eng.submit([4, 5, 6], uid=7)
+        # the original request is not orphaned: it still streams tokens
+        for _ in eng.stream():
+            pass
+        assert hits and hits[-1].finished
+        # uid reusable once the first request finished
+        eng.submit([4, 5, 6], SamplingParams(max_tokens=1), uid=7)
+        for _ in eng.stream():
+            pass
+
+    def test_top_p_one_stays_in_bounds(self):
+        """top_p=1.0 + float rounding must not index take_along_axis out of
+        bounds: the full vocab stays eligible and samples are valid ids."""
+        from repro.serving.sampling import sample_batch
+        v = 37
+        # adversarial: probs summing slightly under 1.0 after cumsum rounding
+        logits = jax.random.normal(jax.random.PRNGKey(0), (4, v)) * 8.0
+        keys = jax.vmap(jax.random.PRNGKey)(np.arange(4, dtype=np.uint32))
+        temps = np.full((4,), 1.0, np.float32)
+        tops = np.ones((4,), np.float32)
+        for seed in range(10):
+            keys = jax.vmap(jax.random.fold_in)(keys, np.full((4,), seed,
+                                                              np.uint32))
+            toks = np.asarray(sample_batch(keys, logits, temps, tops))
+            assert ((0 <= toks) & (toks < v)).all()
+
+    def test_generate_rejects_prompt_too_big_for_pool(self, small_lm):
+        """The legacy generate() guard covers the paged-pool capacity, not
+        just max_len — otherwise undersized pools silently return empty
+        outputs for legacy Requests (which cannot surface ABORTED)."""
+        from repro.serving.engine import Request
+        cfg, _, params = small_lm
+        eng = Engine(cfg, params,
+                     ServeConfig(max_batch=1, max_len=64, kv_block_size=4,
+                                 num_kv_blocks=3))
+        with pytest.raises(ValueError, match="pool"):
+            eng.generate([Request(uid=0, prompt=list(range(12)))])
+
+    def test_serveconfig_validates_bucket_min(self):
+        with pytest.raises(ValueError, match="prefill_bucket_min"):
+            ServeConfig(prefill_bucket_min=0)
+        with pytest.raises(ValueError, match="kv_block_size"):
+            ServeConfig(kv_block_size=0)
+
+    def test_bucket_length_rejects_nonpositive_lo(self):
+        from repro.serving.scheduler import bucket_length
+        with pytest.raises(ValueError):
+            bucket_length(5, 0, 64)

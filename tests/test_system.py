@@ -43,7 +43,11 @@ def pipe_results():
     return pipe, tstate, sparams0, s_sft, s_bd
 
 
+@pytest.mark.slow
 class TestPipeline:
+    """Full 3-stage pipeline on a tiny model (~a minute of CPU training in
+    the module fixture) — slow-marked, runs in the full tier-1 suite only."""
+
     def test_teacher_learns(self, pipe_results):
         pipe, tstate, *_ = pipe_results
         acc = pipe.eval_accuracy(tstate.params, quantized=False)
