@@ -154,6 +154,119 @@ def paged_kv_footprint(n_requests: int = 10, max_tokens: int = 8) -> dict:
             / max(paged["kv_cache_bytes"], 1)}
 
 
+def serving_decode_bench(n_requests: int = 8, max_tokens: int = 8) -> dict:
+    """Decode-step comparison of the two paged-attention implementations:
+    the dense block-table gather vs the fused Pallas kernel
+    (kernels/paged_attention), same mixed-depth continuous-batching workload.
+
+    Reported per impl: end-to-end tok/s, median decode-step wall ms, and the
+    modeled KV bytes read per decode step (ops.decode_kv_bytes — the fused
+    kernel streams O(resident tokens), the gather materializes the dense
+    B * table_width * block_size window).  Wall times on this CPU run the
+    kernel in interpret mode and are NOT the perf claim — the KV-bytes model
+    and its roofline memory term (launch/roofline.py:
+    paged_decode_attention_roofline) are.  Greedy outputs are asserted
+    token-for-token identical.  Results land in BENCH_serving.json.
+    """
+    import statistics
+
+    from repro.kernels.paged_attention import ops as pa_ops
+    from repro.launch.roofline import paged_decode_attention_roofline
+    from repro.models import build_model
+    from repro.serving.api import SamplingParams
+    from repro.serving.engine import Engine, ServeConfig
+
+    cfg = get_config("qwen1.5-0.5b").reduced(layers=2).replace(
+        compute_dtype="float32", param_dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    max_len, bs = 64, 8
+    lens = [int(rng.integers(4, 16)) for _ in range(n_requests - 1)]
+    lens.append(max_len - max_tokens - 1)        # one near-capacity straggler
+    prompts = [rng.integers(0, 64, n).tolist() for n in lens]
+    sp = SamplingParams(max_tokens=max_tokens, ignore_eos=True)
+    itemsize = 4                                  # float32 cache on CPU
+
+    def serve(impl: str) -> dict:
+        eng = Engine(cfg, params, ServeConfig(
+            max_batch=4, max_len=max_len, paged=True, kv_block_size=bs,
+            attn_impl=impl))
+        for p in prompts:                         # warm-up pass: compiles
+            eng.submit(p, sp)
+        for _ in eng.stream():
+            pass
+        reqs = [eng.submit(p, sp) for p in prompts]
+        step_ms, kv_samples, n_tok = [], {"gather": [], "fused": []}, 0
+        t0 = time.perf_counter()
+        while eng.has_pending():
+            s0 = time.perf_counter()
+            outs = eng.step()
+            dt_ms = (time.perf_counter() - s0) * 1e3
+            n_tok += sum(1 for o in outs if o.token >= 0)
+            # eng.last_decode is the decode shape the step actually ran
+            # (post-admission, pre-record); None when no slot was active
+            if eng.last_decode is None:
+                continue
+            # decode-step latency must exclude steps that also ran an
+            # admission prefill (index 0 = prefill-sampled first token,
+            # index -1 = rejection) — those time the prompt scan, not decode
+            if all(o.index > 0 for o in outs):
+                step_ms.append(dt_ms)
+            snap = eng.last_decode
+            for mode, fused in (("gather", False), ("fused", True)):
+                kv_samples[mode].append(pa_ops.decode_kv_bytes(
+                    snap["positions"], snap["active"], snap["table_width"],
+                    bs, cfg.n_kv_heads, cfg.head_dim, cfg.n_layers, itemsize,
+                    fused=fused))
+        wall = time.perf_counter() - t0
+        return {
+            "tok_per_s": n_tok / max(wall, 1e-9),
+            "decode_step_ms_p50": (statistics.median(step_ms)
+                                   if step_ms else None),
+            "kv_bytes_read_per_step": statistics.mean(kv_samples[
+                "fused" if impl == "fused" else "gather"]),
+            "kv_samples": kv_samples,
+            "outputs": [r.output_tokens for r in reqs],
+        }
+
+    gather = serve("gather")
+    fused = serve("fused")
+    assert fused["outputs"] == gather["outputs"], \
+        "fused paged attention diverged from the gather path"
+    mean_g = statistics.mean(gather["kv_samples"]["gather"])
+    mean_f = statistics.mean(gather["kv_samples"]["fused"])
+    # roofline memory terms for a representative (mean-traffic) step
+    mean_resident = mean_f / (2 * cfg.n_kv_heads * cfg.head_dim * itemsize
+                              * cfg.n_layers)
+    roof = {}
+    for mode, is_fused in (("gather", False), ("fused", True)):
+        r = paged_decode_attention_roofline(
+            batch=4, resident_tokens=int(mean_resident),
+            table_width=max_len // bs, block_size=bs, n_layers=cfg.n_layers,
+            n_q_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, kv_bytes=2, fused=is_fused)
+        roof[mode] = {"bytes_accessed": r.bytes_accessed,
+                      "t_memory_us": r.t_memory * 1e6,
+                      "bottleneck": r.bottleneck}
+    for v in (gather, fused):
+        v.pop("outputs")
+        v.pop("kv_samples")
+    out = {
+        "config": {"arch": "qwen1.5-0.5b reduced(2)", "max_batch": 4,
+                   "max_len": max_len, "kv_block_size": bs,
+                   "n_requests": n_requests, "max_tokens": max_tokens,
+                   "cache_itemsize": itemsize},
+        "gather": gather, "fused": fused,
+        "kv_bytes_ratio_gather_over_fused": mean_g / max(mean_f, 1.0),
+        "roofline_v5e": roof,
+        "note": "wall times are CPU interpret-mode (correctness harness); "
+                "KV bytes are the analytic per-step traffic model shared "
+                "with launch/roofline.py",
+    }
+    (RESULTS / "BENCH_serving.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
 def decode_memory_term() -> dict:
     """weight-bytes component of the decode_32k memory term, bf16 vs packed."""
     out = {}
@@ -177,6 +290,7 @@ def main(force: bool = False):
         "decode": decode_memory_term(),
         "continuous_batching": continuous_batching_toks(),
         "paged_kv": paged_kv_footprint(),
+        "serving_decode": serving_decode_bench(),
     }, force)
     print("\n== Fig 1 (memory footprint / decode weight traffic) ==")
     for arch, v in res["footprint"].items():
@@ -211,8 +325,37 @@ def main(force: bool = False):
               f"{pk['kv_bytes_ratio']:.2f}x")
         emit("speed_memory/kv_bytes_ratio", pk["kv_bytes_ratio"],
              "contiguous/paged")
+    sd = res.get("serving_decode", {})
+    if sd:
+        print("paged decode attention (gather vs fused kernel), "
+              "BENCH_serving.json:")
+        for mode in ("gather", "fused"):
+            v = sd[mode]
+            p50 = v["decode_step_ms_p50"]
+            print(f"  {mode:8s} {v['tok_per_s']:.1f} tok/s  "
+                  f"step p50 {p50 if p50 is None else round(p50, 1)} ms  "
+                  f"kv read/step {v['kv_bytes_read_per_step'] / 2 ** 10:.0f}"
+                  " KiB")
+            emit(f"speed_memory/attn_{mode}_kv_bytes_step",
+                 v["kv_bytes_read_per_step"], "modeled")
+        print(f"  kv-read ratio (gather/fused) = "
+              f"{sd['kv_bytes_ratio_gather_over_fused']:.2f}x")
+        emit("speed_memory/attn_kv_read_ratio",
+             sd["kv_bytes_ratio_gather_over_fused"], "gather/fused")
     return res
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--serving-only", action="store_true",
+                    help="run just the paged decode-attention comparison "
+                         "and write BENCH_serving.json (CI artifact)")
+    a = ap.parse_args()
+    if a.serving_only:
+        out = serving_decode_bench()
+        print(json.dumps(out, indent=1))
+        print(f"wrote {RESULTS / 'BENCH_serving.json'}")
+    else:
+        main(force=a.force)

@@ -1,0 +1,12 @@
+"""Fused paged-attention decode: stream KV blocks via the block table.
+
+Grid (B, Hkv, L) with the logical-block dim innermost; an online-softmax
+(m, z, acc) carry lives in VMEM scratch across a row's blocks, the block
+table and per-row write positions arrive as scalar-prefetch operands that
+drive the pool BlockSpec index maps, and the step's new K/V is both folded
+into the carry and scatter-written into the row's current pool block through
+aliased pool outputs.  KV bytes read per decode step are O(tokens resident)
+instead of the gather fallback's O(B * table_width * block_size).  See
+kernel.py for the full blocking scheme.
+"""
+from repro.kernels.paged_attention import kernel, ops, ref  # noqa: F401

@@ -149,6 +149,47 @@ class Roofline:
         }
 
 
+def paged_decode_attention_roofline(
+        *, batch: int, resident_tokens: int, table_width: int,
+        block_size: int, n_layers: int, n_q_heads: int, n_kv_heads: int,
+        head_dim: int, kv_bytes: int = 2, fused: bool = True,
+        n_devices: int = 1) -> Roofline:
+    """Analytic decode-step roofline for *paged-KV* attention.
+
+    The pre-paged decode entries model KV bytes as ``slots * max_len`` —
+    worst-case residency, which the paged layout (serving/paged.py) exists
+    to avoid.  This entry models what one decode step actually moves:
+
+      * fused kernel (kernels/paged_attention): Q in / ctx out, the step's
+        new K/V written once (plus the in-place rewrite of each row's
+        current block, the fused scatter), and the *resident* KV of the
+        block table streamed once — ``resident_tokens`` covers exactly the
+        positions the batch's rows hold (sum over rows of ``idx + 1``),
+        not capacity;
+      * gather fallback: one read of the dense
+        ``batch * table_width * block_size`` window, worst-case over the
+        bucketed table width.  The write (and re-read) of the materialized
+        ``[B, L, Hkv, bs, Dh]`` buffer that gather also pays is NOT
+        counted, so its figure — and the fused advantage derived from it —
+        is a lower bound.
+
+    FLOPs cover the score and context matmuls over the attended tokens
+    (2 * 2 * Hq * Dh each).  Weight/MLP traffic is out of scope — compose
+    with the dry-run roofline for whole-step numbers.
+    """
+    kv_tokens = resident_tokens if fused else batch * table_width * block_size
+    per_token_kv = 2 * n_kv_heads * head_dim * kv_bytes          # K and V
+    q_io = 2 * batch * n_q_heads * head_dim * kv_bytes           # q + ctx
+    new_kv = 2 * batch * n_kv_heads * head_dim * kv_bytes
+    if fused:
+        # the fused scatter rewrites each row's current block in place
+        new_kv += batch * block_size * per_token_kv
+    bytes_accessed = n_layers * (q_io + new_kv + kv_tokens * per_token_kv)
+    flops = n_layers * 4.0 * n_q_heads * head_dim * kv_tokens
+    return Roofline(flops=float(flops), bytes_accessed=float(bytes_accessed),
+                    wire_bytes=0.0, n_devices=n_devices)
+
+
 def model_flops(param_count: int, active_param_count: int, tokens: int,
                 kind: str) -> float:
     """6·N·D for a train step (fwd+bwd), 2·N·D for inference, per step."""

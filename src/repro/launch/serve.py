@@ -44,11 +44,17 @@ def build_engine(args) -> Engine:
                        # contiguous for SSM/hybrid/cross caches
                        paged=False if args.contiguous_kv else None,
                        kv_block_size=args.kv_block_size,
-                       num_kv_blocks=args.num_kv_blocks)
+                       num_kv_blocks=args.num_kv_blocks,
+                       attn_impl=args.attn_impl,
+                       block_kv=args.block_kv)
     eng = Engine(cfg, params, scfg)
     mode = (f"paged bs={scfg.kv_block_size} blocks={scfg.pool_blocks()}"
             if eng.paged else "contiguous")
     print(f"[kv-cache] {mode}, {eng.kv_cache_bytes() / 2**20:.2f} MiB")
+    if eng.paged:
+        print(f"[attn] decode impl = {eng.attn_impl}"
+              + (" (interpret-mode kernel)" if eng.attn_impl == "fused"
+                 and jax.default_backend() == "cpu" else ""))
     return eng
 
 
@@ -136,6 +142,13 @@ def main(argv=None):
     ap.add_argument("--num-kv-blocks", type=int, default=None,
                     help="paged-KV pool size incl. trash block "
                          "(default: full capacity)")
+    ap.add_argument("--attn-impl", choices=("auto", "fused", "gather"),
+                    default="auto",
+                    help="paged decode attention: fused Pallas kernel vs "
+                         "dense block-table gather (auto = fused on TPU)")
+    ap.add_argument("--block-kv", type=int, default=None,
+                    help="override Attention.block_kv (KV block length of "
+                         "the blocked/flash prefill impl)")
     args = ap.parse_args(argv)
 
     eng = build_engine(args)

@@ -59,6 +59,7 @@ class ModelConfig:
     # perf knobs (§Perf; defaults = paper-faithful naive baseline)
     attn_scores_dtype: str = "float32"
     attn_impl: str = "dense"
+    block_kv: int = 1024
     seq_shard_activations: bool = False
     # numerics / memory
     param_dtype: str = "float32"
@@ -106,6 +107,7 @@ class ModelConfig:
             ssm_chunk=self.ssm_chunk, subln=self.subln, quant=self.quant,
             attn_scores_dtype=self.attn_scores_dtype,
             attn_impl=self.attn_impl,
+            block_kv=self.block_kv,
             seq_shard_activations=self.seq_shard_activations,
             policy=self.policy())
 

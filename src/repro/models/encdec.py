@@ -100,8 +100,9 @@ class EncDecLM:
 
     def decode_step(self, p: Params, token: jax.Array, cache: Params,
                     cache_index: jax.Array,
-                    block_tables: Optional[jax.Array] = None
-                    ) -> Tuple[jax.Array, Params]:
+                    block_tables: Optional[jax.Array] = None,
+                    attn_impl: str = "gather") -> Tuple[jax.Array, Params]:
         return self._decoder().decode_step(p["decoder"], token, cache,
                                            cache_index,
-                                           block_tables=block_tables)
+                                           block_tables=block_tables,
+                                           attn_impl=attn_impl)

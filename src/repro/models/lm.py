@@ -166,8 +166,8 @@ class CausalLM:
 
     def decode_step(self, p: Params, token: jax.Array, cache: Params,
                     cache_index: jax.Array,
-                    block_tables: Optional[jax.Array] = None
-                    ) -> Tuple[jax.Array, Params]:
+                    block_tables: Optional[jax.Array] = None,
+                    attn_impl: str = "gather") -> Tuple[jax.Array, Params]:
         """token [B] int32 -> (fp32 logits [B, V], new cache).
 
         ``cache_index`` may be a scalar (uniform-depth batch) or an int32 [B]
@@ -176,12 +176,17 @@ class CausalLM:
         depths in one decode batch.  ``block_tables`` (int32 [B, L]) selects
         the paged KV layout: the cache is a shared block pool per layer and
         row ``b``'s position ``i`` lives in pool block
-        ``block_tables[b, i // block_size]`` (serving/paged.py)."""
+        ``block_tables[b, i // block_size]`` (serving/paged.py).
+        ``attn_impl`` picks the paged attention path: ``"fused"`` streams KV
+        blocks through the Pallas kernel (kernels/paged_attention),
+        ``"gather"`` materializes the dense table window (the fallback;
+        ignored when ``block_tables`` is None)."""
         c = self.cfg
         x = self._embed().apply(p["embed"], token[:, None])
         if c.embed_scale:
             x = x * jnp.sqrt(c.d_model).astype(x.dtype)
         x, cache = self._stack().decode(p["stack"], x, cache, cache_index,
-                                        block_tables=block_tables)
+                                        block_tables=block_tables,
+                                        attn_impl=attn_impl)
         x = self._final_norm().apply(p["final_norm"], x)
         return self._logits(p, x)[:, 0], cache

@@ -276,8 +276,8 @@ class Attention:
     def decode(self, p: Params, x: jax.Array, cache: Params,
                cache_index: jax.Array,
                memory: Optional[jax.Array] = None,
-               block_tables: Optional[jax.Array] = None
-               ) -> Tuple[jax.Array, Params]:
+               block_tables: Optional[jax.Array] = None,
+               attn_impl: str = "gather") -> Tuple[jax.Array, Params]:
         """x: [B, 1, D]; cache: {"k","v"} [B, Hkv, Smax, Dh] (attention
         layout — no per-step transpose of the cache); returns (y, cache).
 
@@ -289,10 +289,17 @@ class Attention:
         ``block_tables`` (int32 [B, L]) switches the cache to the *paged*
         layout: {"k","v"} become shared pools [num_blocks, Hkv, bs, Dh] and
         logical position ``i`` of row ``b`` lives at pool block
-        ``block_tables[b, i // bs]``, offset ``i % bs``.  The row writes its
-        new KV into its owned block and attends over the gather of its table
-        (position-masked, so trash-block garbage beyond ``index`` is never
-        mixed in)."""
+        ``block_tables[b, i // bs]``, offset ``i % bs``.  ``attn_impl``
+        selects how that layout is attended:
+
+        * ``"gather"`` — scatter the new KV, then gather the whole table
+          into a dense [B, Hkv, L*bs, Dh] window and run dense masked
+          attention (the fallback; bandwidth is worst-case O(B * L * bs));
+        * ``"fused"`` — the Pallas kernel streams each row's resident
+          blocks straight out of the pools with an online-softmax carry and
+          fuses the new-KV scatter (kernels/paged_attention); KV bytes read
+          per step are O(tokens resident).  Scores are always fp32 here
+          (``scores_dtype`` applies to the non-kernel paths)."""
         b = x.shape[0]
         idx = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32).reshape(-1),
                                (b,))
@@ -302,7 +309,18 @@ class Attention:
             # cross-attention cache holds the projected encoder memory (static).
             k, v = cache["k"], cache["v"]
             mask = None
+        elif block_tables is not None and attn_impl == "fused":
+            from repro.kernels.paged_attention import ops as pa_ops
+            k_new, v_new = self._project_kv(p, x, positions)  # [B, 1, Hkv, Dh]
+            ctx, pool_k, pool_v = pa_ops.paged_attention_decode(
+                q[:, 0], k_new[:, 0], v_new[:, 0], cache["k"], cache["v"],
+                block_tables, idx, softcap=self.logit_softcap)
+            return self._decode_out(p, ctx[:, None]), {"k": pool_k,
+                                                       "v": pool_v}
         elif block_tables is not None:
+            if attn_impl != "gather":
+                raise ValueError(f"unknown attn_impl {attn_impl!r} "
+                                 "(expected 'fused' or 'gather')")
             k, v, cache, mask = self._paged_update(
                 p, x, cache, idx, block_tables, positions)
         else:
@@ -321,10 +339,15 @@ class Attention:
             mask = (jnp.arange(t)[None, :] <= idx[:, None])[:, None, None, :]
             mask = jnp.broadcast_to(mask, (b, 1, 1, t))
         ctx = self._attend(q, k, v, mask, kv_layout="bhsd")
+        return self._decode_out(p, ctx), cache
+
+    def _decode_out(self, p: Params, ctx: jax.Array) -> jax.Array:
+        """ctx [B, 1, Hq, Dh] -> SubLN + output projection."""
+        b = ctx.shape[0]
         flat = ctx.reshape(b, 1, self.q_dim)
         if self.subln:
             flat = self._subln().apply(p["subln"], flat)
-        return self._wo().apply(p["wo"], flat), cache
+        return self._wo().apply(p["wo"], flat)
 
     def _paged_update(self, p: Params, x: jax.Array, cache: Params,
                       idx: jax.Array, block_tables: jax.Array,

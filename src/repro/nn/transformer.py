@@ -54,6 +54,7 @@ class BlockConfig:
     logit_softcap: float = 0.0
     attn_scores_dtype: str = "float32"
     attn_impl: str = "dense"        # "dense" | "blocked" (flash-style)
+    block_kv: int = 1024            # KV block length for the blocked impl
     seq_shard_activations: bool = False   # Megatron-SP residual sharding
     # MoE
     n_experts: int = 0
@@ -84,14 +85,14 @@ class Block:
                 qkv_bias=c.qkv_bias, qk_norm=c.qk_norm, rope_theta=c.rope_theta,
                 causal=c.causal, logit_softcap=c.logit_softcap, subln=c.subln,
                 scores_dtype=c.attn_scores_dtype, impl=c.attn_impl,
-                quant=c.quant, policy=c.policy)
+                block_kv=c.block_kv, quant=c.quant, policy=c.policy)
         if spec.mixer in ("cross", "attn_cross"):
             self.xattn = Attention(
                 c.d_model, c.n_heads, c.n_kv_heads, c.head_dim,
                 qkv_bias=c.qkv_bias, qk_norm=c.qk_norm, use_rope=False,
                 causal=False, cross=True, subln=c.subln,
                 scores_dtype=c.attn_scores_dtype, impl=c.attn_impl,
-                quant=c.quant, policy=c.policy)
+                block_kv=c.block_kv, quant=c.quant, policy=c.policy)
             if spec.mixer == "attn_cross":
                 self.norm_x = RMSNorm(c.d_model, c.rms_eps, policy=c.policy)
         if spec.mixer == "mamba":
@@ -201,13 +202,14 @@ class Block:
 
     def decode(self, p: Params, x: jax.Array, cache: Params,
                cache_index: jax.Array,
-               block_tables: Optional[jax.Array] = None
-               ) -> Tuple[jax.Array, Params]:
+               block_tables: Optional[jax.Array] = None,
+               attn_impl: str = "gather") -> Tuple[jax.Array, Params]:
         new_cache: Params = {}
         if self.spec.mixer in ("attn", "attn_cross"):
             h, kv = self.attn.decode(p["attn"], self.norm1.apply(p["norm1"], x),
                                      cache["attn"], cache_index,
-                                     block_tables=block_tables)
+                                     block_tables=block_tables,
+                                     attn_impl=attn_impl)
             x = x + h
             new_cache["attn"] = kv
         if self.spec.mixer in ("cross", "attn_cross"):
@@ -346,12 +348,14 @@ class Stack:
 
     def decode(self, p: Params, x: jax.Array, cache: Params,
                cache_index: jax.Array,
-               block_tables: Optional[jax.Array] = None
-               ) -> Tuple[jax.Array, Params]:
+               block_tables: Optional[jax.Array] = None,
+               attn_impl: str = "gather") -> Tuple[jax.Array, Params]:
         """cache_index: scalar or per-row [B] vector (mixed-depth batches);
         block_tables: int32 [B, L] selects the paged-pool cache layout (the
         table is scan-invariant — every repeat indexes its own pool leaf with
-        the same logical->physical block mapping)."""
+        the same logical->physical block mapping); attn_impl: "fused" runs
+        the Pallas paged-decode kernel, "gather" the dense-window fallback
+        (nn/attention.py:Attention.decode)."""
         blocks = self.blocks()
 
         def body(h, xs):
@@ -360,7 +364,8 @@ class Stack:
             for i, blk in enumerate(blocks):
                 h, nc = blk.decode(rep_params[f"pos{i}"], h,
                                    rep_cache[f"pos{i}"], cache_index,
-                                   block_tables=block_tables)
+                                   block_tables=block_tables,
+                                   attn_impl=attn_impl)
                 new_caches[f"pos{i}"] = nc
             return h, new_caches
 

@@ -39,6 +39,13 @@ blocks as well as slots, and pool exhaustion mid-decode preempts a slot
 (recompute on re-admission).  ``paged=False`` keeps the contiguous path; both
 produce token-for-token identical greedy outputs (tests/test_paged_kv.py).
 
+How the paged layout is *attended* each decode step is a second knob:
+``ServeConfig(attn_impl=...)`` selects the fused Pallas kernel
+(kernels/paged_attention — streams each row's resident blocks out of the
+pools with an online softmax, KV bytes read O(tokens resident)) or the dense
+block-table gather fallback; ``"auto"`` picks fused on TPU and gather on
+CPU/interpret, and both are greedy-parity identical (tests/test_paged_kv.py).
+
 Known gaps recorded in ROADMAP.md Open items: no prefix-cache sharing (the
 block allocator's refcounts are the stub for it), admissions prefill one
 request at a time.
@@ -81,6 +88,18 @@ class ServeConfig:
     # pool size incl. the reserved trash block; None = full capacity
     # (max_batch slots at max_len depth — no admission ever waits on blocks)
     num_kv_blocks: Optional[int] = None
+    # paged decode-attention implementation: "fused" streams KV blocks
+    # through the Pallas kernel (kernels/paged_attention), "gather"
+    # materializes the dense block-table window, "auto" picks fused on TPU
+    # and the gather fallback elsewhere (CPU/interpret).  Requesting
+    # "fused" off-TPU runs the kernel in interpret mode (correctness path,
+    # used by the parity tests).  Distinct knob from ModelConfig.attn_impl
+    # ("dense"/"blocked"), which selects the *forward/prefill* attention
+    # implementation.
+    attn_impl: str = "auto"
+    # override the model's attention KV block length (Attention.block_kv,
+    # used by the blocked/flash prefill impl); None keeps the config value
+    block_kv: Optional[int] = None
 
     def __post_init__(self):
         if self.prefill_bucket_min < 1:
@@ -93,6 +112,12 @@ class ServeConfig:
             raise ValueError(
                 f"num_kv_blocks={self.num_kv_blocks}: need the reserved trash "
                 "block plus at least one allocatable block")
+        if self.attn_impl not in ("auto", "fused", "gather"):
+            raise ValueError(
+                f"attn_impl={self.attn_impl!r} must be 'auto', 'fused', or "
+                "'gather'")
+        if self.block_kv is not None and self.block_kv < 1:
+            raise ValueError(f"block_kv={self.block_kv} must be >= 1")
 
     @property
     def blocks_per_slot(self) -> int:
@@ -122,8 +147,10 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params,
                  scfg: Optional[ServeConfig] = None):
-        self.cfg, self.params = cfg, params
         self.scfg = scfg if scfg is not None else ServeConfig()
+        if self.scfg.block_kv is not None:
+            cfg = cfg.replace(block_kv=self.scfg.block_kv)
+        self.cfg, self.params = cfg, params
         self.model = build_model(cfg)
         attn_only = all(s.mixer == "attn" for s in cfg.resolved_pattern())
         if self.scfg.paged and not attn_only:
@@ -133,6 +160,17 @@ class Engine:
                 f"{[s.mixer for s in cfg.resolved_pattern()]} — pass "
                 "ServeConfig(paged=False) for the contiguous cache")
         self.paged = attn_only if self.scfg.paged is None else self.scfg.paged
+        impl = self.scfg.attn_impl
+        if impl == "auto":
+            # the fused kernel targets TPU; elsewhere (CPU CI) the gather
+            # fallback is both faster and what interpret mode exists to test
+            impl = ("fused" if self.paged and jax.default_backend() == "tpu"
+                    else "gather")
+        if impl == "fused" and not self.paged:
+            raise ValueError(
+                "attn_impl='fused' is the paged-pool decode kernel; it "
+                "requires the paged KV cache (ServeConfig(paged=True))")
+        self.attn_impl = impl
         self.allocator = (BlockAllocator(self.scfg.pool_blocks(),
                                          self.scfg.kv_block_size)
                           if self.paged else None)
@@ -160,6 +198,10 @@ class Engine:
         self._tokens = np.full((self.scfg.max_batch,), self.scfg.pad_id,
                                np.int32)
         self._keys = None                             # uint32 [slots, 2]
+        # shape of the most recent decode step (active slots, per-slot
+        # positions, bucketed table width), set by step(); telemetry for
+        # the serving benchmark's KV-traffic model
+        self.last_decode: Optional[Dict] = None
 
     # -- jitted cores -----------------------------------------------------------
 
@@ -193,9 +235,12 @@ class Engine:
                      block_tables=None):
         """One continuous-batching step: tokens [B], per-row cache index [B],
         per-row PRNG keys [B, 2] and sampling params [B].  ``block_tables``
-        (int32 [B, L]) selects the paged-pool cache layout."""
+        (int32 [B, L]) selects the paged-pool cache layout; ``self.attn_impl``
+        (resolved once at construction) picks fused-kernel vs gather paged
+        attention."""
         logits, cache = self.model.decode_step(params, tokens, cache, index,
-                                               block_tables=block_tables)
+                                               block_tables=block_tables,
+                                               attn_impl=self.attn_impl)
         split = jax.vmap(jax.random.split)(keys)       # [B, 2, 2]
         new_keys, subs = split[:, 0], split[:, 1]
         nxt = sample_batch(subs, logits, temps, top_ps)
@@ -265,6 +310,7 @@ class Engine:
         batch.  Returns the StepOutputs produced (admission first-tokens,
         then one token per active slot)."""
         outs: List[StepOutput] = []
+        self.last_decode = None        # stays None if no slot decodes
         admitted, rejected = self.sched.admit()
         outs.extend(rejected)
         for slot, req in admitted:
@@ -274,6 +320,7 @@ class Engine:
         if active:
             sc = self.sched
             bt = None
+            width = None
             if self.paged:
                 # gather only the blocks covering the deepest active row
                 # (power-of-two widths bound retraces, like prefill
@@ -283,6 +330,12 @@ class Engine:
                 width = bucket_length(self.allocator.blocks_for(depth), 1,
                                       sc.block_tables.shape[1])
                 bt = jnp.asarray(sc.block_tables[:, :width])
+            # snapshot of the decode-step shape actually run (post-admission,
+            # pre-record): benchmarks/speed_memory.py models per-step KV
+            # traffic from this instead of guessing from advanced state
+            self.last_decode = {"active": list(active),
+                                "positions": sc.positions.tolist(),
+                                "table_width": width}
             tok, self._cache, self._keys = self._decode(
                 self.params, jnp.asarray(self._tokens), self._cache,
                 jnp.asarray(sc.positions), self._keys,

@@ -8,6 +8,7 @@ from repro.core import quant as Q
 from repro.core.distill import attention_relation_loss
 from repro.kernels.bitlinear import ops as bl_ops, ref as bl_ref
 from repro.kernels.bitlinear.kernel import bitlinear_kernel
+from repro.kernels.paged_attention import ops as pa_ops, ref as pa_ref
 from repro.kernels.relation_kd import ops as rk_ops, ref as rk_ref
 from repro.kernels.relation_kd.kernel import relation_kl_rows_kernel
 from repro.kernels.ssd_scan import ops as ssd_ops
@@ -112,6 +113,101 @@ class TestRelationKD:
         g_k = jax.grad(lambda s: rk_ops.relation_kd_loss(s, ts, split_heads=2))(ss)
         np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_j),
                                    rtol=1e-3, atol=1e-6)
+
+
+def _paged_case(B, Hq, Hkv, Dh, bs, L, idxs, softcap=0.0, trash_rows=(),
+                seed=0):
+    """Build a paged decode problem with exclusively-owned blocks per live
+    row (mirrors the allocator's no-sharing invariant) and run kernel + ref.
+
+    Returns (kernel outs, ref outs, live row indices)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    n_blocks = 1 + B * L                  # trash block + exclusive blocks
+    k_pool = jax.random.normal(ks[0], (n_blocks, Hkv, bs, Dh), jnp.float32)
+    v_pool = jax.random.normal(ks[1], (n_blocks, Hkv, bs, Dh), jnp.float32)
+    q = jax.random.normal(ks[2], (B, Hq, Dh), jnp.float32)
+    kn = jax.random.normal(ks[3], (B, Hkv, Dh), jnp.float32)
+    vn = jax.random.normal(ks[4], (B, Hkv, Dh), jnp.float32)
+    bt = np.zeros((B, L), np.int32)       # unallocated entries -> trash (0)
+    nxt = 1
+    for b in range(B):
+        if b in trash_rows:
+            continue
+        for j in range(min(idxs[b] // bs, L - 1) + 1):
+            bt[b, j] = nxt
+            nxt += 1
+    idx = jnp.asarray(idxs, jnp.int32)
+    bt = jnp.asarray(bt)
+    got = pa_ops.paged_attention_decode(q, kn, vn, k_pool, v_pool, bt, idx,
+                                        softcap=softcap, interpret=True)
+    qg = q.reshape(B, Hkv, Hq // Hkv, Dh)
+    want = pa_ref.paged_attention_decode_ref(qg, kn, vn, k_pool, v_pool, bt,
+                                             idx, 1.0 / (Dh ** 0.5), softcap)
+    live = [b for b in range(B) if b not in trash_rows]
+    return got, want, live
+
+
+def _assert_paged_parity(got, want, live, B, Hq, Dh):
+    o_k, kp_k, vp_k = got
+    o_r, kp_r, vp_r = want
+    o_r = np.asarray(o_r).reshape(B, Hq, Dh)
+    np.testing.assert_allclose(np.asarray(o_k)[live], o_r[live],
+                               rtol=2e-5, atol=2e-5)
+    # scatter parity must be exact on every owned block; the trash block
+    # (id 0) is excluded — colliding idle-row writes land in unspecified
+    # order there, and nothing ever attends it
+    np.testing.assert_array_equal(np.asarray(kp_k)[1:], np.asarray(kp_r)[1:])
+    np.testing.assert_array_equal(np.asarray(vp_k)[1:], np.asarray(vp_r)[1:])
+
+
+class TestPagedAttentionDecode:
+    @pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (4, 1)])
+    def test_gqa_ratios_mixed_depths(self, hq, hkv):
+        B, Dh, bs, L = 3, 32, 4, 4
+        got, want, live = _paged_case(B, hq, hkv, Dh, bs, L, [0, 5, 13])
+        _assert_paged_parity(got, want, live, B, hq, Dh)
+
+    @pytest.mark.parametrize("idxs", [[4, 7], [3, 8], [0, 1]])
+    def test_partial_last_block_and_boundaries(self, idxs):
+        """idx on / off block boundaries: the freshly-entered block holds no
+        stored tokens, only the fused write; stale slots past idx masked."""
+        B, Hq, Hkv, Dh, bs, L = 2, 4, 2, 32, 4, 3
+        got, want, live = _paged_case(B, Hq, Hkv, Dh, bs, L, idxs)
+        _assert_paged_parity(got, want, live, B, Hq, Dh)
+
+    def test_single_block_tables(self):
+        B, Hq, Hkv, Dh, bs, L = 2, 2, 2, 32, 8, 1
+        got, want, live = _paged_case(B, Hq, Hkv, Dh, bs, L, [0, 6])
+        _assert_paged_parity(got, want, live, B, Hq, Dh)
+
+    def test_idle_trash_block_rows_are_finite(self):
+        """Idle rows (table all trash, parked write position) must stream
+        garbage without poisoning live rows or producing non-finite output."""
+        B, Hq, Hkv, Dh, bs, L = 3, 4, 2, 32, 4, 3
+        got, want, live = _paged_case(B, Hq, Hkv, Dh, bs, L, [2, 11, 11],
+                                      trash_rows=(2,))
+        _assert_paged_parity(got, want, live, B, Hq, Dh)
+        assert np.isfinite(np.asarray(got[0])).all()
+
+    def test_logit_softcap(self):
+        B, Hq, Hkv, Dh, bs, L = 2, 4, 2, 32, 4, 3
+        got, want, live = _paged_case(B, Hq, Hkv, Dh, bs, L, [5, 9],
+                                      softcap=30.0)
+        _assert_paged_parity(got, want, live, B, Hq, Dh)
+
+    def test_kv_bytes_model_resident_vs_dense(self):
+        """The traffic model the benchmark/roofline report: fused reads
+        resident blocks (+1 trash fetch per idle row), gather reads the
+        dense window for every slot."""
+        kw = dict(table_width=8, block_size=8, n_kv_heads=2, head_dim=32,
+                  n_layers=2, itemsize=4)
+        per_tok = 2 * 2 * 32 * 4 * 2
+        positions = [3, 20, 63, 63]          # slot 3 idle (parked)
+        fused = pa_ops.decode_kv_bytes(positions, [0, 1, 2], fused=True, **kw)
+        dense = pa_ops.decode_kv_bytes(positions, [0, 1, 2], fused=False, **kw)
+        assert fused == (1 + 3 + 8 + 1) * 8 * per_tok
+        assert dense == 4 * 8 * 8 * per_tok
+        assert fused < dense
 
 
 class TestSSDScan:
