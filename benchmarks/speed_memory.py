@@ -145,8 +145,9 @@ def paged_kv_footprint(n_requests: int = 10, max_tokens: int = 8) -> dict:
     contig = serve(ServeConfig(max_batch=4, max_len=max_len, paged=False))
     paged = serve(ServeConfig(max_batch=4, max_len=max_len, paged=True,
                               kv_block_size=bs, num_kv_blocks=num_blocks))
-    assert paged["outputs"] == contig["outputs"], \
-        "paged engine diverged from contiguous greedy outputs"
+    if paged["outputs"] != contig["outputs"]:
+        raise RuntimeError(
+            "paged engine diverged from contiguous greedy outputs")
     for v in (contig, paged):
         v.pop("outputs")
     return {"contiguous": contig, "paged": paged,
@@ -231,8 +232,9 @@ def serving_decode_bench(n_requests: int = 8, max_tokens: int = 8) -> dict:
 
     gather = serve("gather")
     fused = serve("fused")
-    assert fused["outputs"] == gather["outputs"], \
-        "fused paged attention diverged from the gather path"
+    if fused["outputs"] != gather["outputs"]:
+        raise RuntimeError(
+            "fused paged attention diverged from the gather path")
     mean_g = statistics.mean(gather["kv_samples"]["gather"])
     mean_f = statistics.mean(gather["kv_samples"]["fused"])
     # roofline memory terms for a representative (mean-traffic) step
@@ -263,7 +265,101 @@ def serving_decode_bench(n_requests: int = 8, max_tokens: int = 8) -> dict:
                 "KV bytes are the analytic per-step traffic model shared "
                 "with launch/roofline.py",
     }
-    (RESULTS / "BENCH_serving.json").write_text(json.dumps(out, indent=1))
+    _write_bench_serving(out, fresh=True)
+    return out
+
+
+def _write_bench_serving(update: dict, fresh: bool = False) -> None:
+    """Merge ``update`` into BENCH_serving.json (the CI artifact).
+    ``serving_decode_bench`` writes the base document fresh; the prefix-cache
+    bench folds its section into it."""
+    path = RESULTS / "BENCH_serving.json"
+    doc = {}
+    if not fresh and path.exists():
+        doc = json.loads(path.read_text())
+    doc.update(update)
+    path.write_text(json.dumps(doc, indent=1))
+
+
+def prefix_cache_bench(n_requests: int = 10, max_tokens: int = 6) -> dict:
+    """Prefix-hit workload: every prompt is one of two shared 24-token
+    "system prompts" plus a short random tail.  Compares
+    ``ServeConfig(prefix_cache=True)`` against the no-sharing baseline on
+    greedy outputs (must be token-for-token identical), admission-prefill
+    work (cache positions actually run through the prefill scan — the FLOPs
+    proxy; with sharing only the unmatched tail runs), end-to-end wall time,
+    and peak *request-referenced* KV bytes (shared system-prompt blocks
+    count once instead of per-request).  Folded into BENCH_serving.json.
+    """
+    from repro.models import build_model
+    from repro.serving.api import SamplingParams
+    from repro.serving.engine import Engine, ServeConfig
+
+    cfg = get_config("qwen1.5-0.5b").reduced(layers=2).replace(
+        compute_dtype="float32", param_dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    bs, max_len, sys_len = 8, 64, 24
+    systems = [rng.integers(0, 64, sys_len).tolist() for _ in range(2)]
+    prompts = [systems[int(rng.integers(2))]
+               + rng.integers(0, 64, int(rng.integers(3, 7))).tolist()
+               for _ in range(n_requests)]
+    sp = SamplingParams(max_tokens=max_tokens)
+
+    def serve(pc: bool) -> dict:
+        eng = Engine(cfg, params, ServeConfig(
+            max_batch=4, max_len=max_len, paged=True, kv_block_size=bs,
+            prefix_cache=pc))
+        reqs = [eng.submit(p, sp) for p in prompts]
+        peak_ref_blocks = 0
+        t0 = time.perf_counter()
+        while eng.has_pending():
+            eng.step()
+            s = eng.stats()
+            cached_unref = (s.prefix_cache or {}).get(
+                "cached_unreferenced_blocks", 0)
+            peak_ref_blocks = max(peak_ref_blocks,
+                                  s.blocks_in_use - cached_unref)
+        wall = time.perf_counter() - t0
+        s = eng.stats()
+        block_bytes = eng.kv_cache_bytes() // eng.scfg.pool_blocks()
+        return {
+            "prefill_positions": s.prefill_positions,
+            "prefill_positions_skipped": s.prefill_positions_skipped,
+            "peak_referenced_kv_blocks": peak_ref_blocks,
+            "peak_referenced_kv_bytes": peak_ref_blocks * block_bytes,
+            "wall_s": wall,
+            "prefix_cache": s.prefix_cache,
+            "outputs": [r.output_tokens for r in reqs],
+        }
+
+    base = serve(False)
+    shared = serve(True)
+    # real exceptions, not asserts: these are the bench's acceptance gates
+    # and must not vanish under `python -O`
+    if shared["outputs"] != base["outputs"]:
+        raise RuntimeError(
+            "prefix-cache engine diverged from no-sharing greedy outputs")
+    if shared["prefill_positions"] >= base["prefill_positions"]:
+        raise RuntimeError(
+            "prefix cache did not reduce admission-prefill positions")
+    for v in (base, shared):
+        v.pop("outputs")
+    out = {
+        "config": {"arch": "qwen1.5-0.5b reduced(2)", "max_batch": 4,
+                   "max_len": max_len, "kv_block_size": bs,
+                   "n_requests": n_requests, "n_system_prompts": 2,
+                   "system_prompt_len": sys_len, "max_tokens": max_tokens},
+        "baseline": base, "with_prefix_cache": shared,
+        "prefill_positions_ratio": base["prefill_positions"]
+        / max(shared["prefill_positions"], 1),
+        "peak_kv_bytes_ratio": base["peak_referenced_kv_bytes"]
+        / max(shared["peak_referenced_kv_bytes"], 1),
+        "note": "prefill positions = cache positions run through the "
+                "admission prefill scan (FLOPs proxy); peak KV bytes count "
+                "request-referenced blocks, shared prefix blocks once",
+    }
+    _write_bench_serving({"prefix_cache": out})
     return out
 
 
@@ -291,6 +387,7 @@ def main(force: bool = False):
         "continuous_batching": continuous_batching_toks(),
         "paged_kv": paged_kv_footprint(),
         "serving_decode": serving_decode_bench(),
+        "prefix_cache": prefix_cache_bench(),
     }, force)
     print("\n== Fig 1 (memory footprint / decode weight traffic) ==")
     for arch, v in res["footprint"].items():
@@ -342,6 +439,22 @@ def main(force: bool = False):
               f"{sd['kv_bytes_ratio_gather_over_fused']:.2f}x")
         emit("speed_memory/attn_kv_read_ratio",
              sd["kv_bytes_ratio_gather_over_fused"], "gather/fused")
+    pc = res.get("prefix_cache", {})
+    if pc:
+        print("radix prefix cache (shared-system-prompt workload, "
+              "BENCH_serving.json):")
+        for mode in ("baseline", "with_prefix_cache"):
+            v = pc[mode]
+            print(f"  {mode:18s} prefill {v['prefill_positions']:4d} pos  "
+                  f"peak ref KV {v['peak_referenced_kv_bytes'] / 2 ** 10:.0f}"
+                  f" KiB")
+            emit(f"speed_memory/prefix_{mode}_prefill_pos",
+                 v["prefill_positions"], "admission prefill")
+        print(f"  prefill-positions ratio = "
+              f"{pc['prefill_positions_ratio']:.2f}x   peak KV-bytes ratio = "
+              f"{pc['peak_kv_bytes_ratio']:.2f}x")
+        emit("speed_memory/prefix_prefill_ratio",
+             pc["prefill_positions_ratio"], "baseline/prefix-cache")
     return res
 
 
@@ -350,11 +463,13 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--serving-only", action="store_true",
-                    help="run just the paged decode-attention comparison "
-                         "and write BENCH_serving.json (CI artifact)")
+                    help="run just the serving benches (paged decode-"
+                         "attention comparison + prefix-cache workload) and "
+                         "write BENCH_serving.json (CI artifact)")
     a = ap.parse_args()
     if a.serving_only:
         out = serving_decode_bench()
+        out["prefix_cache"] = prefix_cache_bench()
         print(json.dumps(out, indent=1))
         print(f"wrote {RESULTS / 'BENCH_serving.json'}")
     else:

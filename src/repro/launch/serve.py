@@ -11,6 +11,18 @@ admitted mid-flight by the scheduler) with per-token streaming output:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
         --requests 16 --arrival-rate 4 --stream
+
+Radix prefix cache (serving/prefix_cache.py): --prefix-cache shares the KV
+blocks of repeated prompt prefixes across requests, and --shared-prefixes N
+makes the load generator draw every prompt as one of N fixed "system
+prompts" (--shared-prefix-len tokens) plus a random tail — the workload
+where admission prefill collapses to the unshared suffix:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
+        --requests 16 --prefix-cache --shared-prefixes 2 --shared-prefix-len 32
+
+Engine.stats() (admissions, preemptions, block occupancy, prefix-cache
+hits/misses/evictions) is printed at end of run either way.
 """
 from __future__ import annotations
 
@@ -37,8 +49,11 @@ def build_engine(args) -> Engine:
     if args.packed:
         cfg, params = convert_to_packed(cfg, params)
         print("[packed] ternary 2-bit weights")
+    prompt_len = args.prompt_len
+    if args.shared_prefixes > 0:
+        prompt_len = args.shared_prefix_len + args.tail_len
     scfg = ServeConfig(max_batch=args.max_batch,
-                       max_len=args.prompt_len + args.max_tokens,
+                       max_len=prompt_len + args.max_tokens,
                        temperature=args.temperature, top_p=args.top_p,
                        # None = auto: paged for attention-only stacks,
                        # contiguous for SSM/hybrid/cross caches
@@ -46,10 +61,14 @@ def build_engine(args) -> Engine:
                        kv_block_size=args.kv_block_size,
                        num_kv_blocks=args.num_kv_blocks,
                        attn_impl=args.attn_impl,
-                       block_kv=args.block_kv)
+                       block_kv=args.block_kv,
+                       prefix_cache=args.prefix_cache,
+                       prefix_cache_blocks=args.prefix_cache_blocks)
     eng = Engine(cfg, params, scfg)
     mode = (f"paged bs={scfg.kv_block_size} blocks={scfg.pool_blocks()}"
             if eng.paged else "contiguous")
+    if eng.prefix_cache is not None:
+        mode += ", radix prefix cache"
     print(f"[kv-cache] {mode}, {eng.kv_cache_bytes() / 2**20:.2f} MiB")
     if eng.paged:
         print(f"[attn] decode impl = {eng.attn_impl}"
@@ -58,13 +77,46 @@ def build_engine(args) -> Engine:
     return eng
 
 
+def make_prompt_source(args):
+    """Prompt generator for the load modes.  With --shared-prefixes N, every
+    prompt is one of N fixed system prefixes plus a random tail — the
+    workload the radix prefix cache collapses (each admission re-prefills
+    only the tail once its prefix is resident)."""
+    rng = np.random.default_rng(0)
+    if args.shared_prefixes > 0:
+        systems = [rng.integers(0, 64, args.shared_prefix_len).tolist()
+                   for _ in range(args.shared_prefixes)]
+
+        def draw():
+            sys_p = systems[int(rng.integers(len(systems)))]
+            return sys_p + rng.integers(0, 64, args.tail_len).tolist()
+        return draw
+    return lambda: rng.integers(0, 64, args.prompt_len).tolist()
+
+
+def print_stats(eng: Engine) -> None:
+    s = eng.stats()
+    line = (f"[stats] admissions={s.admissions} preemptions={s.preemptions} "
+            f"prefill_positions={s.prefill_positions} "
+            f"skipped_via_prefix={s.prefill_positions_skipped}")
+    if s.blocks_in_use is not None:
+        line += f" blocks_in_use={s.blocks_in_use} blocks_free={s.blocks_free}"
+    print(line)
+    if s.prefix_cache is not None:
+        pc = s.prefix_cache
+        print(f"[prefix-cache] hits={pc['hits']} misses={pc['misses']} "
+              f"evictions={pc['evictions']} "
+              f"tokens_matched={pc['tokens_matched']} "
+              f"cached_blocks={pc['cached_blocks']} "
+              f"(unreferenced {pc['cached_unreferenced_blocks']})")
+
+
 def run_closed_loop(eng: Engine, args) -> None:
     """Submit every request up front and drain the scheduler."""
-    rng = np.random.default_rng(0)
+    draw = make_prompt_source(args)
     sp = SamplingParams(max_tokens=args.max_tokens,
                         temperature=args.temperature, top_p=args.top_p)
-    reqs = [eng.submit(rng.integers(0, 64, args.prompt_len).tolist(), sp)
-            for _ in range(args.requests)]
+    reqs = [eng.submit(draw(), sp) for _ in range(args.requests)]
     t0 = time.time()
     for out in eng.stream():
         if args.stream and out.token >= 0:
@@ -77,6 +129,7 @@ def run_closed_loop(eng: Engine, args) -> None:
     for r in reqs:
         print(f"  req {r.uid} [{r.finish_reason.value}]: "
               f"{r.output_tokens[:12]}{'...' if r.num_generated > 12 else ''}")
+    print_stats(eng)
 
 
 def run_open_loop(eng: Engine, args) -> None:
@@ -84,6 +137,7 @@ def run_open_loop(eng: Engine, args) -> None:
     the engine keeps stepping and the scheduler admits arrivals mid-flight,
     which is exactly the regime where continuous batching pays off."""
     rng = np.random.default_rng(0)
+    draw = make_prompt_source(args)
     sp = SamplingParams(max_tokens=args.max_tokens,
                         temperature=args.temperature, top_p=args.top_p)
     gaps = rng.exponential(1.0 / args.arrival_rate, args.requests)
@@ -94,7 +148,7 @@ def run_open_loop(eng: Engine, args) -> None:
     while submitted < args.requests or eng.has_pending():
         now = time.time() - t0
         while submitted < args.requests and arrivals[submitted] <= now:
-            r = eng.submit(rng.integers(0, 64, args.prompt_len).tolist(), sp)
+            r = eng.submit(draw(), sp)
             submit_ts[r.uid] = now
             reqs.append(r)
             submitted += 1
@@ -117,6 +171,7 @@ def run_open_loop(eng: Engine, args) -> None:
         print(f"request latency: mean {np.mean(lats)*1e3:.0f} ms  "
               f"p50 {np.percentile(lats, 50)*1e3:.0f} ms  "
               f"p95 {np.percentile(lats, 95)*1e3:.0f} ms")
+    print_stats(eng)
 
 
 def main(argv=None):
@@ -149,6 +204,21 @@ def main(argv=None):
     ap.add_argument("--block-kv", type=int, default=None,
                     help="override Attention.block_kv (KV block length of "
                          "the blocked/flash prefill impl)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache: share KV blocks of repeated "
+                         "prompt prefixes across requests (paged only)")
+    ap.add_argument("--prefix-cache-blocks", type=int, default=None,
+                    help="cap on blocks the prefix cache may keep resident "
+                         "(default: unbounded, evict only on pool pressure)")
+    ap.add_argument("--shared-prefixes", type=int, default=0,
+                    help="load-gen: draw every prompt from N shared system "
+                         "prefixes plus a random tail (0 = fully random "
+                         "prompts of --prompt-len)")
+    ap.add_argument("--shared-prefix-len", type=int, default=32,
+                    help="tokens per shared system prefix")
+    ap.add_argument("--tail-len", type=int, default=8,
+                    help="random per-request tail tokens after a shared "
+                         "prefix")
     args = ap.parse_args(argv)
 
     eng = build_engine(args)

@@ -1,14 +1,16 @@
-from repro.serving.api import (FinishReason, GenerationRequest, SamplingParams,
-                               StepOutput, make_request)
+from repro.serving.api import (EngineStats, FinishReason, GenerationRequest,
+                               SamplingParams, StepOutput, make_request)
 from repro.serving.engine import (Engine, Request, ServeConfig, ServingEngine,
                                   convert_to_packed)
-from repro.serving.paged import BlockAllocator
+from repro.serving.paged import BlockAllocator, BlockPoolError
+from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.sampling import greedy, sample_batch, sample_top_p
 from repro.serving.scheduler import Scheduler
 
 __all__ = [
     "Engine", "ServingEngine", "ServeConfig", "Request", "convert_to_packed",
-    "FinishReason", "GenerationRequest", "SamplingParams", "StepOutput",
-    "make_request", "Scheduler", "BlockAllocator", "greedy", "sample_batch",
+    "EngineStats", "FinishReason", "GenerationRequest", "SamplingParams",
+    "StepOutput", "make_request", "Scheduler", "BlockAllocator",
+    "BlockPoolError", "RadixPrefixCache", "greedy", "sample_batch",
     "sample_top_p",
 ]

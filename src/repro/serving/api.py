@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 
 class FinishReason(str, enum.Enum):
@@ -70,6 +70,27 @@ class StepOutput:
     index: int                                  # position in the output, 0-based
     finished: bool = False
     finish_reason: Optional[FinishReason] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStats:
+    """Lightweight runtime counters, snapshotted by ``Engine.stats()``.
+
+    ``prefill_positions`` counts cache positions actually run through the
+    admission prefill scan; ``prefill_positions_skipped`` counts positions
+    covered by prefix-cache-shared blocks instead (zero prefill compute).
+    Block fields are ``None`` on the contiguous (non-paged) path, and
+    ``prefix_cache`` is ``None`` unless ``ServeConfig.prefix_cache`` is on —
+    when set it holds the radix-cache counters (hits / misses / evictions /
+    tokens_matched / cached_blocks / cached_unreferenced_blocks).
+    """
+    admissions: int = 0
+    preemptions: int = 0
+    prefill_positions: int = 0
+    prefill_positions_skipped: int = 0
+    blocks_in_use: Optional[int] = None
+    blocks_free: Optional[int] = None
+    prefix_cache: Optional[Dict[str, int]] = None
 
 
 def make_request(prompt: Sequence[int], uid: int,

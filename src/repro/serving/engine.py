@@ -46,8 +46,20 @@ pools with an online softmax, KV bytes read O(tokens resident)) or the dense
 block-table gather fallback; ``"auto"`` picks fused on TPU and gather on
 CPU/interpret, and both are greedy-parity identical (tests/test_paged_kv.py).
 
-Known gaps recorded in ROADMAP.md Open items: no prefix-cache sharing (the
-block allocator's refcounts are the stub for it), admissions prefill one
+``ServeConfig(prefix_cache=True)`` (paged only) layers the **radix prefix
+cache** (serving/prefix_cache.py) on top: admission walks a block-granular
+trie of previously-prefilled token prefixes, maps every fully-matched block
+into the slot's table via ``BlockAllocator.share()``, and the engine
+prefills only the unmatched suffix (``_prefill_impl`` takes a start offset;
+``_seed_prefix_impl`` gathers the shared prefix KV into the batch-of-one
+prefill cache first so suffix attention sees it).  Finished/preempted
+requests *release* their blocks to the cache instead of freeing them, so hot
+system prompts stay resident until LRU eviction reclaims them under pool
+pressure; greedy outputs are token-for-token identical with the cache on or
+off (tests/test_prefix_cache.py).  ``Engine.stats()`` snapshots admissions,
+preemptions, block occupancy, and prefix hit/miss/eviction counters.
+
+Known gaps recorded in ROADMAP.md Open items: admissions prefill one
 request at a time.
 """
 from __future__ import annotations
@@ -61,9 +73,10 @@ import numpy as np
 
 from repro.models import build_model
 from repro.models.base import ModelConfig
-from repro.serving.api import (FinishReason, GenerationRequest, SamplingParams,
-                               StepOutput, make_request)
-from repro.serving.paged import BlockAllocator
+from repro.serving.api import (EngineStats, FinishReason, GenerationRequest,
+                               SamplingParams, StepOutput, make_request)
+from repro.serving.paged import TRASH_BLOCK, BlockAllocator
+from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.sampling import sample_batch
 from repro.serving.scheduler import Scheduler, bucket_length
 
@@ -100,6 +113,15 @@ class ServeConfig:
     # override the model's attention KV block length (Attention.block_kv,
     # used by the blocked/flash prefill impl); None keeps the config value
     block_kv: Optional[int] = None
+    # -- radix prefix cache (serving/prefix_cache.py, paged only) ----------
+    # share KV blocks of repeated prompt prefixes (system prompts) across
+    # requests: admission maps trie-matched blocks into the slot's table and
+    # prefills only the unmatched suffix; finished/preempted requests
+    # release their blocks to the cache (LRU-evicted under pool pressure)
+    prefix_cache: bool = False
+    # cap on blocks the trie may hold (None = unbounded; eviction then
+    # happens only when alloc() would starve)
+    prefix_cache_blocks: Optional[int] = None
 
     def __post_init__(self):
         if self.prefill_bucket_min < 1:
@@ -118,6 +140,14 @@ class ServeConfig:
                 "'gather'")
         if self.block_kv is not None and self.block_kv < 1:
             raise ValueError(f"block_kv={self.block_kv} must be >= 1")
+        if self.prefix_cache and self.paged is False:
+            raise ValueError(
+                "prefix_cache=True shares paged KV blocks; it requires the "
+                "paged cache (ServeConfig(paged=True) or auto)")
+        if self.prefix_cache_blocks is not None and self.prefix_cache_blocks < 1:
+            raise ValueError(
+                f"prefix_cache_blocks={self.prefix_cache_blocks} must be "
+                ">= 1 or None")
 
     @property
     def blocks_per_slot(self) -> int:
@@ -174,9 +204,22 @@ class Engine:
         self.allocator = (BlockAllocator(self.scfg.pool_blocks(),
                                          self.scfg.kv_block_size)
                           if self.paged else None)
+        self.prefix_cache: Optional[RadixPrefixCache] = None
+        if self.scfg.prefix_cache:
+            if not self.paged:
+                raise ValueError(
+                    "prefix_cache=True requires the paged KV cache; this "
+                    "model resolved to the contiguous layout — pass "
+                    "ServeConfig(paged=True) for an attention-only stack")
+            self.prefix_cache = RadixPrefixCache(
+                self.allocator, self.scfg.prefix_cache_blocks)
+            # alloc() LRU-evicts cached-but-unreferenced prefix blocks
+            # before reporting starvation to admission/growth
+            self.allocator.reclaim = self.prefix_cache.evict
         self.sched = Scheduler(self.scfg.max_batch, self.scfg.max_len,
                                self.scfg.eos_id, self.scfg.prefill_bucket_min,
-                               allocator=self.allocator)
+                               allocator=self.allocator,
+                               prefix_cache=self.prefix_cache)
         # donate the cache (and key) buffers: step/admission outputs replace
         # them, so XLA can update in place instead of copying the whole
         # cache (contiguous [slots, max_len] regions or the paged block pool)
@@ -189,6 +232,12 @@ class Engine:
                                donate_argnums=(0,))
         self._insert_paged = jax.jit(self._insert_paged_impl,
                                      donate_argnums=(0,))
+        self._seed_prefix = jax.jit(self._seed_prefix_impl,  # per (bucket, ns)
+                                    donate_argnums=(0,))
+        # admission-prefill work counters (Engine.stats()): positions run
+        # through the prefill scan vs positions skipped via shared blocks
+        self._prefill_positions = 0
+        self._prefill_skipped = 0
         self._uid_counter = 0
         self._requests: Dict[int, GenerationRequest] = {}   # uid -> in flight
         # live decode state, allocated lazily on first admission; idle rows
@@ -205,18 +254,24 @@ class Engine:
 
     # -- jitted cores -----------------------------------------------------------
 
-    def _prefill_impl(self, params, tokens, length, cache, key, temp, top_p):
-        """tokens [1, P] right-padded to the bucket length; runs decode over
-        positions 0..P-1 under lax.scan.  Cache updates at pad positions
-        (t >= length) are masked out, so KV rows beyond the prompt stay zero
-        and recurrent SSM states are exactly the length-token state.  Returns
-        (first sampled token [1], filled cache, advanced PRNG key)."""
-        b, plen = tokens.shape
+    def _prefill_impl(self, params, tokens, length, cache, key, temp, top_p,
+                      start):
+        """tokens [1, S] — the *unmatched suffix* of the prompt, right-padded
+        to its own bucket length; runs decode over absolute cache positions
+        start..start+S-1 under lax.scan (``start`` 0 without prefix sharing,
+        i.e. the whole prompt).  With a nonzero start, the cache already
+        holds the prefix-shared KV at positions < start
+        (``_seed_prefix_impl``), so suffix attention sees the full context.
+        Cache updates at pad positions (t >= length, the suffix length) are
+        masked out, so KV rows beyond the prompt stay zero and recurrent SSM
+        states are exactly the length-token state.  Returns (first sampled
+        token [1], filled cache, advanced PRNG key)."""
+        b, slen = tokens.shape
 
         def step(carry, t):
             cache, last_logits = carry
             logits, new_cache = self.model.decode_step(
-                params, tokens[:, t], cache, jnp.int32(t))
+                params, tokens[:, t], cache, start + t)
             keep = t < length
             cache = jax.tree_util.tree_map(
                 lambda n, o: jnp.where(keep, n, o), new_cache, cache)
@@ -225,11 +280,29 @@ class Engine:
 
         v = self.cfg.padded_vocab
         init = (cache, jnp.zeros((b, v), logits_dtype(self.cfg)))
-        (cache, last_logits), _ = jax.lax.scan(step, init, jnp.arange(plen))
+        (cache, last_logits), _ = jax.lax.scan(step, init, jnp.arange(slen))
         key, sub = jax.random.split(key)
         first = sample_batch(sub[None], last_logits,
                              jnp.reshape(temp, (1,)), jnp.reshape(top_p, (1,)))
         return first, cache, key
+
+    def _seed_prefix_impl(self, pcache, pool, ids):
+        """Gather the trie-shared prefix KV out of the paged pool into
+        positions 0..len(ids)*bs-1 of the batch-of-one prefill cache, so the
+        suffix-only prefill scan attends the full context without
+        recomputing it.  ``ids`` int32 [ns]: pool blocks holding logical
+        blocks 0..ns-1 of the prompt.
+
+        Leaves: pcache [R, 1, Hkv, bucket, Dh], pool [R, N, Hkv, bs, Dh]
+        (R = scanned stack repeats)."""
+        def put(small, big):
+            g = big[:, ids]                       # [R, ns, Hkv, bs, Dh]
+            r, ns, hkv, bs, dh = g.shape
+            g = g.transpose(0, 2, 1, 3, 4).reshape(r, hkv, ns * bs, dh)
+            return small.at[:, :, :, :ns * bs].set(
+                g[:, None].astype(small.dtype))
+
+        return jax.tree_util.tree_map(put, pcache, pool)
 
     def _decode_impl(self, params, tokens, cache, index, keys, temps, top_ps,
                      block_tables=None):
@@ -260,7 +333,11 @@ class Engine:
         pool blocks.  ``block_ids`` int32 [nb] maps the bucket's logical
         blocks to pool blocks; entries past the slot's allocation point at
         the trash block (the bucket may round past the allocated coverage —
-        those positions are pad zeros nothing will attend to).
+        those positions are pad zeros nothing will attend to), and so do
+        entries for prefix-shared blocks: those are read-only (the trie and
+        other requests hold them), and the seeded/recomputed copy in the
+        prefill cache is identical, so it is discarded to trash instead of
+        copy-on-write.
 
         Leaves: pool [R, N, Hkv, bs, Dh], pcache [R, 1, Hkv, bucket, Dh]
         (R = scanned stack repeats)."""
@@ -432,6 +509,23 @@ class Engine:
                     jnp.dtype(self.scfg.cache_dtype))
             self._keys = jnp.zeros((self.scfg.max_batch, 2), jnp.uint32)
 
+    def stats(self) -> EngineStats:
+        """Snapshot of the engine's runtime counters: admissions,
+        preemptions, admission-prefill work (positions run vs skipped via
+        prefix sharing), paged-block occupancy, and — with
+        ``ServeConfig(prefix_cache=True)`` — the radix-cache
+        hit/miss/eviction counters."""
+        alloc = self.allocator
+        return EngineStats(
+            admissions=self.sched.admissions,
+            preemptions=self.sched.preemptions,
+            prefill_positions=self._prefill_positions,
+            prefill_positions_skipped=self._prefill_skipped,
+            blocks_in_use=None if alloc is None else alloc.blocks_in_use(),
+            blocks_free=None if alloc is None else alloc.available(),
+            prefix_cache=(None if self.prefix_cache is None
+                          else self.prefix_cache.stats()))
+
     def kv_cache_bytes(self) -> int:
         """Resident KV-cache bytes of the live decode state (the paged pool
         or the contiguous [slots, max_len] regions)."""
@@ -450,26 +544,50 @@ class Engine:
         insert it into the slot's cache (contiguous row or allocated pool
         blocks), and record the first sampled token.  A preempted request
         re-admits with its generated tokens appended to the prefill, resuming
-        where it left off (recompute preemption)."""
+        where it left off (recompute preemption).
+
+        With prefix sharing, the scheduler set ``prefix_lens[slot]`` to the
+        trie-covered prefix length: the shared KV is gathered into the
+        prefill cache (``_seed_prefix``) and the scan runs only the suffix —
+        its own, smaller length bucket — from that start offset.  A fully
+        matched prompt still recomputes its last position (the logits seed
+        the first sampled token); that position's cache write lands in a
+        shared block's logical slot and is discarded to trash on insert."""
         self._ensure_state()
         sc, scfg = self.sched, self.scfg
         tokens = list(req.prompt) + list(req.output_tokens)
         plen = len(tokens)
         bucket = sc.bucket(plen)
-        toks = np.full((1, bucket), scfg.pad_id, np.int32)
-        toks[0, :plen] = tokens
+        start = int(sc.prefix_lens[slot])         # 0 without prefix sharing
+        n_shared = sc.shared_counts[slot]
+        suffix = plen - start
+        # the suffix gets its own (smaller) bucket; cap so the scan's last
+        # masked position start + sbucket - 1 stays inside the prefill cache
+        sbucket = min(sc.bucket(suffix), bucket - start)
+        toks = np.full((1, sbucket), scfg.pad_id, np.int32)
+        toks[0, :suffix] = tokens[start:]
         pcache = self.model.init_cache(self.params, 1, bucket,
                                        jnp.dtype(scfg.cache_dtype))
+        if n_shared:
+            pcache = self._seed_prefix(
+                pcache, self._cache,
+                jnp.asarray(sc.block_ids[slot][:n_shared], jnp.int32))
         first, pcache, key = self._prefill(
-            self.params, jnp.asarray(toks), jnp.int32(plen), pcache,
+            self.params, jnp.asarray(toks), jnp.int32(suffix), pcache,
             self._request_key(req), jnp.float32(req.params.temperature),
-            jnp.float32(req.params.top_p))
+            jnp.float32(req.params.top_p), jnp.int32(start))
+        self._prefill_positions += suffix
+        self._prefill_skipped += start
         if self.paged:
-            # the slot's block-table row is already owned-ids followed by
-            # trash padding, so bucket blocks past the allocation land in
-            # the trash block (their positions are pad zeros)
+            # the slot's block-table row is already shared-ids + owned-ids
+            # followed by trash padding, so bucket blocks past the
+            # allocation land in the trash block (their positions are pad
+            # zeros); shared blocks are remapped to trash too — they are
+            # read-only, and the prefill cache's seeded/recomputed copy of
+            # them is identical, so it is discarded instead of copy-on-write
             nb = self.allocator.blocks_for(bucket)
-            ids = sc.block_tables[slot][:nb]
+            ids = sc.block_tables[slot][:nb].copy()
+            ids[:min(n_shared, nb)] = TRASH_BLOCK
             self._cache = self._insert_paged(self._cache, pcache,
                                              jnp.asarray(ids))
         else:

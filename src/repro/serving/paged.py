@@ -15,22 +15,42 @@ the cache instead of the weights.
 Block 0 is reserved as the **trash block**: idle decode rows (and insert
 writes past a slot's allocation) are pointed at it, so the jitted decode step
 never needs a branch on slot occupancy; trash contents are never attended by
-a live row because live rows only gather their own exclusively-owned blocks.
+a live row because live rows only gather their own (or prefix-shared,
+read-only) blocks.
 
-``refcounts`` is the prefix-cache-sharing entry point (ROADMAP): a shared
-prompt prefix becomes shared block-table entries with ``share()`` bumping the
-count and ``free()`` only recycling a block when its count hits zero.
-Nothing calls ``share()`` yet — the allocator is shaped for it, the radix
-prefix index on top is the follow-up PR.
+``refcounts`` is the prefix-sharing protocol (serving/prefix_cache.py):
+every holder of a block — an admitted request via its block table, or the
+radix prefix cache via a trie node — owns one reference.  ``share()`` adds a
+reference to a live block (the scheduler calls it for every trie-matched
+prefix block it maps into a slot's table, and the prefix cache calls it when
+a block is first inserted into the trie); ``free()`` drops one reference and
+recycles the block only at zero.  A block whose sole remaining reference is
+the trie's is *cached-but-unreferenced*: resident so a repeated prefix skips
+its prefill, but reclaimable — ``alloc()`` calls the ``reclaim`` hook (wired
+to :meth:`RadixPrefixCache.evict`) to LRU-evict such blocks before reporting
+starvation.  Shared blocks are never written: block-granular matching means a
+shared prefix always ends on a block boundary, so a request's own writes
+(prefill suffix + decode growth) land in its exclusively-owned blocks and
+recomputed-but-matched tail positions are discarded to the trash block
+instead of copy-on-write.
+
+Violations of the lifecycle (double free, freeing the trash block, sharing a
+free block) raise :class:`BlockPoolError` — real exceptions, not ``assert``s,
+so the invariants hold under ``python -O`` too.
 """
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, List, Optional, Sequence
+from typing import Callable, Deque, List, Optional, Sequence
 
 import numpy as np
 
 TRASH_BLOCK = 0
+
+
+class BlockPoolError(RuntimeError):
+    """Block lifecycle violation: double free, free/share of the trash
+    block, or share of a block that is not allocated."""
 
 
 class BlockAllocator:
@@ -45,12 +65,18 @@ class BlockAllocator:
             raise ValueError(f"block_size={block_size} must be >= 1")
         self.num_blocks = num_blocks
         self.block_size = block_size
-        # per-block reference counts; the prefix-sharing stub.  Block 0 (the
-        # trash block) is pinned with refcount 1 and never enters the free
-        # list.
+        # per-block reference counts (one per holder: slot block tables and
+        # prefix-cache trie nodes).  Block 0 (the trash block) is pinned with
+        # refcount 1 and never enters the free list.
         self.refcounts = np.zeros((num_blocks,), np.int32)
         self.refcounts[TRASH_BLOCK] = 1
         self._free: Deque[int] = deque(range(1, num_blocks))
+        # eviction hook: called by alloc() with the shortfall when the free
+        # list cannot satisfy a request; returns blocks actually reclaimed.
+        # The engine wires this to RadixPrefixCache.evict so cached-but-
+        # unreferenced prefix blocks are LRU-recycled instead of starving
+        # admission/growth.
+        self.reclaim: Optional[Callable[[int], int]] = None
 
     # -- capacity ------------------------------------------------------------
 
@@ -66,11 +92,19 @@ class BlockAllocator:
         """Blocks needed to cover ``n_tokens`` cache positions."""
         return -(-n_tokens // self.block_size)
 
+    def blocks_in_use(self) -> int:
+        """Allocated blocks (any holder), excluding the trash block."""
+        return self.allocatable - len(self._free)
+
     # -- alloc / free ----------------------------------------------------------
 
     def alloc(self, n: int) -> Optional[List[int]]:
         """Pop ``n`` blocks (refcount 1 each); None if fewer are free —
-        callers treat that as 'wait', never as partial allocation."""
+        callers treat that as 'wait', never as partial allocation.  When the
+        free list is short, the ``reclaim`` hook (prefix-cache LRU eviction)
+        is given a chance to recycle cached-but-unreferenced blocks first."""
+        if n > len(self._free) and self.reclaim is not None:
+            self.reclaim(n - len(self._free))
         if n > len(self._free):
             return None
         ids = [self._free.popleft() for _ in range(n)]
@@ -78,15 +112,23 @@ class BlockAllocator:
         return ids
 
     def share(self, block_id: int) -> int:
-        """Prefix-sharing stub: add a reference to an allocated block."""
-        assert self.refcounts[block_id] > 0, f"share() on free block {block_id}"
+        """Add a reference to an allocated block (prefix sharing: a slot's
+        block table or a trie node becoming an additional holder)."""
+        if block_id == TRASH_BLOCK:
+            raise BlockPoolError("share() on the reserved trash block")
+        if self.refcounts[block_id] <= 0:
+            raise BlockPoolError(f"share() on free block {block_id}")
         self.refcounts[block_id] += 1
         return int(self.refcounts[block_id])
 
     def free(self, ids: Sequence[int]) -> None:
+        """Drop one reference per id; a block recycles onto the free list
+        only when its last holder lets go."""
         for b in ids:
-            assert b != TRASH_BLOCK, "free() on the reserved trash block"
-            assert self.refcounts[b] > 0, f"double free of block {b}"
+            if b == TRASH_BLOCK:
+                raise BlockPoolError("free() on the reserved trash block")
+            if self.refcounts[b] <= 0:
+                raise BlockPoolError(f"double free of block {b}")
             self.refcounts[b] -= 1
             if self.refcounts[b] == 0:
                 self._free.append(b)

@@ -21,6 +21,19 @@ Cache layouts (engine-selected):
   prompt + generated-so-far (vLLM-style recompute preemption — greedy decoding
   resumes token-for-token; stochastic requests restart their PRNG stream).
 
+Prefix sharing (paged + :class:`~repro.serving.prefix_cache.
+RadixPrefixCache`): admission is match-then-allocate — the trie is walked
+with the request's tokens, every fully-matched block is pinned with
+``share()`` and mapped into the head of the slot's block table, and only the
+unmatched remainder is freshly allocated; ``prefix_lens[slot]`` tells the
+engine where its suffix-only prefill starts.  Right after admission (and
+again on every exit path — finish *and* preemption) the request's fully
+written blocks are published into the trie, so identical prompts admitted
+later (or the same request resuming after preemption) skip that prefill
+work.  ``_free`` thus *releases* blocks rather than destroying them: the
+allocator drops the request's references and anything the trie also holds
+stays resident, cached-but-unreferenced, until LRU eviction reclaims it.
+
 Lifecycle per engine step:
   1. ``admit()`` moves FIFO-waiting requests into free slots (one prefill per
      admission, bucketed by prompt length to bound recompilation). Prompts
@@ -48,6 +61,7 @@ import numpy as np
 from repro.serving.api import (FinishReason, GenerationRequest, SamplingParams,
                                StepOutput)
 from repro.serving.paged import BlockAllocator, TRASH_BLOCK
+from repro.serving.prefix_cache import RadixPrefixCache
 
 
 def bucket_length(n: int, lo: int, hi: int) -> int:
@@ -70,7 +84,10 @@ def total_len(req: GenerationRequest) -> int:
 class Scheduler:
     def __init__(self, n_slots: int, max_len: int, eos_id: int,
                  bucket_min: int = 8,
-                 allocator: Optional[BlockAllocator] = None):
+                 allocator: Optional[BlockAllocator] = None,
+                 prefix_cache: Optional[RadixPrefixCache] = None):
+        if prefix_cache is not None and allocator is None:
+            raise ValueError("prefix_cache requires the paged allocator")
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
@@ -90,8 +107,18 @@ class Scheduler:
         self.positions = np.full((n_slots,), max_len - 1, np.int32)
         self.temperatures = np.zeros((n_slots,), np.float32)
         self.top_ps = np.ones((n_slots,), np.float32)
+        # runtime counters (surfaced via Engine.stats())
+        self.admissions = 0
+        self.preemptions = 0
         # -- paged state (allocator is None on the contiguous path) ----------
         self.allocator = allocator
+        self.prefix_cache = prefix_cache
+        # per-slot prefill start offset: cache positions [0, prefix_lens[s])
+        # are covered by trie-shared blocks and the engine prefills only the
+        # suffix from there.  shared_counts[s] = leading entries of
+        # block_ids[s] that are shared (read-only) rather than owned.
+        self.prefix_lens = np.zeros((n_slots,), np.int32)
+        self.shared_counts = [0] * n_slots
         if allocator is not None:
             self.block_tables = np.full(
                 (n_slots, allocator.blocks_for(max_len)), TRASH_BLOCK,
@@ -125,7 +152,13 @@ class Scheduler:
         rejected up front (empty prompt, prompt too long for the per-slot
         cache, or needing more blocks than the whole pool holds).  On the
         paged path a queue head that merely has to *wait* for blocks stays
-        queued and is not overtaken (strict FIFO, no starvation)."""
+        queued and is not overtaken (strict FIFO, no starvation).
+
+        With a prefix cache, admission is match-then-allocate: trie-matched
+        blocks are pinned (``share()``) and mapped into the head of the block
+        table, fresh blocks are allocated only for the remainder, and the
+        fully-covered prefix length lands in ``prefix_lens[slot]`` so the
+        engine prefills just the suffix."""
         admitted: List[Tuple[int, GenerationRequest]] = []
         rejected: List[StepOutput] = []
         free = [i for i, r in enumerate(self.slots) if r is None]
@@ -152,11 +185,22 @@ class Scheduler:
                                            finish_reason=FinishReason.ABORTED))
                 continue
             ids: List[int] = []
+            shared: List[int] = []
+            tokens = list(req.prompt) + list(req.output_tokens)
             if alloc is not None:
-                got = alloc.alloc(alloc.blocks_for(cover))
+                if self.prefix_cache is not None:
+                    # pin matched blocks *before* alloc(): its reclaim hook
+                    # may LRU-evict, and a pinned block (refcount >= 2) is
+                    # never an eviction victim
+                    shared = self.prefix_cache.match(tokens)
+                    for b in shared:
+                        alloc.share(b)
+                got = alloc.alloc(alloc.blocks_for(cover) - len(shared))
                 if got is None:
-                    break          # head waits for blocks; FIFO preserved
-                ids = got
+                    if shared:         # un-pin; the trie keeps them cached
+                        alloc.free(shared)
+                    break              # head waits for blocks; FIFO preserved
+                ids = shared + got
             self.waiting.popleft()
             slot = free.pop(0)
             self.slots[slot] = req
@@ -167,18 +211,46 @@ class Scheduler:
                 self.block_ids[slot] = ids
                 self.block_tables[slot, :] = TRASH_BLOCK
                 self.block_tables[slot, :len(ids)] = ids
+                self.shared_counts[slot] = len(shared)
+                # the engine always recomputes at least the last position
+                # (its logits seed the first sampled token); a fully-matched
+                # prompt therefore starts the suffix at total - 1 and the
+                # recomputed write is discarded to the trash block
+                self.prefix_lens[slot] = min(
+                    len(shared) * alloc.block_size, total - 1)
+                if self.prefix_cache is not None:
+                    self.prefix_cache.record_admission(len(shared))
+                    # publish the prompt's full blocks now: the engine
+                    # prefills them before this step decodes, so identical
+                    # prompts admitted from here on share instead of
+                    # re-prefilling
+                    self.prefix_cache.insert(tokens, ids[:total
+                                                         // alloc.block_size])
             admitted.append((slot, req))
+            self.admissions += 1
         return admitted, rejected
 
     def _free(self, slot: int) -> None:
-        self.slots[slot] = None
-        self.positions[slot] = self.max_len - 1
-        self.temperatures[slot] = 0.0
-        self.top_ps[slot] = 1.0
+        """Release the slot.  With a prefix cache the request's fully written
+        blocks (prompt + generated prefix — everything up to the last cache
+        write) are published into the trie first, so ``allocator.free`` only
+        drops this request's references and trie-held blocks stay resident,
+        cached-but-unreferenced, instead of recycling."""
+        req = self.slots[slot]
         if self.allocator is not None:
+            if self.prefix_cache is not None and req is not None:
+                written = int(self.positions[slot])   # cache-valid positions
+                tokens = (list(req.prompt) + list(req.output_tokens))[:written]
+                self.prefix_cache.insert(tokens, self.block_ids[slot])
             self.allocator.free(self.block_ids[slot])
             self.block_ids[slot] = []
             self.block_tables[slot, :] = TRASH_BLOCK
+            self.shared_counts[slot] = 0
+        self.slots[slot] = None
+        self.positions[slot] = self.max_len - 1
+        self.prefix_lens[slot] = 0
+        self.temperatures[slot] = 0.0
+        self.top_ps[slot] = 1.0
 
     # -- per-token lifecycle ---------------------------------------------------
 
@@ -222,7 +294,9 @@ class Scheduler:
         return out
 
     def _grow(self, slot: int) -> bool:
-        """Ensure the slot's allocation covers its next write position."""
+        """Ensure the slot's allocation covers its next write position.
+        ``alloc()`` internally tries prefix-cache eviction before giving up,
+        so growth preempts only when every block is pinned by live work."""
         need = int(self.positions[slot]) // self.allocator.block_size + 1
         while len(self.block_ids[slot]) < need:
             got = self.allocator.alloc(1)
@@ -237,7 +311,9 @@ class Scheduler:
         request in arrival order (admitted requests always predate everyone
         still waiting, so this lands at/near the front).  Re-admission
         prefills prompt + generated tokens, so the request resumes where it
-        left off."""
+        left off — and with a prefix cache, ``_free`` publishes the written
+        blocks first, so the resume usually re-matches them and skips the
+        recompute entirely (unless eviction reclaimed them meanwhile)."""
         req = self.slots[slot]
         seq = self._arrival[req.uid]
         i = 0
@@ -246,3 +322,4 @@ class Scheduler:
             i += 1
         self.waiting.insert(i, req)
         self._free(slot)
+        self.preemptions += 1

@@ -48,9 +48,10 @@ class TestBlockAllocator:
         assert a.blocks_for(8) == 1
         assert a.blocks_for(9) == 2
 
-    def test_refcount_share_stub(self):
-        """Prefix-sharing entry point: a shared block survives one free and
-        is recycled only when the last reference drops."""
+    def test_refcount_share(self):
+        """Prefix-sharing protocol (serving/prefix_cache.py builds on this):
+        a shared block survives one free and is recycled only when the last
+        reference drops."""
         a = BlockAllocator(num_blocks=3, block_size=4)
         (b,) = a.alloc(1)
         assert a.share(b) == 2

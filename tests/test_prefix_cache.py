@@ -1,0 +1,470 @@
+"""Radix prefix cache: trie match/insert/evict unit tests, allocator
+lifecycle invariants (real exceptions, not asserts), scheduler-level
+match-then-allocate admission + release-to-cache, and — the ISSUE acceptance
+check — token-for-token greedy parity between ``prefix_cache=True`` and
+``False`` on mixed shared-system-prompt workloads including mid-flight
+admissions, eviction pressure, and preemption.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import build_model, get_config
+from repro.serving.api import FinishReason, GenerationRequest, SamplingParams
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.paged import TRASH_BLOCK, BlockAllocator, BlockPoolError
+from repro.serving.prefix_cache import RadixPrefixCache
+from repro.serving.scheduler import Scheduler, bucket_length
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = get_config("qwen1.5-0.5b").reduced().replace(
+        compute_dtype="float32", param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+class TestBlockPoolExceptions:
+    """ISSUE satellite: lifecycle violations raise real exceptions that
+    survive ``python -O`` (they were bare asserts)."""
+
+    def test_double_free_raises(self):
+        a = BlockAllocator(num_blocks=3, block_size=4)
+        (b,) = a.alloc(1)
+        a.free([b])
+        with pytest.raises(BlockPoolError, match="double free"):
+            a.free([b])
+
+    def test_free_trash_block_raises(self):
+        a = BlockAllocator(num_blocks=3, block_size=4)
+        with pytest.raises(BlockPoolError, match="trash"):
+            a.free([TRASH_BLOCK])
+
+    def test_share_free_block_raises(self):
+        a = BlockAllocator(num_blocks=3, block_size=4)
+        with pytest.raises(BlockPoolError, match="free block"):
+            a.share(1)
+
+    def test_share_trash_block_raises(self):
+        a = BlockAllocator(num_blocks=3, block_size=4)
+        with pytest.raises(BlockPoolError, match="trash"):
+            a.share(TRASH_BLOCK)
+
+
+class TestAllocatorLifecycle:
+    """ISSUE satellite: refcount lifecycle + bucket_length edges that had no
+    direct unit tests."""
+
+    def test_share_free_free_recycles_only_at_zero(self):
+        a = BlockAllocator(num_blocks=4, block_size=2)
+        (b,) = a.alloc(1)
+        assert a.share(b) == 2
+        assert a.share(b) == 3
+        a.free([b])
+        a.free([b])
+        assert a.available() == 2          # one holder left: not recycled
+        assert a.refcounts[b] == 1
+        a.free([b])
+        assert a.refcounts[b] == 0
+        assert a.available() == 3          # recycled exactly at zero
+        assert b in a.alloc(3)             # and reusable
+
+    def test_blocks_in_use_counts_any_holder(self):
+        a = BlockAllocator(num_blocks=5, block_size=2)
+        ids = a.alloc(2)
+        a.share(ids[0])
+        assert a.blocks_in_use() == 2      # refcounts don't multiply usage
+        a.free(ids)
+        assert a.blocks_in_use() == 1      # ids[0] still held once
+
+    def test_bucket_length_n_above_hi_clamps(self):
+        assert bucket_length(100, 8, 64) == 64
+
+    def test_bucket_length_lo_equals_hi(self):
+        assert bucket_length(3, 16, 16) == 16
+        assert bucket_length(16, 16, 16) == 16
+        assert bucket_length(17, 16, 16) == 16
+
+    def test_bucket_length_rounds_up_within_bounds(self):
+        assert bucket_length(9, 8, 64) == 16
+        assert bucket_length(8, 8, 64) == 8
+        assert bucket_length(1, 8, 64) == 8
+
+    def test_alloc_zero_blocks_is_empty_not_none(self):
+        """Fully-matched admissions allocate zero fresh blocks; that must
+        read as success, not as 'wait for blocks'."""
+        a = BlockAllocator(num_blocks=2, block_size=2)
+        a.alloc(1)
+        assert a.alloc(0) == []            # pool exhausted, but 0 is fine
+
+
+class TestRadixPrefixCache:
+    def _setup(self, num_blocks=10, bs=4):
+        a = BlockAllocator(num_blocks, bs)
+        return a, RadixPrefixCache(a)
+
+    def test_match_empty_trie_misses(self):
+        _, c = self._setup()
+        assert c.match([1, 2, 3, 4, 5]) == []
+        # match() itself never counts (a waiting queue head re-matches every
+        # step); the scheduler reports once per actual admission
+        assert c.misses == 0 and c.hits == 0
+        c.record_admission(0)
+        assert c.misses == 1 and c.hits == 0
+        c.record_admission(2)
+        assert c.hits == 1 and c.tokens_matched == 8
+
+    def test_insert_then_match_block_granular(self):
+        a, c = self._setup()
+        ids = a.alloc(2)
+        c.insert([1, 2, 3, 4, 5, 6, 7, 8], ids)
+        assert a.refcounts[ids[0]] == 2    # trie took its own reference
+        # full two-block match
+        assert c.match([1, 2, 3, 4, 5, 6, 7, 8, 9]) == ids
+        # one-block match: second block's tokens diverge
+        assert c.match([1, 2, 3, 4, 9, 9, 9, 9]) == [ids[0]]
+        # sub-block prefixes never match (block granular)
+        assert c.match([1, 2, 3]) == []
+
+    def test_insert_partial_block_never_cached(self):
+        a, c = self._setup()
+        ids = a.alloc(2)
+        c.insert([1, 2, 3, 4, 5, 6], ids)  # second block only 2/4 written
+        assert len(c) == 1
+        assert c.match([1, 2, 3, 4, 5, 6, 7, 8]) == [ids[0]]
+
+    def test_insert_dedup_keeps_existing_block(self):
+        a, c = self._setup()
+        first = a.alloc(1)
+        c.insert([1, 2, 3, 4], first)
+        dup = a.alloc(1)
+        created = c.insert([1, 2, 3, 4], dup)
+        assert created == 0
+        assert c.match([1, 2, 3, 4]) == first
+        assert a.refcounts[dup[0]] == 1    # duplicate stays request-private
+
+    def test_release_to_cached_unreferenced_then_evict_lru(self):
+        a, c = self._setup(num_blocks=10, bs=4)
+        ids_a = a.alloc(1)
+        c.insert([1, 2, 3, 4], ids_a)
+        ids_b = a.alloc(1)
+        c.insert([5, 6, 7, 8], ids_b)
+        a.free(ids_a)
+        a.free(ids_b)                      # both now cached-but-unreferenced
+        assert a.available() == 7          # resident, NOT recycled
+        assert c.cached_unreferenced() == 2
+        c.match([1, 2, 3, 4])              # touch A: B becomes LRU
+        assert c.evict(1) == 1
+        assert c.evictions == 1
+        assert c.match([5, 6, 7, 8]) == []   # B evicted
+        assert c.match([1, 2, 3, 4]) == ids_a
+        assert a.available() == 8
+
+    def test_evict_skips_blocks_pinned_by_requests(self):
+        a, c = self._setup()
+        ids = a.alloc(1)                   # request holds a reference
+        c.insert([1, 2, 3, 4], ids)
+        assert c.evict(1) == 0             # refcount 2: not evictable
+        a.free(ids)
+        assert c.evict(1) == 1
+
+    def test_evict_cascades_leaf_to_parent(self):
+        a, c = self._setup()
+        ids = a.alloc(2)
+        c.insert([1, 2, 3, 4, 5, 6, 7, 8], ids)
+        a.free(ids)
+        # child must go before parent (leaf-only), both reclaimable
+        assert c.evict(2) == 2
+        assert len(c) == 0
+        assert a.available() == 9
+
+    def test_alloc_reclaim_hook_evicts_on_starvation(self):
+        a, c = self._setup(num_blocks=4, bs=4)   # 3 allocatable
+        a.reclaim = c.evict
+        ids = a.alloc(3)
+        c.insert([1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12], ids)
+        a.free(ids)                        # all cached-but-unreferenced
+        assert a.available() == 0
+        got = a.alloc(2)                   # starves -> LRU eviction kicks in
+        assert got is not None and len(got) == 2
+        assert c.evictions == 2
+
+    def test_max_blocks_cap_evicts_on_insert(self):
+        alloc = BlockAllocator(12, 4)
+        c = RadixPrefixCache(alloc, max_blocks=2)
+        ids = alloc.alloc(3)
+        c.insert([1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12], ids)
+        alloc.free(ids)
+        assert len(c) <= 3                 # cap is best effort while pinned
+        c.insert([9, 9, 9, 9], alloc.alloc(1))
+        assert len(c) <= 3
+        assert c.evictions >= 1
+
+    def test_max_blocks_validation(self):
+        with pytest.raises(ValueError, match="max_blocks"):
+            RadixPrefixCache(BlockAllocator(4, 4), max_blocks=0)
+
+    def test_clear_drops_only_unreferenced(self):
+        a, c = self._setup()
+        pinned = a.alloc(1)
+        c.insert([1, 2, 3, 4], pinned)
+        loose = a.alloc(1)
+        c.insert([5, 6, 7, 8], loose)
+        a.free(loose)
+        assert c.clear() == 1
+        assert len(c) == 1
+        assert c.match([1, 2, 3, 4]) == pinned
+
+
+class TestSchedulerPrefixSharing:
+    def _sched(self, n_slots=2, max_len=32, num_blocks=17, bs=4):
+        alloc = BlockAllocator(num_blocks, bs)
+        cache = RadixPrefixCache(alloc)
+        alloc.reclaim = cache.evict
+        sc = Scheduler(n_slots, max_len, eos_id=99, allocator=alloc,
+                       prefix_cache=cache)
+        return sc, alloc, cache
+
+    def test_prefix_cache_requires_allocator(self):
+        alloc = BlockAllocator(4, 4)
+        with pytest.raises(ValueError, match="prefix_cache"):
+            Scheduler(2, 16, eos_id=99, prefix_cache=RadixPrefixCache(alloc))
+
+    def test_admission_publishes_prompt_blocks(self):
+        sc, alloc, cache = self._sched()
+        sc.submit(GenerationRequest(uid=0, prompt=list(range(10))))
+        sc.admit()
+        # 2 full blocks published, pinned by slot + trie
+        assert len(cache) == 2
+        for b in sc.block_ids[0][:2]:
+            assert alloc.refcounts[b] == 2
+        assert sc.prefix_lens[0] == 0 and sc.shared_counts[0] == 0
+
+    def test_second_identical_prompt_shares(self):
+        sc, alloc, cache = self._sched()
+        r0 = GenerationRequest(uid=0, prompt=list(range(10)))
+        r1 = GenerationRequest(uid=1, prompt=list(range(10)))
+        sc.submit(r0)
+        sc.submit(r1)
+        sc.admit()
+        assert sc.shared_counts[1] == 2
+        assert sc.prefix_lens[1] == 8
+        assert sc.block_ids[1][:2] == sc.block_ids[0][:2]   # same pool blocks
+        shared = sc.block_ids[0][0]
+        assert alloc.refcounts[shared] == 3     # two slots + trie
+
+    def test_divergent_tail_gets_own_blocks(self):
+        sc, alloc, cache = self._sched()
+        sc.submit(GenerationRequest(uid=0, prompt=[1, 2, 3, 4, 5, 6, 7, 8]))
+        sc.submit(GenerationRequest(uid=1, prompt=[1, 2, 3, 4, 9, 9, 9, 9]))
+        sc.admit()
+        assert sc.shared_counts[1] == 1
+        assert sc.block_ids[1][0] == sc.block_ids[0][0]
+        assert sc.block_ids[1][1] != sc.block_ids[0][1]
+
+    def test_fully_matched_prompt_caps_prefix_at_total_minus_one(self):
+        """The engine always recomputes the last position for its logits;
+        a block-aligned full match must leave the suffix >= 1."""
+        sc, alloc, cache = self._sched()
+        sc.submit(GenerationRequest(uid=0, prompt=list(range(8))))
+        sc.admit()
+        sc._free(0)
+        sc.submit(GenerationRequest(uid=1, prompt=list(range(8))))
+        sc.admit()                              # re-admits into free slot 0
+        assert sc.shared_counts[0] == 2         # both blocks shared (reads)
+        assert sc.prefix_lens[0] == 7           # but suffix keeps 1 position
+
+    def test_finish_releases_blocks_to_cache_not_free_list(self):
+        sc, alloc, cache = self._sched()
+        req = GenerationRequest(uid=0, prompt=list(range(10)),
+                                params=SamplingParams(max_tokens=1))
+        sc.submit(req)
+        sc.admit()
+        sc.record(0, token=5)                   # max_tokens=1 -> finish
+        assert req.done
+        # full prompt blocks stay resident in the trie, tail block recycled
+        assert len(cache) == 2
+        assert cache.cached_unreferenced() == 2
+        assert alloc.available() == alloc.allocatable - 2
+        # a repeat prompt now shares them
+        sc.submit(GenerationRequest(uid=1, prompt=list(range(10))))
+        sc.admit()
+        assert sc.shared_counts[0] == 2
+
+    def test_preempt_releases_generated_blocks_for_resume(self):
+        """Recompute preemption publishes prompt + generated blocks, so the
+        resume re-matches them instead of re-prefilling."""
+        sc, alloc, cache = self._sched(n_slots=2, max_len=32, num_blocks=4,
+                                       bs=4)
+        sp = SamplingParams(max_tokens=20, ignore_eos=True)
+        r0 = GenerationRequest(uid=0, prompt=[1, 2], params=sp)
+        r1 = GenerationRequest(uid=1, prompt=[3, 4], params=sp)
+        sc.submit(r0)
+        sc.submit(r1)
+        sc.admit()                              # 1 block each, 1 spare
+        for t in range(2):
+            sc.record(0, t)
+            sc.record(1, t)
+        # third token: both rows need block 2; slot 0 wins the last free
+        # block (after eviction finds nothing reclaimable), slot 1 preempts
+        sc.record(0, 10)
+        sc.record(1, 11)
+        assert sc.slots[1] is None and list(sc.waiting) == [r1]
+        assert sc.preemptions == 1
+        # r1's written block [3,4,0,1] is cached for its re-admission
+        assert cache.match([3, 4, 0, 1]) != []
+
+    def test_admission_waits_when_cache_all_pinned(self):
+        """Eviction can't reclaim blocks pinned by live requests: the queue
+        head waits (strict FIFO), exactly as without the cache."""
+        sc, alloc, cache = self._sched(n_slots=2, max_len=32, num_blocks=4,
+                                       bs=4)
+        sp = SamplingParams(max_tokens=20, ignore_eos=True)
+        sc.submit(GenerationRequest(uid=0, prompt=list(range(8)),
+                                    params=sp))      # 3 blocks, all pinned
+        sc.submit(GenerationRequest(uid=1, prompt=[9, 9], params=sp))
+        admitted, rejected = sc.admit()
+        assert [r.uid for _, r in admitted] == [0] and not rejected
+        admitted, rejected = sc.admit()
+        assert not admitted and not rejected
+        assert [r.uid for r in sc.waiting] == [1]
+        sc.admit()                              # head retries...
+        assert cache.misses == 1 and cache.hits == 0   # ...without counting
+
+
+def run_shared_workload(cfg, params, scfg, prompts, sp):
+    """Mixed-depth continuous batching with mid-flight admissions (the
+    test_paged_kv.run_workload shape, on shared-prefix prompts)."""
+    eng = Engine(cfg, params, scfg)
+    r0 = eng.submit(prompts[0], sp)
+    eng.step()
+    eng.step()                                   # r0 runs 2 tokens deep
+    r1 = eng.submit(prompts[1], sp)
+    eng.step()                                   # r1 admitted mid-stream
+    rest = [eng.submit(p, sp) for p in prompts[2:]]
+    steps = 0
+    for _ in eng.stream():
+        steps += 1
+        assert steps < 4000, "serving loop made no progress"
+    return eng, [r.output_tokens for r in [r0, r1] + rest]
+
+
+SYS_A = [7, 3, 9, 1, 4, 4, 2, 8]                 # two 8-token system prompts
+SYS_B = [11, 5, 2, 6, 13, 1, 1, 3]
+
+
+class TestEnginePrefixParity:
+    """ISSUE acceptance: greedy outputs are token-for-token identical with
+    ``prefix_cache=True`` vs ``False`` on a mixed workload of shared-system-
+    prompt requests — including mid-flight admissions, eviction pressure,
+    and preemption — and sharing strictly reduces prefilled positions."""
+    PROMPTS = [SYS_A + [10], SYS_B + [20, 21], SYS_A + [12, 13, 14],
+               [5, 6], SYS_A, SYS_B + [22]]
+    SP = SamplingParams(max_tokens=8, ignore_eos=True)
+
+    def _run(self, cfg, params, pc, **kw):
+        return run_shared_workload(
+            cfg, params,
+            ServeConfig(max_batch=3, max_len=24, paged=True, kv_block_size=4,
+                        prefix_cache=pc, **kw),
+            self.PROMPTS, self.SP)
+
+    def test_parity_and_strictly_fewer_prefill_positions(self, small_lm):
+        cfg, _, params = small_lm
+        ref_eng, ref = self._run(cfg, params, False)
+        eng, got = self._run(cfg, params, True)
+        assert got == ref
+        s, s0 = eng.stats(), ref_eng.stats()
+        assert s.prefill_positions < s0.prefill_positions
+        assert s.prefill_positions_skipped > 0
+        assert s.prefix_cache["hits"] >= 3       # SYS_A x2 repeats, SYS_B x1
+        assert s0.prefix_cache is None
+
+    def test_parity_under_eviction_pressure(self, small_lm):
+        """A pool too small to keep every prefix resident forces LRU
+        eviction; outputs must not change."""
+        cfg, _, params = small_lm
+        _, ref = self._run(cfg, params, False)
+        eng, got = self._run(cfg, params, True, num_kv_blocks=13)
+        assert got == ref
+        assert eng.stats().prefix_cache["evictions"] > 0
+        # no leak: every block is either free or trie-cached at drain
+        assert eng.allocator.blocks_in_use() == \
+            eng.prefix_cache.cached_unreferenced()
+
+    def test_parity_under_preemption(self, small_lm):
+        """Tight pool: admission waits + recompute preemption + prefix
+        sharing all interact; greedy outputs must still match."""
+        cfg, _, params = small_lm
+        prompts = [SYS_A + [10], SYS_A + [11, 12], SYS_A + [13, 7, 5],
+                   [5, 6, 1, 2, 9, 9]]
+        sp = SamplingParams(max_tokens=12, ignore_eos=True)
+
+        def run(pc, nb):
+            return run_shared_workload(
+                cfg, params,
+                ServeConfig(max_batch=2, max_len=32, paged=True,
+                            kv_block_size=4, prefix_cache=pc,
+                            num_kv_blocks=nb),
+                prompts, sp)
+
+        _, ref = run(False, None)
+        base_eng, base_tight = run(False, 9)
+        eng, got = run(True, 9)
+        assert base_tight == ref                 # baseline unchanged by pool
+        assert got == ref
+        assert base_eng.stats().preemptions > 0  # pressure actually bites
+        assert eng.stats().preemptions > 0
+
+    def test_full_match_block_aligned_prompt(self, small_lm):
+        """A block-aligned prompt admitted twice fully matches; the engine
+        recomputes exactly one position (for the first-token logits) and its
+        discarded write must not corrupt the shared block."""
+        cfg, _, params = small_lm
+        sp = SamplingParams(max_tokens=6, ignore_eos=True)
+
+        def run(pc):
+            eng = Engine(cfg, params,
+                         ServeConfig(max_batch=1, max_len=24, paged=True,
+                                     kv_block_size=4, prefix_cache=pc))
+            r0 = eng.submit(SYS_A, sp)           # len 8 = 2 blocks exactly
+            for _ in eng.stream():
+                pass
+            r1 = eng.submit(SYS_A, sp)           # sequential: full match
+            for _ in eng.stream():
+                pass
+            return eng, [r0.output_tokens, r1.output_tokens]
+
+        _, ref = run(False)
+        eng, got = run(True)
+        assert got == ref
+        assert got[0] == got[1]                  # same prompt, greedy
+        s = eng.stats()
+        assert s.prefill_positions == len(SYS_A) + 1   # 8 cold + 1 recompute
+        assert s.prefill_positions_skipped == len(SYS_A) - 1
+
+    def test_prefix_cache_requires_paged(self, small_lm):
+        cfg, _, params = small_lm
+        with pytest.raises(ValueError, match="prefix_cache"):
+            ServeConfig(paged=False, prefix_cache=True)
+        ssm = get_config("mamba2-780m").reduced()
+        ssm_params = build_model(ssm).init(jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="prefix_cache"):
+            # auto-paged resolves to contiguous for SSM stacks
+            Engine(ssm, ssm_params, ServeConfig(prefix_cache=True))
+        with pytest.raises(ValueError, match="prefix_cache_blocks"):
+            ServeConfig(prefix_cache_blocks=0)
+
+    def test_stats_on_contiguous_path(self, small_lm):
+        cfg, _, params = small_lm
+        eng = Engine(cfg, params, ServeConfig(max_batch=2, max_len=16,
+                                              paged=False))
+        eng.submit([1, 2, 3], SamplingParams(max_tokens=2, ignore_eos=True))
+        for _ in eng.stream():
+            pass
+        s = eng.stats()
+        assert s.admissions == 1 and s.preemptions == 0
+        assert s.prefill_positions == 3 and s.prefill_positions_skipped == 0
+        assert s.blocks_in_use is None and s.prefix_cache is None
