@@ -204,13 +204,13 @@ def serving_decode_bench(n_requests: int = 8, max_tokens: int = 8) -> dict:
             outs = eng.step()
             dt_ms = (time.perf_counter() - s0) * 1e3
             n_tok += sum(1 for o in outs if o.token >= 0)
-            # eng.last_decode is the decode shape the step actually ran
-            # (post-admission, pre-record); None when no slot was active
-            if eng.last_decode is None:
+            # eng.last_decode is the step shape actually run (post-admission,
+            # pre-record); None when no slot was active.  Steps that carried
+            # a prefill chunk (last_decode["chunks"]) time the chunk, not
+            # decode — both the latency and the decode KV-traffic samples
+            # exclude them (chunked_prefill_bench models chunk traffic).
+            if eng.last_decode is None or eng.last_decode["chunks"]:
                 continue
-            # decode-step latency must exclude steps that also ran an
-            # admission prefill (index 0 = prefill-sampled first token,
-            # index -1 = rejection) — those time the prompt scan, not decode
             if all(o.index > 0 for o in outs):
                 step_ms.append(dt_ms)
             snap = eng.last_decode
@@ -269,16 +269,23 @@ def serving_decode_bench(n_requests: int = 8, max_tokens: int = 8) -> dict:
     return out
 
 
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
 def _write_bench_serving(update: dict, fresh: bool = False) -> None:
-    """Merge ``update`` into BENCH_serving.json (the CI artifact).
+    """Merge ``update`` into BENCH_serving.json — written both under
+    benchmarks/results/ (the CI artifact) and at the repo root, so the bench
+    trajectory is visible without digging into artifacts.
     ``serving_decode_bench`` writes the base document fresh; the prefix-cache
-    bench folds its section into it."""
+    and chunked-prefill benches fold their sections into it."""
     path = RESULTS / "BENCH_serving.json"
     doc = {}
     if not fresh and path.exists():
         doc = json.loads(path.read_text())
     doc.update(update)
-    path.write_text(json.dumps(doc, indent=1))
+    text = json.dumps(doc, indent=1)
+    path.write_text(text)
+    (REPO_ROOT / "BENCH_serving.json").write_text(text)
 
 
 def prefix_cache_bench(n_requests: int = 10, max_tokens: int = 6) -> dict:
@@ -363,6 +370,165 @@ def prefix_cache_bench(n_requests: int = 10, max_tokens: int = 6) -> dict:
     return out
 
 
+def chunked_prefill_bench(chunk: int = 16, prompt_len: int = 72,
+                          max_tokens: int = 10) -> dict:
+    """Bursty-arrival workload: chunked interleaved prefill
+    (``ServeConfig(prefill_chunk=N)``) vs stop-the-world whole-prompt
+    admission prefill (``prefill_chunk=0``).
+
+    Requests arrive in bursts while earlier requests are still decoding.
+    Stop-the-world mode pads every admission step to the whole prompt's
+    bucket — decoding rows stall behind a [B, prompt_bucket] forward — so
+    tokens queued behind an admission see fat steps; chunked mode bounds
+    per-step prefill work at ``prefill_chunk`` tokens per slot.  Reported:
+    time-to-first-token percentiles (wall, from the engine's own counters),
+    p99 inter-token latency over all generated tokens, prefill positions
+    per chunk, and the modeled per-chunk-step KV bytes (ops.prefill_kv_bytes,
+    fused O(resident) vs the dense gather window) with their roofline memory
+    terms.  Greedy outputs must be token-for-token identical; the bench
+    raises if chunking does not cut mean TTFT at equal-or-better p99
+    inter-token latency.  Folded into BENCH_serving.json.
+    """
+    import statistics
+
+    from repro.kernels.paged_prefill import ops as pp_ops
+    from repro.launch.roofline import paged_prefill_attention_roofline
+    from repro.models import build_model
+    from repro.serving.api import SamplingParams
+    from repro.serving.engine import Engine, ServeConfig
+
+    cfg = get_config("qwen1.5-0.5b").reduced(layers=2).replace(
+        compute_dtype="float32", param_dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    bs, max_len = 8, prompt_len + max_tokens + 8
+    prompts = [rng.integers(0, 64, prompt_len).tolist() for _ in range(10)]
+    # bursts indexed by engine step: 4 up front, then two more bursts landing
+    # while earlier requests are mid-decode (and, chunked, mid-prefill)
+    arrivals = {0: prompts[:4], 3: prompts[4:7], 6: prompts[7:]}
+    sp = SamplingParams(max_tokens=max_tokens, ignore_eos=True)
+    itemsize = 4                                  # float32 cache on CPU
+
+    def serve(pchunk: int) -> dict:
+        # one engine per mode: the warm pass populates its jit caches (the
+        # schedule is deterministic, so the measured pass replays the exact
+        # same chunk/width buckets compiled)
+        eng = Engine(cfg, params, ServeConfig(
+            max_batch=4, max_len=max_len, paged=True, kv_block_size=bs,
+            prefill_chunk=pchunk))
+
+        def drive(measure: bool):
+            reqs, events, kv = [], [], {"fused": [], "gather": []}
+            submit_ts = {}
+            step = 0
+            while eng.has_pending() or step == 0:
+                for p in arrivals.get(step, []):
+                    r = eng.submit(p, sp)
+                    submit_ts[r.uid] = time.perf_counter()
+                    reqs.append(r)
+                outs = eng.step()
+                now = time.perf_counter()
+                events.extend((o.uid, now) for o in outs if o.token >= 0)
+                if measure and eng.last_decode and eng.last_decode["chunks"]:
+                    snap = eng.last_decode
+                    # every active row attends in a chunk step — decoding
+                    # rows are lens==1 chunks and stream their resident
+                    # blocks too, not just the prefilling rows
+                    rows = list(snap["active"])
+                    for mode, fused in (("fused", True), ("gather", False)):
+                        kv[mode].append(pp_ops.prefill_kv_bytes(
+                            snap["starts"], snap["lens"], rows,
+                            snap["table_width"], bs, cfg.n_kv_heads,
+                            cfg.head_dim, cfg.n_layers, itemsize,
+                            fused=fused))
+                step += 1
+            return reqs, events, kv, submit_ts
+
+        drive(measure=False)                      # warm-up pass: compiles
+        pre = eng.stats()
+        t0 = time.perf_counter()
+        reqs, events, kv, submit_ts = drive(measure=True)
+        wall = time.perf_counter() - t0
+        first, gaps, last = {}, [], {}
+        for uid, ts in events:
+            if uid in last:
+                gaps.append((ts - last[uid]) * 1e3)
+            else:
+                first[uid] = ts
+            last[uid] = ts
+        ttft = np.asarray([(first[u] - submit_ts[u]) * 1e3 for u in first])
+        s = eng.stats()
+        n_tok = sum(r.num_generated for r in reqs)
+        return {
+            "ttft_ms": {"mean": float(ttft.mean()),
+                        "p50": float(np.percentile(ttft, 50)),
+                        "p95": float(np.percentile(ttft, 95)),
+                        "p99": float(np.percentile(ttft, 99))},
+            "inter_token_ms_p50": float(np.percentile(gaps, 50)),
+            "inter_token_ms_p99": float(np.percentile(gaps, 99)),
+            "tok_per_s": n_tok / max(wall, 1e-9),
+            "prefill_positions": s.prefill_positions - pre.prefill_positions,
+            "prefill_chunks": s.prefill_chunks - pre.prefill_chunks,
+            "prefill_kv_bytes_per_chunk_step": {
+                m: statistics.mean(v) for m, v in kv.items() if v},
+            "outputs": [r.output_tokens for r in reqs],
+        }
+
+    stw = serve(0)
+    chunked = serve(chunk)
+    # real exceptions, not asserts: these are the bench's acceptance gates
+    # and must not vanish under `python -O`
+    if chunked["outputs"] != stw["outputs"]:
+        raise RuntimeError(
+            "chunked interleaved prefill diverged from whole-prompt greedy "
+            "outputs")
+    if chunked["ttft_ms"]["mean"] >= stw["ttft_ms"]["mean"]:
+        raise RuntimeError(
+            f"chunked prefill did not reduce mean TTFT "
+            f"({chunked['ttft_ms']['mean']:.1f} ms vs "
+            f"{stw['ttft_ms']['mean']:.1f} ms stop-the-world)")
+    if chunked["inter_token_ms_p99"] > stw["inter_token_ms_p99"]:
+        raise RuntimeError(
+            f"chunked prefill worsened p99 inter-token latency "
+            f"({chunked['inter_token_ms_p99']:.1f} ms vs "
+            f"{stw['inter_token_ms_p99']:.1f} ms stop-the-world)")
+    for v in (stw, chunked):
+        v.pop("outputs")
+    # per-chunk-step roofline: resident tokens for a mid-prefill chunk
+    # (4 rows halfway through the prompt), fused vs gather
+    roof = {}
+    for mode, fused in (("fused", True), ("gather", False)):
+        r = paged_prefill_attention_roofline(
+            batch=4, chunk=chunk, resident_tokens=4 * (prompt_len // 2),
+            table_width=-(-max_len // bs), block_size=bs,
+            n_layers=cfg.n_layers, n_q_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, kv_bytes=2,
+            fused=fused)
+        roof[mode] = {"bytes_accessed": r.bytes_accessed,
+                      "t_memory_us": r.t_memory * 1e6,
+                      "bottleneck": r.bottleneck}
+    out = {
+        "config": {"arch": "qwen1.5-0.5b reduced(2)", "max_batch": 4,
+                   "max_len": max_len, "kv_block_size": bs,
+                   "prompt_len": prompt_len, "max_tokens": max_tokens,
+                   "prefill_chunk": chunk, "n_requests": len(sum(
+                       arrivals.values(), [])), "bursts": {
+                       str(k): len(v) for k, v in arrivals.items()}},
+        "stop_the_world": stw, "chunked": chunked,
+        "ttft_mean_ratio": stw["ttft_ms"]["mean"]
+        / max(chunked["ttft_ms"]["mean"], 1e-9),
+        "inter_token_p99_ratio": stw["inter_token_ms_p99"]
+        / max(chunked["inter_token_ms_p99"], 1e-9),
+        "roofline_v5e_per_chunk_step": roof,
+        "note": "wall times are CPU interpret-mode (correctness harness); "
+                "prefill KV bytes are the analytic per-chunk-step traffic "
+                "model shared with launch/roofline.py — fused reads "
+                "O(resident tokens) per chunk, gather the dense window",
+    }
+    _write_bench_serving({"chunked_prefill": out})
+    return out
+
+
 def decode_memory_term() -> dict:
     """weight-bytes component of the decode_32k memory term, bf16 vs packed."""
     out = {}
@@ -388,6 +554,7 @@ def main(force: bool = False):
         "paged_kv": paged_kv_footprint(),
         "serving_decode": serving_decode_bench(),
         "prefix_cache": prefix_cache_bench(),
+        "chunked_prefill": chunked_prefill_bench(),
     }, force)
     print("\n== Fig 1 (memory footprint / decode weight traffic) ==")
     for arch, v in res["footprint"].items():
@@ -455,6 +622,22 @@ def main(force: bool = False):
               f"{pc['peak_kv_bytes_ratio']:.2f}x")
         emit("speed_memory/prefix_prefill_ratio",
              pc["prefill_positions_ratio"], "baseline/prefix-cache")
+    cp = res.get("chunked_prefill", {})
+    if cp:
+        print("chunked interleaved prefill (bursty arrivals, "
+              "BENCH_serving.json):")
+        for mode in ("stop_the_world", "chunked"):
+            v = cp[mode]
+            print(f"  {mode:16s} ttft mean {v['ttft_ms']['mean']:6.0f} ms  "
+                  f"p99 itl {v['inter_token_ms_p99']:6.0f} ms  "
+                  f"{v['prefill_positions']} pos / {v['prefill_chunks']} "
+                  "chunks")
+            emit(f"speed_memory/{mode}_ttft_ms", v["ttft_ms"]["mean"],
+                 "bursty arrivals")
+        print(f"  ttft ratio (stw/chunked) = {cp['ttft_mean_ratio']:.2f}x   "
+              f"p99 itl ratio = {cp['inter_token_p99_ratio']:.2f}x")
+        emit("speed_memory/chunked_ttft_ratio", cp["ttft_mean_ratio"],
+             "stw/chunked")
     return res
 
 
@@ -470,7 +653,9 @@ if __name__ == "__main__":
     if a.serving_only:
         out = serving_decode_bench()
         out["prefix_cache"] = prefix_cache_bench()
+        out["chunked_prefill"] = chunked_prefill_bench()
         print(json.dumps(out, indent=1))
-        print(f"wrote {RESULTS / 'BENCH_serving.json'}")
+        print(f"wrote {RESULTS / 'BENCH_serving.json'} "
+              f"(+ copy at {REPO_ROOT / 'BENCH_serving.json'})")
     else:
         main(force=a.force)

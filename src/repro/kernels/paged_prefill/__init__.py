@@ -1,0 +1,16 @@
+"""Fused paged-prefill chunk attention: T prompt tokens per step against the
+block pools.
+
+Grid (B, Hkv, L) on the same blocking template as paged_attention's decode
+kernel: the logical-block dim is innermost, an online-softmax (m, z, acc)
+carry for all T*g query rows lives in VMEM scratch across a row's blocks, and
+per-row chunk starts/lengths plus the block table arrive as scalar-prefetch
+operands that drive the pool BlockSpec index maps.  Resident KV (including
+trie-shared prefix blocks — no gather-into-contiguous-cache seeding step) is
+streamed once per (row, kv-head); the chunk's own K/V never round-trips
+through HBM: its causal T x T scores fold into the carry at the last touched
+block and the chunk KV is scatter-written into the row's pool blocks through
+aliased pool outputs.  KV bytes read per chunk step are O(tokens resident),
+not O(B * table_width * block_size).  See kernel.py for the full scheme.
+"""
+from repro.kernels.paged_prefill import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the fused paged-prefill chunk kernel.
+
+Deliberately the *materializing* formulation the kernel replaces: scatter the
+chunk's K/V into the rows' pool blocks (pad rows to the trash block), gather
+the whole block table into a dense ``[B, Hkv, L*bs, Dh]`` window, and run
+masked dense softmax attention where chunk token ``j`` attends stored
+positions ``<= start + j`` (resident prefix + causal within the chunk).
+Matches nn/attention.py's chunk-gather fallback semantics; tests sweep shapes
+and assert the kernel agrees.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+TRASH_BLOCK = 0           # serving/paged.py convention: block 0 is reserved
+
+
+def paged_prefill_chunk_ref(q: jax.Array, k_chunk: jax.Array,
+                            v_chunk: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_tables: jax.Array,
+                            start: jax.Array, lens: jax.Array, scale: float,
+                            softcap: float = 0.0):
+    """Same contract as kernel.paged_prefill_chunk_kernel:
+    q [B, Hkv, T*g, Dh]; k_chunk/v_chunk [B, Hkv, T, Dh]; pools
+    [N, Hkv, bs, Dh]; block_tables [B, L]; start/lens [B]
+    -> (out [B, Hkv, T*g, Dh], k_pool', v_pool')."""
+    b, hkv, tg, dh = q.shape
+    t = k_chunk.shape[2]
+    bs = k_pool.shape[2]
+    nlog = block_tables.shape[1]
+    g = tg // t
+
+    pos = start[:, None] + jnp.arange(t, dtype=jnp.int32)[None]     # [B, T]
+    valid = jnp.arange(t, dtype=jnp.int32)[None] < lens[:, None]
+    blk = jnp.minimum(pos // bs, nlog - 1)
+    bid = jnp.take_along_axis(block_tables, blk, axis=1)            # [B, T]
+    bid = jnp.where(valid, bid, TRASH_BLOCK)    # pad rows never land anywhere
+    off = pos % bs
+    kf = k_chunk.transpose(0, 2, 1, 3).reshape(b * t, hkv, dh)
+    vf = v_chunk.transpose(0, 2, 1, 3).reshape(b * t, hkv, dh)
+    k_pool = k_pool.at[bid.reshape(-1), :, off.reshape(-1)].set(
+        kf.astype(k_pool.dtype))
+    v_pool = v_pool.at[bid.reshape(-1), :, off.reshape(-1)].set(
+        vf.astype(v_pool.dtype))
+
+    k = k_pool[block_tables]                    # [B, L, Hkv, bs, Dh]
+    v = v_pool[block_tables]
+    k = k.transpose(0, 2, 1, 3, 4).reshape(b, hkv, nlog * bs, dh)
+    v = v.transpose(0, 2, 1, 3, 4).reshape(b, hkv, nlog * bs, dh)
+    qg = q.reshape(b, hkv, t, g, dh)
+    s = jnp.einsum("bktgd,bkpd->bktgp", qg.astype(jnp.float32),
+                   k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    kvp = jnp.arange(nlog * bs, dtype=jnp.int32)
+    mask = (kvp[None, None] <= pos[:, :, None])[:, None, :, None]
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bktgp,bkpd->bktgd", w, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hkv, tg, dh).astype(k_pool.dtype), k_pool, v_pool

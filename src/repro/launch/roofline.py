@@ -190,6 +190,52 @@ def paged_decode_attention_roofline(
                     wire_bytes=0.0, n_devices=n_devices)
 
 
+def paged_prefill_attention_roofline(
+        *, batch: int, chunk: int, resident_tokens: int, table_width: int,
+        block_size: int, n_layers: int, n_q_heads: int, n_kv_heads: int,
+        head_dim: int, kv_bytes: int = 2, fused: bool = True,
+        n_devices: int = 1) -> Roofline:
+    """Analytic chunk-step roofline for *chunked paged prefill*.
+
+    Models what one fused chunk step (kernels/paged_prefill) moves when
+    ``batch`` rows each advance a chunk of ``chunk`` prompt tokens against
+    ``resident_tokens`` already-written positions (summed over rows):
+
+      * fused kernel: chunk Q in / ctx out, the chunk's K/V written once
+        (plus the in-place rewrite of the blocks the chunk splices into —
+        the fused scatter), and the *resident* KV streamed once per
+        (row, kv-head) pass; the chunk's own K/V is scored from VMEM and
+        never re-read, so KV bytes are O(resident tokens) per chunk;
+      * gather fallback: one read of the dense
+        ``batch * table_width * block_size`` window, worst-case over the
+        bucketed table width.  The write (and re-read) of the materialized
+        ``[B, L, Hkv, bs, Dh]`` buffer that gather also pays is NOT
+        counted, so its figure — and the fused advantage derived from it —
+        is a lower bound.
+
+    FLOPs cover the score and context matmuls: each chunk token attends the
+    resident prefix plus its causal chunk prefix.  Weight/MLP traffic is out
+    of scope — compose with the dry-run roofline for whole-step numbers.
+    """
+    kv_tokens = (resident_tokens if fused
+                 else batch * table_width * block_size)
+    per_token_kv = 2 * n_kv_heads * head_dim * kv_bytes          # K and V
+    q_io = 2 * batch * chunk * n_q_heads * head_dim * kv_bytes   # q + ctx
+    new_kv = batch * chunk * per_token_kv
+    if fused:
+        # the fused scatter rewrites each touched block in place; a chunk
+        # touches at most chunk/bs + 1 blocks per row
+        touched = batch * (chunk + block_size)
+        new_kv += touched * per_token_kv
+    bytes_accessed = n_layers * (q_io + new_kv + kv_tokens * per_token_kv)
+    attended = (chunk * resident_tokens
+                + batch * chunk * (chunk + 1) // 2) if fused else \
+        chunk * batch * table_width * block_size
+    flops = n_layers * 4.0 * n_q_heads * head_dim * attended
+    return Roofline(flops=float(flops), bytes_accessed=float(bytes_accessed),
+                    wire_bytes=0.0, n_devices=n_devices)
+
+
 def model_flops(param_count: int, active_param_count: int, tokens: int,
                 kind: str) -> float:
     """6·N·D for a train step (fwd+bwd), 2·N·D for inference, per step."""

@@ -21,8 +21,14 @@ where admission prefill collapses to the unshared suffix:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
         --requests 16 --prefix-cache --shared-prefixes 2 --shared-prefix-len 32
 
-Engine.stats() (admissions, preemptions, block occupancy, prefix-cache
-hits/misses/evictions) is printed at end of run either way.
+Prefill is chunked and interleaved by default (--prefill-chunk tokens per
+prefilling slot per step, piggybacked on the decode batch); --prefill-chunk 0
+restores the stop-the-world whole-prompt admission prefill for A/B latency
+comparisons.
+
+Engine.stats() (admissions, preemptions, chunked-prefill work, block
+occupancy, prefix-cache hits/misses/evictions) plus time-to-first-token
+percentiles are printed at end of run either way.
 """
 from __future__ import annotations
 
@@ -55,6 +61,7 @@ def build_engine(args) -> Engine:
     scfg = ServeConfig(max_batch=args.max_batch,
                        max_len=prompt_len + args.max_tokens,
                        temperature=args.temperature, top_p=args.top_p,
+                       prefill_chunk=args.prefill_chunk,
                        # None = auto: paged for attention-only stacks,
                        # contiguous for SSM/hybrid/cross caches
                        paged=False if args.contiguous_kv else None,
@@ -98,10 +105,16 @@ def print_stats(eng: Engine) -> None:
     s = eng.stats()
     line = (f"[stats] admissions={s.admissions} preemptions={s.preemptions} "
             f"prefill_positions={s.prefill_positions} "
+            f"prefill_chunks={s.prefill_chunks} "
             f"skipped_via_prefix={s.prefill_positions_skipped}")
     if s.blocks_in_use is not None:
         line += f" blocks_in_use={s.blocks_in_use} blocks_free={s.blocks_free}"
     print(line)
+    if s.ttft_ms is not None:
+        print(f"[ttft] mean {s.ttft_ms['mean']:.0f} ms  "
+              f"p50 {s.ttft_ms['p50']:.0f} ms  "
+              f"p95 {s.ttft_ms['p95']:.0f} ms  "
+              f"p99 {s.ttft_ms['p99']:.0f} ms")
     if s.prefix_cache is not None:
         pc = s.prefix_cache
         print(f"[prefix-cache] hits={pc['hits']} misses={pc['misses']} "
@@ -189,6 +202,10 @@ def main(argv=None):
                     help="print tokens as they are generated")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="open-loop Poisson arrivals (req/s); 0 = closed loop")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens a prefilling slot advances per "
+                         "engine step, interleaved with decode (0 = whole-"
+                         "prompt stop-the-world admission prefill)")
     ap.add_argument("--contiguous-kv", action="store_true",
                     help="per-slot contiguous KV regions instead of the "
                          "paged block pool")

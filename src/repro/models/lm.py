@@ -158,10 +158,11 @@ class CausalLM:
     def _fill_cache_from_prompt(self, p, tokens, cache, memory):
         # A second pass that runs decode semantics over the prompt would be
         # O(S) sequential; instead we recompute per-layer inputs via the full
-        # forward with collectors.  For framework simplicity serving uses the
-        # engine's per-admission scan prefill (serving/engine.py:_prefill_impl,
-        # driven by the continuous-batching scheduler); here we return the
-        # cache unchanged for API completeness.
+        # forward with collectors.  For framework simplicity serving prefills
+        # through the engine's chunked step (serving/engine.py, driven by the
+        # continuous-batching scheduler — decode_chunk on paged stacks, a
+        # masked decode-step scan otherwise); here we return the cache
+        # unchanged for API completeness.
         return cache
 
     def decode_step(self, p: Params, token: jax.Array, cache: Params,
@@ -190,3 +191,25 @@ class CausalLM:
                                         attn_impl=attn_impl)
         x = self._final_norm().apply(p["final_norm"], x)
         return self._logits(p, x)[:, 0], cache
+
+    def decode_chunk(self, p: Params, tokens: jax.Array, cache: Params,
+                     start: jax.Array, lens: jax.Array,
+                     block_tables: jax.Array,
+                     attn_impl: str = "gather") -> Tuple[jax.Array, Params]:
+        """Chunked prefill/decode: tokens [B, T] int32 -> (fp32 logits
+        [B, T, V], new cache).  Token ``j`` of row ``b`` is written at paged
+        cache position ``start[b] + j`` (valid iff ``j < lens[b]``) and
+        attends positions ``<= start[b] + j`` — the serving engine's fused
+        step runs prefilling rows (chunks of the prompt) and decoding rows
+        (``lens == 1``, the last sampled token) through one call.  Requires
+        the paged cache and a pure self-attention stack; models with SSM or
+        cross-attention caches take the engine's sequential scan fallback."""
+        c = self.cfg
+        x = self._embed().apply(p["embed"], tokens)
+        if c.embed_scale:
+            x = x * jnp.sqrt(c.d_model).astype(x.dtype)
+        x, cache = self._stack().decode_chunk(p["stack"], x, cache, start,
+                                              lens, block_tables,
+                                              attn_impl=attn_impl)
+        x = self._final_norm().apply(p["final_norm"], x)
+        return self._logits(p, x), cache

@@ -342,12 +342,80 @@ class Attention:
         return self._decode_out(p, ctx), cache
 
     def _decode_out(self, p: Params, ctx: jax.Array) -> jax.Array:
-        """ctx [B, 1, Hq, Dh] -> SubLN + output projection."""
-        b = ctx.shape[0]
-        flat = ctx.reshape(b, 1, self.q_dim)
+        """ctx [B, S, Hq, Dh] -> SubLN + output projection."""
+        b, s = ctx.shape[:2]
+        flat = ctx.reshape(b, s, self.q_dim)
         if self.subln:
             flat = self._subln().apply(p["subln"], flat)
         return self._wo().apply(p["wo"], flat)
+
+    # -- chunked prefill/decode with paged cache -------------------------------
+
+    def decode_chunk(self, p: Params, x: jax.Array, cache: Params,
+                     start: jax.Array, lens: jax.Array,
+                     block_tables: jax.Array,
+                     attn_impl: str = "gather") -> Tuple[jax.Array, Params]:
+        """Chunked-prefill step over the *paged* cache: x [B, T, D] holds a
+        chunk of T tokens per row; token ``j`` of row ``b`` is written at
+        cache position ``start[b] + j`` (valid iff ``j < lens[b]``, pad
+        positions are never written) and attends stored positions
+        ``<= start[b] + j`` — the resident prefix (trie-shared blocks
+        included, read in place) plus the chunk's own causal prefix.  Decode
+        rows are the ``lens == 1`` case, so one call serves steps that mix
+        prefilling and decoding rows (serving/engine.py's fused chunk step).
+
+        ``attn_impl`` selects the implementation exactly as in ``decode``:
+        ``"fused"`` streams resident blocks through the Pallas chunk kernel
+        (kernels/paged_prefill) with the chunk-KV scatter fused via aliased
+        pool outputs; ``"gather"`` scatters the chunk KV, materializes the
+        dense block-table window, and runs masked dense attention.  Scores
+        are always fp32 here."""
+        if self.cross:
+            raise ValueError("decode_chunk is self-attention only (the paged "
+                             "cache has no cross-attention layout)")
+        b, t, _ = x.shape
+        start = jnp.broadcast_to(jnp.asarray(start, jnp.int32).reshape(-1),
+                                 (b,))
+        lens = jnp.broadcast_to(jnp.asarray(lens, jnp.int32).reshape(-1), (b,))
+        positions = start[:, None] + jnp.arange(t, dtype=jnp.int32)[None]
+        q = self._project_q(p, x, positions)            # [B, T, Hq, Dh]
+        k_new, v_new = self._project_kv(p, x, positions)
+        if attn_impl == "fused":
+            from repro.kernels.paged_prefill import ops as pp_ops
+            ctx, pool_k, pool_v = pp_ops.paged_prefill_chunk(
+                q, k_new, v_new, cache["k"], cache["v"], block_tables,
+                start, lens, softcap=self.logit_softcap)
+            return self._decode_out(p, ctx), {"k": pool_k, "v": pool_v}
+        if attn_impl != "gather":
+            raise ValueError(f"unknown attn_impl {attn_impl!r} "
+                             "(expected 'fused' or 'gather')")
+        pool_k, pool_v = cache["k"], cache["v"]         # [N, Hkv, bs, Dh]
+        bs = pool_k.shape[2]
+        nlog = block_tables.shape[1]
+        valid = jnp.arange(t, dtype=jnp.int32)[None] < lens[:, None]
+        blk = jnp.minimum(positions // bs, nlog - 1)
+        bid = jnp.take_along_axis(block_tables, blk, axis=1)       # [B, T]
+        # pad rows are discarded to the trash block (0, serving/paged.py) —
+        # their write must not land in an owned block
+        bid = jnp.where(valid, bid, 0)
+        off = positions % bs
+        kf = k_new.reshape(b * t, self.n_kv_heads, self.head_dim)
+        vf = v_new.reshape(b * t, self.n_kv_heads, self.head_dim)
+        pool_k = pool_k.at[bid.reshape(-1), :, off.reshape(-1)].set(
+            kf.astype(pool_k.dtype))
+        pool_v = pool_v.at[bid.reshape(-1), :, off.reshape(-1)].set(
+            vf.astype(pool_v.dtype))
+        k = pool_k[block_tables]                  # [B, L, Hkv, bs, Dh]
+        v = pool_v[block_tables]
+        k = k.transpose(0, 2, 1, 3, 4).reshape(
+            b, self.n_kv_heads, nlog * bs, self.head_dim)
+        v = v.transpose(0, 2, 1, 3, 4).reshape(
+            b, self.n_kv_heads, nlog * bs, self.head_dim)
+        tkv = nlog * bs
+        mask = (jnp.arange(tkv, dtype=jnp.int32)[None, None]
+                <= positions[:, :, None])[:, None]     # [B, 1, T, L*bs]
+        ctx = self._attend(q, k, v, mask, kv_layout="bhsd")
+        return self._decode_out(p, ctx), {"k": pool_k, "v": pool_v}
 
     def _paged_update(self, p: Params, x: jax.Array, cache: Params,
                       idx: jax.Array, block_tables: jax.Array,

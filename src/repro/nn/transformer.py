@@ -233,6 +233,32 @@ class Block:
             x = x + h
         return x, new_cache
 
+    def decode_chunk(self, p: Params, x: jax.Array, cache: Params,
+                     start: jax.Array, lens: jax.Array,
+                     block_tables: jax.Array,
+                     attn_impl: str = "gather") -> Tuple[jax.Array, Params]:
+        """Chunked-prefill step: x [B, T, D] advances up to T cache positions
+        per row against the paged pools (nn/attention.py:Attention.
+        decode_chunk).  Self-attention-only blocks — the engine routes models
+        with SSM/cross caches through the sequential scan fallback instead."""
+        if self.spec.mixer != "attn":
+            raise ValueError(
+                f"decode_chunk supports pure self-attention blocks; mixer "
+                f"{self.spec.mixer!r} has no chunked paged path")
+        h, kv = self.attn.decode_chunk(p["attn"],
+                                       self.norm1.apply(p["norm1"], x),
+                                       cache["attn"], start, lens,
+                                       block_tables, attn_impl=attn_impl)
+        x = x + h
+        if self.spec.ffn == "dense":
+            x = x + self.mlp.apply(p["mlp"], self.norm2.apply(p["norm2"], x))
+        elif self.spec.ffn == "moe":
+            # decode semantics (no token dropping), same as decode()
+            h, _ = self.mlp.apply(p["mlp"], self.norm2.apply(p["norm2"], x),
+                                  full_capacity=True)
+            x = x + h
+        return x, {"attn": kv}
+
 
 @dataclasses.dataclass(frozen=True)
 class Stack:
@@ -366,6 +392,29 @@ class Stack:
                                    rep_cache[f"pos{i}"], cache_index,
                                    block_tables=block_tables,
                                    attn_impl=attn_impl)
+                new_caches[f"pos{i}"] = nc
+            return h, new_caches
+
+        x, new_cache = jax.lax.scan(body, x, (p, cache))
+        return x, new_cache
+
+    def decode_chunk(self, p: Params, x: jax.Array, cache: Params,
+                     start: jax.Array, lens: jax.Array,
+                     block_tables: jax.Array,
+                     attn_impl: str = "gather") -> Tuple[jax.Array, Params]:
+        """Chunked-prefill step over the scanned stack: x [B, T, D], per-row
+        chunk start/lens; block_tables int32 [B, L] (scan-invariant, every
+        repeat indexes its own pool leaf with the same mapping); attn_impl as
+        in decode()."""
+        blocks = self.blocks()
+
+        def body(h, xs):
+            rep_params, rep_cache = xs
+            new_caches = {}
+            for i, blk in enumerate(blocks):
+                h, nc = blk.decode_chunk(rep_params[f"pos{i}"], h,
+                                         rep_cache[f"pos{i}"], start, lens,
+                                         block_tables, attn_impl=attn_impl)
                 new_caches[f"pos{i}"] = nc
             return h, new_caches
 

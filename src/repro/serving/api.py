@@ -76,18 +76,26 @@ class StepOutput:
 class EngineStats:
     """Lightweight runtime counters, snapshotted by ``Engine.stats()``.
 
-    ``prefill_positions`` counts cache positions actually run through the
-    admission prefill scan; ``prefill_positions_skipped`` counts positions
-    covered by prefix-cache-shared blocks instead (zero prefill compute).
-    Block fields are ``None`` on the contiguous (non-paged) path, and
-    ``prefix_cache`` is ``None`` unless ``ServeConfig.prefix_cache`` is on —
-    when set it holds the radix-cache counters (hits / misses / evictions /
-    tokens_matched / cached_blocks / cached_unreferenced_blocks).
+    ``prefill_positions`` counts cache positions actually run through
+    chunked-prefill steps (accounted per chunk as it runs, not per
+    admission, so half-prefilled preemptions are charged only for the work
+    done); ``prefill_positions_skipped`` counts positions covered by
+    prefix-cache-shared blocks instead (zero prefill compute);
+    ``prefill_chunks`` is how many per-slot chunks those positions took.
+    ``ttft_ms`` holds time-to-first-token percentiles (mean / p50 / p95 /
+    p99, wall-clock from submit to the first sampled token) once any request
+    has produced one, else ``None``.  Block fields are ``None`` on the
+    contiguous (non-paged) path, and ``prefix_cache`` is ``None`` unless
+    ``ServeConfig.prefix_cache`` is on — when set it holds the radix-cache
+    counters (hits / misses / evictions / tokens_matched / cached_blocks /
+    cached_unreferenced_blocks).
     """
     admissions: int = 0
     preemptions: int = 0
     prefill_positions: int = 0
     prefill_positions_skipped: int = 0
+    prefill_chunks: int = 0
+    ttft_ms: Optional[Dict[str, float]] = None
     blocks_in_use: Optional[int] = None
     blocks_free: Optional[int] = None
     prefix_cache: Optional[Dict[str, int]] = None

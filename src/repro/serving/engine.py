@@ -12,59 +12,76 @@ Architecture (request lifecycle in serving/api.py, slot bookkeeping in
 serving/scheduler.py):
 
   * ``Engine.submit()`` enqueues a :class:`GenerationRequest`; ``step()``
-    admits waiting requests into free decode slots and runs ONE jitted decode
-    step over the whole slot batch; ``stream()`` iterates steps and yields
+    admits waiting requests into free decode slots and runs ONE jitted step
+    over the whole slot batch; ``stream()`` iterates steps and yields
     :class:`StepOutput` tokens as they are produced; ``generate()`` is the
     legacy blocking wrapper.
   * one preallocated cache of shape [slots, max_len]; per-row int32 cache
     indices let rows sit at different prompt/generation depths in the same
-    decode step, so finished rows are evicted and new requests admitted
-    without draining the batch.
-  * admission prefill: the prompt is right-padded to a power-of-two bucket
-    (bounds recompiles) and run through a lax.scan of decode steps on a
-    batch-of-one cache; cache updates are masked for pad positions (keeps SSM
-    states exact), then the filled rows are inserted into the slot's row of
-    the live cache.
+    step, so finished rows are evicted and new requests admitted without
+    draining the batch.
+  * **chunked, interleaved prefill** (Sarathi-style piggybacking): admission
+    assigns a slot without prefilling; each ``step()`` then advances up to
+    ``ServeConfig.prefill_chunk`` prompt tokens for every prefilling slot
+    *and* one decode token for every decoding slot in one fused jitted step
+    (chunk lengths are bucketed to powers of two to bound recompiles).  A
+    slot whose chunk exhausts its prompt emits its first sampled token from
+    that chunk's last-position logits.  ``prefill_chunk=0`` keeps the
+    stop-the-world whole-prompt semantics — a sequential scan of decode
+    steps over the full prompt, the retired admission prefill's behavior —
+    as the parity and latency baseline.  The old batch-of-one prefill scan
+    (``_prefill_impl``) and its prefix-KV seeding gather
+    (``_seed_prefix_impl``) are retired.
   * per-request sampling: temperature / top-p / PRNG-seed vectors ride along
-    the decode step, so greedy and stochastic requests share one compiled
-    step; ``max_tokens`` counts generated tokens (the first prefill-sampled
-    token included), EOS stops unless ``ignore_eos``.
+    the fused step; a row's PRNG key advances only when it actually consumes
+    a sample (decode rows and prompt-exhausting chunks), so the per-request
+    stream is identical whether the prompt prefilled in one chunk or many.
+    ``max_tokens`` counts generated tokens (the first prefill-sampled token
+    included), EOS stops unless ``ignore_eos``.
 
 KV-cache layout is selectable: ``ServeConfig(paged=True)`` (the default for
 attention-only models) replaces the per-slot contiguous [slots, max_len]
 regions with one block pool per layer [num_kv_blocks, Hkv, block_size, Dh]
 plus per-slot block tables (serving/paged.py) — resident KV bytes track the
 actual token footprint instead of worst-case capacity, admission waits on
-blocks as well as slots, and pool exhaustion mid-decode preempts a slot
-(recompute on re-admission).  ``paged=False`` keeps the contiguous path; both
-produce token-for-token identical greedy outputs (tests/test_paged_kv.py).
+blocks as well as slots, and pool exhaustion mid-flight (decode growth or a
+half-prefilled chunk) preempts the slot (recompute on re-admission).
+``paged=False`` keeps the contiguous path; both produce token-for-token
+identical greedy outputs (tests/test_paged_kv.py).
 
-How the paged layout is *attended* each decode step is a second knob:
-``ServeConfig(attn_impl=...)`` selects the fused Pallas kernel
-(kernels/paged_attention — streams each row's resident blocks out of the
-pools with an online softmax, KV bytes read O(tokens resident)) or the dense
-block-table gather fallback; ``"auto"`` picks fused on TPU and gather on
-CPU/interpret, and both are greedy-parity identical (tests/test_paged_kv.py).
+How the paged layout is *attended* is a second knob: ``ServeConfig(
+attn_impl=...)`` selects the fused Pallas kernels — kernels/paged_attention
+for pure decode steps, kernels/paged_prefill for steps that carry a chunk
+(both stream each row's resident blocks out of the pools with an online
+softmax; KV bytes read are O(tokens resident)) — or the dense block-table
+gather fallback; ``"auto"`` picks fused on TPU and gather on CPU/interpret,
+and both are greedy-parity identical (tests/test_paged_kv.py,
+tests/test_chunked_prefill.py).  Models whose caches have no paged layout
+(SSM / hybrid / cross-attention) run the chunked step as a masked
+``lax.scan`` of decode steps over the live contiguous cache — same
+interleaving, sequential within the chunk.
 
 ``ServeConfig(prefix_cache=True)`` (paged only) layers the **radix prefix
 cache** (serving/prefix_cache.py) on top: admission walks a block-granular
-trie of previously-prefilled token prefixes, maps every fully-matched block
-into the slot's table via ``BlockAllocator.share()``, and the engine
-prefills only the unmatched suffix (``_prefill_impl`` takes a start offset;
-``_seed_prefix_impl`` gathers the shared prefix KV into the batch-of-one
-prefill cache first so suffix attention sees it).  Finished/preempted
-requests *release* their blocks to the cache instead of freeing them, so hot
+trie of previously-prefilled token prefixes, maps matched blocks into the
+slot's table via ``BlockAllocator.share()``, and prefill resumes at the
+covered offset — chunk attention reads the shared prefix KV directly from
+the pool blocks, so there is no seeding copy.  Publication is
+as-blocks-fill: every chunk publishes the blocks it completed, so identical
+prompts arriving while a long prompt is mid-prefill share its progress.
+Finished/preempted requests *release* their blocks to the cache, so hot
 system prompts stay resident until LRU eviction reclaims them under pool
 pressure; greedy outputs are token-for-token identical with the cache on or
 off (tests/test_prefix_cache.py).  ``Engine.stats()`` snapshots admissions,
-preemptions, block occupancy, and prefix hit/miss/eviction counters.
+preemptions, per-chunk prefill work, block occupancy, prefix counters, and
+time-to-first-token percentiles.
 
-Known gaps recorded in ROADMAP.md Open items: admissions prefill one
-request at a time.
+Known gaps recorded in ROADMAP.md Open items: the host loop is synchronous.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -73,9 +90,9 @@ import numpy as np
 
 from repro.models import build_model
 from repro.models.base import ModelConfig
-from repro.serving.api import (EngineStats, FinishReason, GenerationRequest,
-                               SamplingParams, StepOutput, make_request)
-from repro.serving.paged import TRASH_BLOCK, BlockAllocator
+from repro.serving.api import (EngineStats, GenerationRequest, SamplingParams,
+                               StepOutput, make_request)
+from repro.serving.paged import BlockAllocator
 from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.sampling import sample_batch
 from repro.serving.scheduler import Scheduler, bucket_length
@@ -90,8 +107,13 @@ class ServeConfig:
     temperature: float = 0.0         # default SamplingParams for bare submits
     top_p: float = 1.0
     seed: int = 0                    # base for per-request PRNG derivation
-    prefill_bucket_min: int = 8      # smallest prompt bucket (powers of two up)
+    prefill_bucket_min: int = 8      # smallest whole-prompt chunk bucket
     cache_dtype: str = "float32"     # bfloat16 on real HW
+    # max prompt tokens a prefilling slot advances per engine step (chunk
+    # lengths bucket to powers of two up to this, bounding recompiles);
+    # 0 = whole-prompt sequential-scan prefill — the retired stop-the-world
+    # admission prefill's semantics, kept as the parity/latency baseline
+    prefill_chunk: int = 32
     # -- paged KV cache (serving/paged.py) --------------------------------
     # block-pooled KV cache: True / False force it on/off; None (default)
     # auto-selects — paged for attention-only stacks, contiguous for models
@@ -101,23 +123,23 @@ class ServeConfig:
     # pool size incl. the reserved trash block; None = full capacity
     # (max_batch slots at max_len depth — no admission ever waits on blocks)
     num_kv_blocks: Optional[int] = None
-    # paged decode-attention implementation: "fused" streams KV blocks
-    # through the Pallas kernel (kernels/paged_attention), "gather"
-    # materializes the dense block-table window, "auto" picks fused on TPU
-    # and the gather fallback elsewhere (CPU/interpret).  Requesting
-    # "fused" off-TPU runs the kernel in interpret mode (correctness path,
-    # used by the parity tests).  Distinct knob from ModelConfig.attn_impl
-    # ("dense"/"blocked"), which selects the *forward/prefill* attention
-    # implementation.
+    # paged attention implementation: "fused" streams KV blocks through the
+    # Pallas kernels (kernels/paged_attention for decode steps,
+    # kernels/paged_prefill for chunk steps), "gather" materializes the
+    # dense block-table window, "auto" picks fused on TPU and the gather
+    # fallback elsewhere (CPU/interpret).  Requesting "fused" off-TPU runs
+    # the kernels in interpret mode (correctness path, used by the parity
+    # tests).  Distinct knob from ModelConfig.attn_impl ("dense"/"blocked"),
+    # which selects the *forward* attention implementation.
     attn_impl: str = "auto"
     # override the model's attention KV block length (Attention.block_kv,
-    # used by the blocked/flash prefill impl); None keeps the config value
+    # used by the blocked/flash forward impl); None keeps the config value
     block_kv: Optional[int] = None
     # -- radix prefix cache (serving/prefix_cache.py, paged only) ----------
     # share KV blocks of repeated prompt prefixes (system prompts) across
     # requests: admission maps trie-matched blocks into the slot's table and
-    # prefills only the unmatched suffix; finished/preempted requests
-    # release their blocks to the cache (LRU-evicted under pool pressure)
+    # prefill resumes past them; finished/preempted requests release their
+    # blocks to the cache (LRU-evicted under pool pressure)
     prefix_cache: bool = False
     # cap on blocks the trie may hold (None = unbounded; eviction then
     # happens only when alloc() would starve)
@@ -128,6 +150,10 @@ class ServeConfig:
             raise ValueError(
                 f"prefill_bucket_min={self.prefill_bucket_min} must be >= 1 "
                 "(bucket_length would loop forever)")
+        if self.prefill_chunk < 0:
+            raise ValueError(
+                f"prefill_chunk={self.prefill_chunk} must be >= 0 "
+                "(0 = whole-prompt chunks)")
         if self.kv_block_size < 1:
             raise ValueError(f"kv_block_size={self.kv_block_size} must be >= 1")
         if self.num_kv_blocks is not None and self.num_kv_blocks < 2:
@@ -192,14 +218,14 @@ class Engine:
         self.paged = attn_only if self.scfg.paged is None else self.scfg.paged
         impl = self.scfg.attn_impl
         if impl == "auto":
-            # the fused kernel targets TPU; elsewhere (CPU CI) the gather
+            # the fused kernels target TPU; elsewhere (CPU CI) the gather
             # fallback is both faster and what interpret mode exists to test
             impl = ("fused" if self.paged and jax.default_backend() == "tpu"
                     else "gather")
         if impl == "fused" and not self.paged:
             raise ValueError(
-                "attn_impl='fused' is the paged-pool decode kernel; it "
-                "requires the paged KV cache (ServeConfig(paged=True))")
+                "attn_impl='fused' selects the paged-pool kernels; they "
+                "require the paged KV cache (ServeConfig(paged=True))")
         self.attn_impl = impl
         self.allocator = (BlockAllocator(self.scfg.pool_blocks(),
                                          self.scfg.kv_block_size)
@@ -219,27 +245,33 @@ class Engine:
         self.sched = Scheduler(self.scfg.max_batch, self.scfg.max_len,
                                self.scfg.eos_id, self.scfg.prefill_bucket_min,
                                allocator=self.allocator,
-                               prefix_cache=self.prefix_cache)
-        # donate the cache (and key) buffers: step/admission outputs replace
-        # them, so XLA can update in place instead of copying the whole
-        # cache (contiguous [slots, max_len] regions or the paged block pool)
-        # every generated token (no-op on backends without donation support,
-        # e.g. CPU)
+                               prefix_cache=self.prefix_cache,
+                               prefill_chunk=self.scfg.prefill_chunk)
+        # donate the cache (and key) buffers: step outputs replace them, so
+        # XLA can update in place instead of copying the whole cache
+        # (contiguous [slots, max_len] regions or the paged block pool)
+        # every step (no-op on backends without donation support, e.g. CPU)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(2, 4))
-        self._prefill = jax.jit(self._prefill_impl,   # retraced per bucket
-                                donate_argnums=(3,))
-        self._insert = jax.jit(self._insert_impl,     # retraced per bucket
-                               donate_argnums=(0,))
-        self._insert_paged = jax.jit(self._insert_paged_impl,
-                                     donate_argnums=(0,))
-        self._seed_prefix = jax.jit(self._seed_prefix_impl,  # per (bucket, ns)
-                                    donate_argnums=(0,))
-        # admission-prefill work counters (Engine.stats()): positions run
-        # through the prefill scan vs positions skipped via shared blocks
+        # the fused chunk step: retraced per (chunk bucket, table width).
+        # prefill_chunk > 0 on paged models runs chunk attention
+        # (kernels/paged_prefill or the gather fallback); contiguous/SSM
+        # models — and prefill_chunk == 0, the legacy stop-the-world
+        # whole-prompt baseline — run a sequential scan of decode steps
+        self._chunk = (jax.jit(self._chunk_step_impl, donate_argnums=(2, 6))
+                       if self.paged else None)
+        self._chunk_scan = jax.jit(
+            self._chunk_scan_paged_impl if self.paged
+            else self._chunk_scan_impl, donate_argnums=(2, 6))
+        # prefill work counters (Engine.stats()): positions run through
+        # chunk steps (counted per chunk, not per admission) vs positions
+        # skipped via shared blocks, and how many chunks it took
         self._prefill_positions = 0
         self._prefill_skipped = 0
+        self._prefill_chunks = 0
         self._uid_counter = 0
         self._requests: Dict[int, GenerationRequest] = {}   # uid -> in flight
+        self._submit_ts: Dict[int, float] = {}   # uid -> submit wall time
+        self._ttft_ms: List[float] = []          # submit -> first token
         # live decode state, allocated lazily on first admission; idle rows
         # hold pad_id so their (discarded) compute never depends on a dead
         # request's last token
@@ -247,66 +279,16 @@ class Engine:
         self._tokens = np.full((self.scfg.max_batch,), self.scfg.pad_id,
                                np.int32)
         self._keys = None                             # uint32 [slots, 2]
-        # shape of the most recent decode step (active slots, per-slot
-        # positions, bucketed table width), set by step(); telemetry for
-        # the serving benchmark's KV-traffic model
+        # shape of the most recent fused step (active slots, per-slot
+        # positions, bucketed table width, chunk plan), set by step();
+        # telemetry for the serving benchmark's KV-traffic model
         self.last_decode: Optional[Dict] = None
 
     # -- jitted cores -----------------------------------------------------------
 
-    def _prefill_impl(self, params, tokens, length, cache, key, temp, top_p,
-                      start):
-        """tokens [1, S] — the *unmatched suffix* of the prompt, right-padded
-        to its own bucket length; runs decode over absolute cache positions
-        start..start+S-1 under lax.scan (``start`` 0 without prefix sharing,
-        i.e. the whole prompt).  With a nonzero start, the cache already
-        holds the prefix-shared KV at positions < start
-        (``_seed_prefix_impl``), so suffix attention sees the full context.
-        Cache updates at pad positions (t >= length, the suffix length) are
-        masked out, so KV rows beyond the prompt stay zero and recurrent SSM
-        states are exactly the length-token state.  Returns (first sampled
-        token [1], filled cache, advanced PRNG key)."""
-        b, slen = tokens.shape
-
-        def step(carry, t):
-            cache, last_logits = carry
-            logits, new_cache = self.model.decode_step(
-                params, tokens[:, t], cache, start + t)
-            keep = t < length
-            cache = jax.tree_util.tree_map(
-                lambda n, o: jnp.where(keep, n, o), new_cache, cache)
-            last_logits = jnp.where(t == length - 1, logits, last_logits)
-            return (cache, last_logits), None
-
-        v = self.cfg.padded_vocab
-        init = (cache, jnp.zeros((b, v), logits_dtype(self.cfg)))
-        (cache, last_logits), _ = jax.lax.scan(step, init, jnp.arange(slen))
-        key, sub = jax.random.split(key)
-        first = sample_batch(sub[None], last_logits,
-                             jnp.reshape(temp, (1,)), jnp.reshape(top_p, (1,)))
-        return first, cache, key
-
-    def _seed_prefix_impl(self, pcache, pool, ids):
-        """Gather the trie-shared prefix KV out of the paged pool into
-        positions 0..len(ids)*bs-1 of the batch-of-one prefill cache, so the
-        suffix-only prefill scan attends the full context without
-        recomputing it.  ``ids`` int32 [ns]: pool blocks holding logical
-        blocks 0..ns-1 of the prompt.
-
-        Leaves: pcache [R, 1, Hkv, bucket, Dh], pool [R, N, Hkv, bs, Dh]
-        (R = scanned stack repeats)."""
-        def put(small, big):
-            g = big[:, ids]                       # [R, ns, Hkv, bs, Dh]
-            r, ns, hkv, bs, dh = g.shape
-            g = g.transpose(0, 2, 1, 3, 4).reshape(r, hkv, ns * bs, dh)
-            return small.at[:, :, :, :ns * bs].set(
-                g[:, None].astype(small.dtype))
-
-        return jax.tree_util.tree_map(put, pcache, pool)
-
     def _decode_impl(self, params, tokens, cache, index, keys, temps, top_ps,
                      block_tables=None):
-        """One continuous-batching step: tokens [B], per-row cache index [B],
+        """One pure-decode step: tokens [B], per-row cache index [B],
         per-row PRNG keys [B, 2] and sampling params [B].  ``block_tables``
         (int32 [B, L]) selects the paged-pool cache layout; ``self.attn_impl``
         (resolved once at construction) picks fused-kernel vs gather paged
@@ -319,39 +301,93 @@ class Engine:
         nxt = sample_batch(subs, logits, temps, top_ps)
         return nxt, cache, new_keys
 
-    def _insert_impl(self, cache, pcache, slot):
-        """Write a batch-of-one prefill cache into row ``slot`` of the live
-        cache (positions 0..bucket-1; later positions belong to decode)."""
-        def put(big, small):
-            start = (0, slot) + (0,) * (big.ndim - 2)
-            return jax.lax.dynamic_update_slice(big, small.astype(big.dtype),
-                                                start)
-        return jax.tree_util.tree_map(put, cache, pcache)
+    def _chunk_step_impl(self, params, tokens, cache, start, lens, emit, keys,
+                         temps, top_ps, block_tables):
+        """One fused chunk step over the paged pools: tokens [B, T] hold each
+        row's chunk (prefilling rows: the next ``lens`` prompt tokens;
+        decoding rows: ``lens == 1``, the last sampled token; idle rows: pad),
+        written at positions ``start + j`` and attending ``<= start + j``
+        (kernels/paged_prefill, or the chunk-gather fallback).  Samples from
+        every row's last valid position; a row's PRNG key advances only where
+        ``emit`` is set (rows that actually consume the sample), so chunked
+        and whole-prompt prefill produce identical per-request key streams."""
+        logits, cache = self.model.decode_chunk(
+            params, tokens, cache, start, lens, block_tables,
+            attn_impl=self.attn_impl)
+        last = jnp.take_along_axis(logits, (lens - 1)[:, None, None],
+                                   axis=1)[:, 0]
+        split = jax.vmap(jax.random.split)(keys)       # [B, 2, 2]
+        new_keys = jnp.where(emit[:, None], split[:, 0], keys)
+        nxt = sample_batch(split[:, 1], last, temps, top_ps)
+        return nxt, cache, new_keys
 
-    def _insert_paged_impl(self, pool, pcache, block_ids):
-        """Scatter a batch-of-one prefill cache into the slot's allocated
-        pool blocks.  ``block_ids`` int32 [nb] maps the bucket's logical
-        blocks to pool blocks; entries past the slot's allocation point at
-        the trash block (the bucket may round past the allocated coverage —
-        those positions are pad zeros nothing will attend to), and so do
-        entries for prefix-shared blocks: those are read-only (the trie and
-        other requests hold them), and the seeded/recomputed copy in the
-        prefill cache is identical, so it is discarded to trash instead of
-        copy-on-write.
+    def _chunk_scan_impl(self, params, tokens, cache, start, lens, emit, keys,
+                         temps, top_ps):
+        """Chunk-step fallback for caches with no paged layout (SSM / hybrid
+        / cross): a ``lax.scan`` of decode steps over the chunk positions on
+        the live contiguous cache, with per-row masking — row ``b``'s cache
+        update at scan index ``j`` sticks iff ``j < lens[b]`` (pad positions
+        and already-decoded rows are reverted, keeping recurrent SSM states
+        exact), and its logits are captured at ``j == lens[b] - 1``.  Same
+        interleaving contract as ``_chunk_step_impl``, sequential within the
+        chunk."""
+        b, slen = tokens.shape
 
-        Leaves: pool [R, N, Hkv, bs, Dh], pcache [R, 1, Hkv, bucket, Dh]
-        (R = scanned stack repeats)."""
-        nb = block_ids.shape[0]
+        def step(carry, j):
+            cache, last = carry
+            logits, new_cache = self.model.decode_step(params, tokens[:, j],
+                                                       cache, start + j)
+            keep = j < lens                            # [B]
 
-        def put(big, small):
-            bs = big.shape[-2]
-            r, _, hkv, bucket, dh = small.shape
-            s = small[:, 0]                            # [R, Hkv, bucket, Dh]
-            s = jnp.pad(s, ((0, 0), (0, 0), (0, nb * bs - bucket), (0, 0)))
-            s = s.reshape(r, hkv, nb, bs, dh).transpose(0, 2, 1, 3, 4)
-            return big.at[:, block_ids].set(s.astype(big.dtype))
+            def sel(n, o):
+                k = keep.reshape((1, -1) + (1,) * (n.ndim - 2))
+                return jnp.where(k, n, o)
 
-        return jax.tree_util.tree_map(put, pool, pcache)
+            cache = jax.tree_util.tree_map(sel, new_cache, cache)
+            last = jnp.where((j == lens - 1)[:, None], logits, last)
+            return (cache, last), None
+
+        init = (cache, jnp.zeros((b, self.cfg.padded_vocab),
+                                 logits_dtype(self.cfg)))
+        (cache, last), _ = jax.lax.scan(step, init, jnp.arange(slen))
+        split = jax.vmap(jax.random.split)(keys)
+        new_keys = jnp.where(emit[:, None], split[:, 0], keys)
+        nxt = sample_batch(split[:, 1], last, temps, top_ps)
+        return nxt, cache, new_keys
+
+    def _chunk_scan_paged_impl(self, params, tokens, cache, start, lens, emit,
+                               keys, temps, top_ps, block_tables):
+        """Sequential chunk scan over the *paged* pools — the
+        ``prefill_chunk=0`` stop-the-world baseline (the retired
+        token-at-a-time admission prefill's semantics, batched over slots).
+
+        The shared pools cannot be per-row reverted like the contiguous
+        cache, so pad steps are made idempotent instead of masked: row ``b``
+        at scan index ``j`` replays position ``start + min(j, lens - 1)``
+        with its own token once ``j >= lens`` — the KV projection depends
+        only on (token, position), so the rewrite stores bit-identical
+        values, and the row's logits were already captured at
+        ``j == lens - 1``.  Sound for attention KV only; paged stacks are
+        attention-only by construction."""
+        b, slen = tokens.shape
+
+        def step(carry, j):
+            cache, last = carry
+            jj = jnp.minimum(j, lens - 1)              # [B]
+            tok = jnp.take_along_axis(tokens, jj[:, None], axis=1)[:, 0]
+            logits, cache = self.model.decode_step(
+                params, tok, cache, start + jj, block_tables=block_tables,
+                attn_impl=self.attn_impl)
+            last = jnp.where((j == lens - 1)[:, None], logits, last)
+            return (cache, last), None
+
+        init = (cache, jnp.zeros((b, self.cfg.padded_vocab),
+                                 logits_dtype(self.cfg)))
+        (cache, last), _ = jax.lax.scan(step, init, jnp.arange(slen))
+        split = jax.vmap(jax.random.split)(keys)
+        new_keys = jnp.where(emit[:, None], split[:, 0], keys)
+        nxt = sample_batch(split[:, 1], last, temps, top_ps)
+        return nxt, cache, new_keys
 
     # -- request lifecycle --------------------------------------------------------
 
@@ -376,6 +412,7 @@ class Engine:
                 "reusing it would orphan that request's callback and finish "
                 "bookkeeping")
         self._requests[req.uid] = req
+        self._submit_ts[req.uid] = time.perf_counter()
         self.sched.submit(req)
         return req
 
@@ -383,44 +420,33 @@ class Engine:
         return self.sched.has_work()
 
     def step(self) -> List[StepOutput]:
-        """Admit waiting requests, then run one decode step over the slot
-        batch.  Returns the StepOutputs produced (admission first-tokens,
-        then one token per active slot)."""
+        """Admit waiting requests, then run one fused step over the slot
+        batch: every prefilling slot advances up to ``prefill_chunk`` prompt
+        tokens and every decoding slot one token (Sarathi-style
+        interleaving).  Returns the StepOutputs produced (rejections, then
+        one token per slot that completed its prompt or decoded)."""
         outs: List[StepOutput] = []
-        self.last_decode = None        # stays None if no slot decodes
+        self.last_decode = None        # stays None if no slot ran
         admitted, rejected = self.sched.admit()
         outs.extend(rejected)
-        for slot, req in admitted:
-            outs.append(self._admit(slot, req))
+        if admitted:
+            self._ensure_state()
+            for slot, req in admitted:
+                self._keys = self._keys.at[slot].set(self._request_key(req))
+                # positions covered by trie-shared blocks skip prefill; on a
+                # preemption resume this counts the re-matched progress too
+                self._prefill_skipped += int(self.sched.prefix_lens[slot])
 
+        # plan this step's chunks (may preempt half-prefilled slots whose
+        # growth starves), then run the fused step over whoever is active
+        chunks = self.sched.next_chunks()
         active = self.sched.active_slots()
         if active:
-            sc = self.sched
-            bt = None
-            width = None
-            if self.paged:
-                # gather only the blocks covering the deepest active row
-                # (power-of-two widths bound retraces, like prefill
-                # buckets) — per-step KV gather bandwidth then tracks the
-                # batch's actual depth instead of max_len
-                depth = int(sc.positions[active].max()) + 1
-                width = bucket_length(self.allocator.blocks_for(depth), 1,
-                                      sc.block_tables.shape[1])
-                bt = jnp.asarray(sc.block_tables[:, :width])
-            # snapshot of the decode-step shape actually run (post-admission,
-            # pre-record): benchmarks/speed_memory.py models per-step KV
-            # traffic from this instead of guessing from advanced state
-            self.last_decode = {"active": list(active),
-                                "positions": sc.positions.tolist(),
-                                "table_width": width}
-            tok, self._cache, self._keys = self._decode(
-                self.params, jnp.asarray(self._tokens), self._cache,
-                jnp.asarray(sc.positions), self._keys,
-                jnp.asarray(sc.temperatures), jnp.asarray(sc.top_ps), bt)
-            tok_np = np.asarray(tok)
-            self._tokens = tok_np.copy()
-            for slot in active:
-                outs.append(self.sched.record(slot, int(tok_np[slot])))
+            self._ensure_state()
+            if chunks:
+                outs.extend(self._run_chunk_step(chunks, active))
+            else:
+                outs.extend(self._run_decode_step(active))
 
         # any slot freed this step (finish, abort, or paged preemption) must
         # decode the pad token while idle, not the dead request's last token
@@ -428,12 +454,111 @@ class Engine:
             if req is None:
                 self._tokens[slot] = self.scfg.pad_id
 
+        now = time.perf_counter()
         for out in outs:
+            if out.index == 0 and out.token >= 0:
+                t0 = self._submit_ts.get(out.uid)
+                if t0 is not None:
+                    self._ttft_ms.append((now - t0) * 1e3)
+            if out.finished or out.index == 0:
+                self._submit_ts.pop(out.uid, None)
             req = self._requests.get(out.uid)
             if req is not None and req.on_token is not None:
                 req.on_token(out)
             if out.finished:
                 self._requests.pop(out.uid, None)
+        return outs
+
+    def _run_decode_step(self, active: List[int]) -> List[StepOutput]:
+        """Pure-decode step (no prefilling slots): the paged_attention decode
+        kernel / gather path, one token per active slot."""
+        sc = self.sched
+        bt = None
+        width = None
+        if self.paged:
+            # gather only the blocks covering the deepest active row
+            # (power-of-two widths bound retraces, like chunk buckets) —
+            # per-step KV gather bandwidth then tracks the batch's actual
+            # depth instead of max_len
+            depth = int(sc.positions[active].max()) + 1
+            width = bucket_length(self.allocator.blocks_for(depth), 1,
+                                  sc.block_tables.shape[1])
+            bt = jnp.asarray(sc.block_tables[:, :width])
+        # snapshot of the step shape actually run (post-admission,
+        # pre-record): benchmarks/speed_memory.py models per-step KV
+        # traffic from this instead of guessing from advanced state
+        self.last_decode = {"active": list(active),
+                            "positions": sc.positions.tolist(),
+                            "table_width": width,
+                            "chunks": None}
+        tok, self._cache, self._keys = self._decode(
+            self.params, jnp.asarray(self._tokens), self._cache,
+            jnp.asarray(sc.positions), self._keys,
+            jnp.asarray(sc.temperatures), jnp.asarray(sc.top_ps), bt)
+        tok_np = np.asarray(tok)
+        self._tokens = tok_np.copy()
+        return [self.sched.record(slot, int(tok_np[slot])) for slot in active]
+
+    def _run_chunk_step(self, chunks: Dict[int, int],
+                        active: List[int]) -> List[StepOutput]:
+        """Fused chunk step: prefilling slots advance their planned chunk,
+        decoding slots their one token, in a single jitted call."""
+        sc, scfg = self.sched, self.scfg
+        # chunk widths bucket to powers of two (bounds recompiles to
+        # O(log prefill_chunk) shapes); whole-prompt mode buckets by
+        # prefill_bucket_min exactly like the retired admission prefill
+        max_l = max(chunks.values())
+        if scfg.prefill_chunk > 0:
+            t = bucket_length(max_l, 1, scfg.prefill_chunk)
+        else:
+            t = bucket_length(max_l, scfg.prefill_bucket_min, scfg.max_len)
+        toks = np.full((scfg.max_batch, t), scfg.pad_id, np.int32)
+        start = np.asarray(sc.positions, np.int32).copy()
+        lens = np.ones((scfg.max_batch,), np.int32)
+        emit = np.zeros((scfg.max_batch,), bool)
+        for slot in active:
+            n = chunks.get(slot)
+            if n is not None:
+                toks[slot, :n] = sc.pending[slot][:n]
+                lens[slot] = n
+                emit[slot] = n == len(sc.pending[slot])  # prompt exhausted
+            else:
+                toks[slot, 0] = self._tokens[slot]
+                emit[slot] = True
+        bt = None
+        width = None
+        if self.paged:
+            depth = max(int(start[s]) + int(lens[s]) for s in active)
+            width = bucket_length(self.allocator.blocks_for(depth), 1,
+                                  sc.block_tables.shape[1])
+            bt = jnp.asarray(sc.block_tables[:, :width])
+        self.last_decode = {"active": list(active),
+                            "positions": sc.positions.tolist(),
+                            "table_width": width,
+                            "chunks": dict(chunks), "chunk_t": t,
+                            "starts": start.tolist(), "lens": lens.tolist()}
+        args = (self.params, jnp.asarray(toks), self._cache,
+                jnp.asarray(start), jnp.asarray(lens), jnp.asarray(emit),
+                self._keys, jnp.asarray(sc.temperatures),
+                jnp.asarray(sc.top_ps))
+        if self.paged:
+            # prefill_chunk == 0 is the stop-the-world baseline: the legacy
+            # sequential whole-prompt scan, not the fused chunk attention
+            fn = self._chunk if scfg.prefill_chunk > 0 else self._chunk_scan
+            tok, self._cache, self._keys = fn(*args, bt)
+        else:
+            tok, self._cache, self._keys = self._chunk_scan(*args)
+        tok_np = np.asarray(tok)
+        self._prefill_positions += sum(chunks.values())
+        self._prefill_chunks += len(chunks)
+        outs: List[StepOutput] = []
+        for slot in active:
+            n = chunks.get(slot)
+            if n is not None:
+                if not sc.advance_prefill(slot, n):
+                    continue           # still prefilling: no token this step
+            self._tokens[slot] = int(tok_np[slot])
+            outs.append(sc.record(slot, int(tok_np[slot])))
         return outs
 
     def stream(self) -> Iterator[StepOutput]:
@@ -511,16 +636,26 @@ class Engine:
 
     def stats(self) -> EngineStats:
         """Snapshot of the engine's runtime counters: admissions,
-        preemptions, admission-prefill work (positions run vs skipped via
-        prefix sharing), paged-block occupancy, and — with
+        preemptions, chunked-prefill work (positions run per chunk vs
+        positions skipped via prefix sharing, chunk count), paged-block
+        occupancy, time-to-first-token percentiles, and — with
         ``ServeConfig(prefix_cache=True)`` — the radix-cache
         hit/miss/eviction counters."""
         alloc = self.allocator
+        ttft = None
+        if self._ttft_ms:
+            arr = np.asarray(self._ttft_ms)
+            ttft = {"mean": float(arr.mean()),
+                    "p50": float(np.percentile(arr, 50)),
+                    "p95": float(np.percentile(arr, 95)),
+                    "p99": float(np.percentile(arr, 99))}
         return EngineStats(
             admissions=self.sched.admissions,
             preemptions=self.sched.preemptions,
             prefill_positions=self._prefill_positions,
             prefill_positions_skipped=self._prefill_skipped,
+            prefill_chunks=self._prefill_chunks,
+            ttft_ms=ttft,
             blocks_in_use=None if alloc is None else alloc.blocks_in_use(),
             blocks_free=None if alloc is None else alloc.available(),
             prefix_cache=(None if self.prefix_cache is None
@@ -538,66 +673,6 @@ class Engine:
         if seed is None:
             seed = (self.scfg.seed + 0x9E3779B9 * (req.uid + 1)) & 0x7FFFFFFF
         return jax.random.PRNGKey(seed)
-
-    def _admit(self, slot: int, req: GenerationRequest) -> StepOutput:
-        """Prefill the prompt on a batch-of-one bucketed contiguous cache,
-        insert it into the slot's cache (contiguous row or allocated pool
-        blocks), and record the first sampled token.  A preempted request
-        re-admits with its generated tokens appended to the prefill, resuming
-        where it left off (recompute preemption).
-
-        With prefix sharing, the scheduler set ``prefix_lens[slot]`` to the
-        trie-covered prefix length: the shared KV is gathered into the
-        prefill cache (``_seed_prefix``) and the scan runs only the suffix —
-        its own, smaller length bucket — from that start offset.  A fully
-        matched prompt still recomputes its last position (the logits seed
-        the first sampled token); that position's cache write lands in a
-        shared block's logical slot and is discarded to trash on insert."""
-        self._ensure_state()
-        sc, scfg = self.sched, self.scfg
-        tokens = list(req.prompt) + list(req.output_tokens)
-        plen = len(tokens)
-        bucket = sc.bucket(plen)
-        start = int(sc.prefix_lens[slot])         # 0 without prefix sharing
-        n_shared = sc.shared_counts[slot]
-        suffix = plen - start
-        # the suffix gets its own (smaller) bucket; cap so the scan's last
-        # masked position start + sbucket - 1 stays inside the prefill cache
-        sbucket = min(sc.bucket(suffix), bucket - start)
-        toks = np.full((1, sbucket), scfg.pad_id, np.int32)
-        toks[0, :suffix] = tokens[start:]
-        pcache = self.model.init_cache(self.params, 1, bucket,
-                                       jnp.dtype(scfg.cache_dtype))
-        if n_shared:
-            pcache = self._seed_prefix(
-                pcache, self._cache,
-                jnp.asarray(sc.block_ids[slot][:n_shared], jnp.int32))
-        first, pcache, key = self._prefill(
-            self.params, jnp.asarray(toks), jnp.int32(suffix), pcache,
-            self._request_key(req), jnp.float32(req.params.temperature),
-            jnp.float32(req.params.top_p), jnp.int32(start))
-        self._prefill_positions += suffix
-        self._prefill_skipped += start
-        if self.paged:
-            # the slot's block-table row is already shared-ids + owned-ids
-            # followed by trash padding, so bucket blocks past the
-            # allocation land in the trash block (their positions are pad
-            # zeros); shared blocks are remapped to trash too — they are
-            # read-only, and the prefill cache's seeded/recomputed copy of
-            # them is identical, so it is discarded instead of copy-on-write
-            nb = self.allocator.blocks_for(bucket)
-            ids = sc.block_tables[slot][:nb].copy()
-            ids[:min(n_shared, nb)] = TRASH_BLOCK
-            self._cache = self._insert_paged(self._cache, pcache,
-                                             jnp.asarray(ids))
-        else:
-            self._cache = self._insert(self._cache, pcache, jnp.int32(slot))
-        self._keys = self._keys.at[slot].set(key)
-        self._tokens[slot] = int(first[0])
-        out = self.sched.record(slot, int(first[0]))
-        if self.sched.slots[slot] is None:      # finished (or preempted)
-            self._tokens[slot] = scfg.pad_id    # at the first token
-        return out
 
 
 # retained name: the pre-continuous-batching engine class

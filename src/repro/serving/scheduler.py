@@ -2,9 +2,21 @@
 
 The decode batch is a fixed array of ``n_slots`` rows.  Each slot
 independently tracks which request occupies it and the row's cache position,
-so rows at different sequence depths coexist in a single jitted decode step —
-the engine passes a per-row int32 index vector down to the attention cache
-update (nn/attention.py:Attention.decode).
+so rows at different sequence depths coexist in a single jitted step — the
+engine passes a per-row int32 index vector down to the attention cache
+update (nn/attention.py:Attention.decode / decode_chunk).
+
+**Chunked, interleaved prefill** (Sarathi-style piggybacking): admission no
+longer prefills.  ``admit()`` only assigns a slot (and blocks) and parks the
+not-yet-prefilled tokens in ``pending[slot]``; every engine step then calls
+``next_chunks()`` to plan up to ``prefill_chunk`` prompt tokens per
+prefilling slot, runs one fused step that advances those chunks *and* one
+decode token for every decoding slot, and reports progress back through
+``advance_prefill()``.  ``positions[slot]`` is the row's next cache write:
+the resident-token count while prefilling, ``prompt_len + generated - 1``
+once decoding.  ``prefill_remaining()`` exposes the per-slot backlog.
+``prefill_chunk == 0`` plans the whole remaining prompt as one chunk — the
+stop-the-world admission-prefill semantics, kept as the parity reference.
 
 Cache layouts (engine-selected):
 
@@ -12,38 +24,48 @@ Cache layouts (engine-selected):
   ``max_len``; the slot index is the cache row.
 * **paged** — the scheduler additionally owns a :class:`~repro.serving.paged.
   BlockAllocator` and a per-slot int32 block table.  Admission allocates
-  enough blocks to cover the prompt plus the first decode write and *waits on
-  blocks as well as slots* (strict FIFO: a blocked queue head is not
-  overtaken); ``record`` grows the slot one block at a time as the write
-  position advances; finishing frees the blocks.  If the pool is exhausted
-  mid-decode, the slot is **preempted**: its blocks are freed and the request
-  returns to the front of the queue, to be re-admitted later by re-prefilling
-  prompt + generated-so-far (vLLM-style recompute preemption — greedy decoding
-  resumes token-for-token; stochastic requests restart their PRNG stream).
+  enough blocks to cover the *first chunk* (plus the next decode write when
+  that chunk completes the prompt) and *waits on blocks as well as slots*
+  (strict FIFO: a blocked queue head is not overtaken); ``next_chunks`` grows
+  the allocation chunk-by-chunk and ``record`` one block at a time as decode
+  advances; finishing frees the blocks.  If the pool is exhausted mid-flight
+  — growing a decode row *or* a half-prefilled chunk — the slot is
+  **preempted**: its blocks are freed and the request returns to the front of
+  the queue, to be re-admitted later by re-prefilling prompt +
+  generated-so-far (vLLM-style recompute preemption — greedy decoding resumes
+  token-for-token; stochastic requests restart their PRNG stream).
 
 Prefix sharing (paged + :class:`~repro.serving.prefix_cache.
 RadixPrefixCache`): admission is match-then-allocate — the trie is walked
-with the request's tokens, every fully-matched block is pinned with
-``share()`` and mapped into the head of the slot's block table, and only the
-unmatched remainder is freshly allocated; ``prefix_lens[slot]`` tells the
-engine where its suffix-only prefill starts.  Right after admission (and
-again on every exit path — finish *and* preemption) the request's fully
-written blocks are published into the trie, so identical prompts admitted
-later (or the same request resuming after preemption) skip that prefill
-work.  ``_free`` thus *releases* blocks rather than destroying them: the
+with the request's tokens, matched blocks are pinned with ``share()`` and
+mapped into the head of the slot's block table, and only the remainder is
+freshly allocated; ``prefix_lens[slot]`` records where prefill resumes.
+Because chunk writes always land in owned blocks, the match is capped at the
+last block boundary *strictly below* the final token — a block-aligned full
+match re-runs its last block instead of remapping a discarded write to the
+trash block.  Publication is **as-blocks-fill**: every ``advance_prefill``
+(and every exit path — finish *and* preemption) publishes the request's
+fully written blocks into the trie, so identical prompts admitted while a
+long prompt is still mid-prefill share everything filled so far, and a
+preempted half-prefilled slot resumes by re-matching its own published
+blocks.  ``_free`` thus *releases* blocks rather than destroying them: the
 allocator drops the request's references and anything the trie also holds
 stays resident, cached-but-unreferenced, until LRU eviction reclaims it.
 
 Lifecycle per engine step:
-  1. ``admit()`` moves FIFO-waiting requests into free slots (one prefill per
-     admission, bucketed by prompt length to bound recompilation). Prompts
-     that cannot fit (len(prompt) + 1 > max_len, or more blocks than the
-     whole pool) finish immediately as ABORTED.
-  2. the engine runs one decode step over all slots; for every *active* slot
-     it calls ``record(slot, token)``, which appends the token, applies the
-     request's stop conditions (EOS unless ignore_eos, max_tokens counted as
-     generated tokens, per-slot cache capacity) and frees the slot when the
-     request finishes — the next ``admit()`` immediately refills it.
+  1. ``admit()`` moves FIFO-waiting requests into free slots. Prompts that
+     cannot fit (len(prompt) + 1 > max_len, or more blocks than the whole
+     pool) finish immediately as ABORTED.
+  2. ``next_chunks()`` plans this step's chunk per prefilling slot (growing
+     or preempting as the pool allows).
+  3. the engine runs one fused chunk+decode step; for every chunked slot it
+     calls ``advance_prefill(slot, n)``, and for every slot that produced a
+     token (decoding slots, and prefilling slots whose chunk exhausted the
+     prompt — their first sampled token) it calls ``record(slot, token)``,
+     which appends the token, applies the request's stop conditions (EOS
+     unless ignore_eos, max_tokens counted as generated tokens, per-slot
+     cache capacity) and frees the slot when the request finishes — the next
+     ``admit()`` immediately refills it.
 
 The scheduler owns the per-slot sampling-parameter vectors (temperature,
 top-p) that the engine feeds the jitted sampler; idle rows decode a pad token
@@ -54,7 +76,7 @@ paged: their block table points every entry at the trash block).
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -85,13 +107,20 @@ class Scheduler:
     def __init__(self, n_slots: int, max_len: int, eos_id: int,
                  bucket_min: int = 8,
                  allocator: Optional[BlockAllocator] = None,
-                 prefix_cache: Optional[RadixPrefixCache] = None):
+                 prefix_cache: Optional[RadixPrefixCache] = None,
+                 prefill_chunk: int = 0):
         if prefix_cache is not None and allocator is None:
             raise ValueError("prefix_cache requires the paged allocator")
+        if prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk={prefill_chunk} must be >= 0 "
+                             "(0 = whole-prompt chunks)")
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
+        # smallest whole-prompt chunk bucket (prefill_chunk == 0 mode);
+        # chunk-width bucketing itself happens engine-side
         self.bucket_min = bucket_min
+        self.prefill_chunk = prefill_chunk
         self.waiting: Deque[GenerationRequest] = deque()
         # uid -> arrival sequence number; preemption reinserts by arrival
         # order so an older request is never overtaken (strict FIFO even
@@ -110,13 +139,17 @@ class Scheduler:
         # runtime counters (surfaced via Engine.stats())
         self.admissions = 0
         self.preemptions = 0
+        # per-slot not-yet-prefilled tokens (prompt suffix, plus regenerated
+        # outputs on preemption resume); nonempty = the slot is *prefilling*
+        # and next_chunks() feeds it, empty = the slot is decoding
+        self.pending: List[List[int]] = [[] for _ in range(n_slots)]
         # -- paged state (allocator is None on the contiguous path) ----------
         self.allocator = allocator
         self.prefix_cache = prefix_cache
         # per-slot prefill start offset: cache positions [0, prefix_lens[s])
-        # are covered by trie-shared blocks and the engine prefills only the
-        # suffix from there.  shared_counts[s] = leading entries of
-        # block_ids[s] that are shared (read-only) rather than owned.
+        # are covered by trie-shared blocks and prefill starts there.
+        # shared_counts[s] = leading entries of block_ids[s] that are shared
+        # (read-only) rather than owned.
         self.prefix_lens = np.zeros((n_slots,), np.int32)
         self.shared_counts = [0] * n_slots
         if allocator is not None:
@@ -142,41 +175,50 @@ class Scheduler:
     def active_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is not None]
 
-    def bucket(self, prompt_len: int) -> int:
-        return bucket_length(prompt_len, self.bucket_min, self.max_len)
+    def prefill_remaining(self, slot: int) -> int:
+        """Prompt tokens the slot still has to prefill (0 once decoding)."""
+        return len(self.pending[slot])
 
     def admit(self) -> Tuple[List[Tuple[int, GenerationRequest]],
                              List[StepOutput]]:
-        """Fill free slots from the waiting queue (FIFO).  Returns the newly
-        admitted (slot, request) pairs plus StepOutputs for any request
-        rejected up front (empty prompt, prompt too long for the per-slot
-        cache, or needing more blocks than the whole pool holds).  On the
-        paged path a queue head that merely has to *wait* for blocks stays
-        queued and is not overtaken (strict FIFO, no starvation).
+        """Fill free slots from the waiting queue (FIFO).  Admission does
+        **not** prefill: the request's unprefilled tokens are parked in
+        ``pending[slot]`` and ``next_chunks()`` feeds them to the fused step
+        chunk by chunk.  Returns the newly admitted (slot, request) pairs
+        plus StepOutputs for any request rejected up front (empty prompt,
+        prompt too long for the per-slot cache, or needing more blocks than
+        the whole pool holds — checked against the *full* requirement so a
+        never-fitting prompt aborts instead of thrashing preempt/resume).
+        On the paged path only the first chunk's blocks are allocated here;
+        a queue head that merely has to *wait* for them stays queued and is
+        not overtaken (strict FIFO, no starvation).
 
         With a prefix cache, admission is match-then-allocate: trie-matched
         blocks are pinned (``share()``) and mapped into the head of the block
-        table, fresh blocks are allocated only for the remainder, and the
-        fully-covered prefix length lands in ``prefix_lens[slot]`` so the
-        engine prefills just the suffix."""
+        table, fresh blocks are allocated only for the first chunk of the
+        remainder, and the covered prefix length lands in
+        ``prefix_lens[slot]`` where prefill resumes.  The match is capped at
+        the last block boundary strictly below the final token, so the first
+        chunk (which seeds the first sampled token's logits) always writes
+        owned blocks — a block-aligned full match re-runs its last block."""
         admitted: List[Tuple[int, GenerationRequest]] = []
         rejected: List[StepOutput] = []
         free = [i for i, r in enumerate(self.slots) if r is None]
         while free and self.waiting:
             req = self.waiting[0]
             total = total_len(req)
-            # cache positions the slot must hold right away: the prompt (plus
+            # positions the request will eventually hold: the prompt (plus
             # any regenerated tokens) and the next decode write — except that
             # positions >= max_len are never written (LENGTH fires first), so
             # a resumed request sitting exactly at capacity needs no extra
             # block for a write that will never happen
-            cover = min(total + 1, self.max_len)
+            full_cover = min(total + 1, self.max_len)
             alloc = self.allocator
             too_long = (total + 1 > self.max_len if req.num_generated == 0
                         else total > self.max_len)
             if not req.prompt or too_long or (
                     alloc is not None
-                    and alloc.blocks_for(cover) > alloc.allocatable):
+                    and alloc.blocks_for(full_cover) > alloc.allocatable):
                 self.waiting.popleft()
                 self._arrival.pop(req.uid, None)
                 req.finish_reason = FinishReason.ABORTED
@@ -186,15 +228,22 @@ class Scheduler:
                 continue
             ids: List[int] = []
             shared: List[int] = []
+            start = 0
             tokens = list(req.prompt) + list(req.output_tokens)
             if alloc is not None:
                 if self.prefix_cache is not None:
                     # pin matched blocks *before* alloc(): its reclaim hook
                     # may LRU-evict, and a pinned block (refcount >= 2) is
-                    # never an eviction victim
-                    shared = self.prefix_cache.match(tokens)
+                    # never an eviction victim.  Cap the match so at least
+                    # the block holding the final token is re-prefilled —
+                    # chunk writes then never land in a shared block.
+                    matched = self.prefix_cache.match(tokens)
+                    n_used = min(len(matched), (total - 1) // alloc.block_size)
+                    shared = matched[:n_used]
                     for b in shared:
                         alloc.share(b)
+                    start = len(shared) * alloc.block_size
+                cover = self._chunk_cover(start, total)
                 got = alloc.alloc(alloc.blocks_for(cover) - len(shared))
                 if got is None:
                     if shared:         # un-pin; the trie keeps them cached
@@ -204,7 +253,8 @@ class Scheduler:
             self.waiting.popleft()
             slot = free.pop(0)
             self.slots[slot] = req
-            self.positions[slot] = total
+            self.positions[slot] = start       # next fill position
+            self.pending[slot] = tokens[start:]
             self.temperatures[slot] = req.params.temperature
             self.top_ps[slot] = req.params.top_p
             if alloc is not None:
@@ -212,23 +262,70 @@ class Scheduler:
                 self.block_tables[slot, :] = TRASH_BLOCK
                 self.block_tables[slot, :len(ids)] = ids
                 self.shared_counts[slot] = len(shared)
-                # the engine always recomputes at least the last position
-                # (its logits seed the first sampled token); a fully-matched
-                # prompt therefore starts the suffix at total - 1 and the
-                # recomputed write is discarded to the trash block
-                self.prefix_lens[slot] = min(
-                    len(shared) * alloc.block_size, total - 1)
+                self.prefix_lens[slot] = start
                 if self.prefix_cache is not None:
                     self.prefix_cache.record_admission(len(shared))
-                    # publish the prompt's full blocks now: the engine
-                    # prefills them before this step decodes, so identical
-                    # prompts admitted from here on share instead of
-                    # re-prefilling
-                    self.prefix_cache.insert(tokens, ids[:total
-                                                         // alloc.block_size])
             admitted.append((slot, req))
             self.admissions += 1
         return admitted, rejected
+
+    def _chunk_cover(self, start: int, total: int) -> int:
+        """Positions the slot's allocation must cover to run its next chunk
+        from ``start``: the chunk's writes, plus the next decode write when
+        the chunk completes the prompt (positions >= max_len are never
+        written, so the capacity edge needs no phantom block)."""
+        suffix = total - start
+        n = suffix if self.prefill_chunk <= 0 else min(self.prefill_chunk,
+                                                       suffix)
+        return min(start + n + (1 if n == suffix else 0), self.max_len)
+
+    def next_chunks(self) -> Dict[int, int]:
+        """Plan this step's prefill work: {slot: chunk length} for every
+        prefilling slot, each up to ``prefill_chunk`` tokens (0 = the whole
+        remainder).  On the paged path the slot's allocation is grown to
+        cover the chunk first; if the pool cannot (even after prefix-cache
+        eviction), the half-prefilled slot is preempted — its published
+        blocks let the resume skip the recompute when the cache is on."""
+        plan: Dict[int, int] = {}
+        for slot, req in enumerate(self.slots):
+            if req is None or not self.pending[slot]:
+                continue
+            remaining = len(self.pending[slot])
+            n = remaining if self.prefill_chunk <= 0 else min(
+                self.prefill_chunk, remaining)
+            if self.allocator is not None:
+                start = int(self.positions[slot])
+                need = self.allocator.blocks_for(
+                    self._chunk_cover(start, start + remaining))
+                if not self._grow_to(slot, need):
+                    self._preempt(slot)
+                    continue
+            plan[slot] = n
+        return plan
+
+    def advance_prefill(self, slot: int, n: int) -> bool:
+        """Mark ``n`` chunk tokens as filled (the fused step wrote their KV).
+        Publishes the slot's newly completed blocks into the prefix cache —
+        publish-as-blocks-fill, so identical prompts arriving while a long
+        prompt is mid-prefill share everything resident so far (chunks that
+        complete no new block skip the publish walk entirely, keeping the
+        per-step host cost off the hot path; ``_free`` republishes the final
+        state on every exit anyway).  Returns True when the prompt is
+        exhausted: the step's sampled token for this row is the request's
+        first output and the engine records it."""
+        req = self.slots[slot]
+        assert req is not None, f"advance_prefill() on idle slot {slot}"
+        filled_before = int(self.positions[slot])
+        del self.pending[slot][:n]
+        self.positions[slot] += n
+        if self.prefix_cache is not None:
+            bs = self.allocator.block_size
+            filled = int(self.positions[slot])
+            if filled // bs > filled_before // bs:
+                tokens = (list(req.prompt) + list(req.output_tokens))[:filled]
+                self.prefix_cache.insert(tokens,
+                                         self.block_ids[slot][:filled // bs])
+        return not self.pending[slot]
 
     def _free(self, slot: int) -> None:
         """Release the slot.  With a prefix cache the request's fully written
@@ -247,6 +344,7 @@ class Scheduler:
             self.block_tables[slot, :] = TRASH_BLOCK
             self.shared_counts[slot] = 0
         self.slots[slot] = None
+        self.pending[slot] = []
         self.positions[slot] = self.max_len - 1
         self.prefix_lens[slot] = 0
         self.temperatures[slot] = 0.0
@@ -294,10 +392,14 @@ class Scheduler:
         return out
 
     def _grow(self, slot: int) -> bool:
-        """Ensure the slot's allocation covers its next write position.
+        """Ensure the slot's allocation covers its next write position."""
+        return self._grow_to(
+            slot, int(self.positions[slot]) // self.allocator.block_size + 1)
+
+    def _grow_to(self, slot: int, need: int) -> bool:
+        """Grow the slot's allocation to ``need`` blocks, one at a time.
         ``alloc()`` internally tries prefix-cache eviction before giving up,
         so growth preempts only when every block is pinned by live work."""
-        need = int(self.positions[slot]) // self.allocator.block_size + 1
         while len(self.block_ids[slot]) < need:
             got = self.allocator.alloc(1)
             if got is None:

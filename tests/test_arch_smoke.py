@@ -92,9 +92,12 @@ class TestArchSmoke:
 class TestDecodeMatchesForward:
     """KV-cached decode must reproduce the full forward, per family."""
 
-    @pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-780m",
-                                      "granite-moe-1b-a400m",
-                                      "jamba-1.5-large-398b"])
+    @pytest.mark.parametrize("arch", [
+        "qwen2.5-3b", "mamba2-780m", "granite-moe-1b-a400m",
+        # the hybrid is by far the slowest decode-parity loop (~1 min on
+        # CPU); slow-marked so the CI gate stays under budget — the full
+        # tier-1 run (no -m filter) still covers it
+        pytest.param("jamba-1.5-large-398b", marks=pytest.mark.slow)])
     def test_incremental_equals_full(self, arch):
         cfg = get_config(arch).reduced()
         # capacity_factor high enough that the full forward drops no tokens

@@ -1,0 +1,321 @@
+"""Chunked interleaved prefill: fuzzed greedy-parity against the
+stop-the-world whole-prompt baseline.
+
+ISSUE acceptance: seeded random arrival patterns — bursts, mid-flight
+admissions, shared system prefixes, pools tight enough to preempt
+half-prefilled slots — must produce token-for-token identical greedy outputs
+whether prefill runs as interleaved chunks (fused kernel or gather impl,
+prefix cache on or off) or as the legacy whole-prompt sequential scan
+(``prefill_chunk=0``).  Each seed derives a full schedule deterministically
+(property-style fuzzing without a hypothesis dependency — the stub in
+tests/_hypothesis_stub.py covers only test_quant's strategies).
+
+Plus unit coverage of the scheduler's chunk planner: pending bookkeeping,
+chunk budgeting, allocation growth, publish-as-blocks-fill, and preemption
+of a half-prefilled slot.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import build_model, get_config
+from repro.serving.api import GenerationRequest, SamplingParams
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.paged import BlockAllocator
+from repro.serving.prefix_cache import RadixPrefixCache
+from repro.serving.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = get_config("qwen1.5-0.5b").reduced(layers=2).replace(
+        compute_dtype="float32", param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+SYS = [7, 3, 9, 1, 4, 4, 2, 8]            # shared 8-token system prefix
+
+
+def make_schedule(seed: int):
+    """Seed -> {step: [prompt, ...]}: bursts (several arrivals in one step)
+    and stragglers landing while earlier requests are mid-prefill/decode."""
+    rng = np.random.default_rng(seed)
+    n_req = int(rng.integers(5, 8))
+    schedule = {}
+    step = 0
+    for _ in range(n_req):
+        step += int(rng.choice([0, 0, 1, 3]))       # bursty gaps
+        tail = rng.integers(0, 64, int(rng.integers(1, 9))).tolist()
+        prompt = (SYS + tail) if rng.random() < 0.4 else tail
+        schedule.setdefault(step, []).append(prompt)
+    return schedule
+
+
+def drive(cfg, params, scfg, schedule, sp):
+    """Step the engine, submitting each burst at its scheduled step index;
+    returns (engine, {uid: output_tokens})."""
+    eng = Engine(cfg, params, scfg)
+    reqs = {}
+    step = 0
+    last = max(schedule)
+    while eng.has_pending() or step <= last:
+        for prompt in schedule.get(step, []):
+            r = eng.submit(prompt, sp)
+            reqs[r.uid] = r
+        eng.step()
+        step += 1
+        assert step < 3000, "serving loop made no progress"
+    return eng, {uid: r.output_tokens for uid, r in reqs.items()}
+
+
+class TestFuzzChunkedParity:
+    SP = SamplingParams(max_tokens=6, ignore_eos=True)
+
+    def _ref(self, cfg, params, schedule):
+        """The old whole-prompt path: stop-the-world sequential scan."""
+        _, ref = drive(cfg, params,
+                       ServeConfig(max_batch=3, max_len=24, paged=True,
+                                   kv_block_size=4, prefill_chunk=0),
+                       schedule, self.SP)
+        return ref
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_chunked_matches_whole_prompt(self, tiny_lm, seed):
+        """Gather impl, prefix cache off and on (fused), small chunks."""
+        cfg, _, params = tiny_lm
+        schedule = make_schedule(seed)
+        ref = self._ref(cfg, params, schedule)
+        for kw in (dict(prefill_chunk=3),
+                   dict(prefill_chunk=3, attn_impl="fused",
+                        prefix_cache=True)):
+            _, got = drive(cfg, params,
+                           ServeConfig(max_batch=3, max_len=24, paged=True,
+                                       kv_block_size=4, **kw),
+                           schedule, self.SP)
+            assert got == ref, f"seed {seed}, config {kw}"
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("seed", [2, 3, 4])
+    def test_chunked_matches_whole_prompt_sweep(self, tiny_lm, seed):
+        """Wider sweep: chunk sizes, fused/gather, prefix cache, and a pool
+        tight enough to preempt half-prefilled slots mid-chunk."""
+        cfg, _, params = tiny_lm
+        schedule = make_schedule(seed)
+        ref = self._ref(cfg, params, schedule)
+        for kw in (dict(prefill_chunk=1),
+                   dict(prefill_chunk=5, attn_impl="fused"),
+                   dict(prefill_chunk=2, prefix_cache=True),
+                   dict(prefill_chunk=3, attn_impl="fused",
+                        prefix_cache=True, num_kv_blocks=13),
+                   dict(prefill_chunk=3, num_kv_blocks=11)):
+            eng, got = drive(cfg, params,
+                             ServeConfig(max_batch=3, max_len=24, paged=True,
+                                         kv_block_size=4, **kw),
+                             schedule, self.SP)
+            assert got == ref, f"seed {seed}, config {kw}"
+            # no leak: at drain every block is free or trie-cached
+            assert eng.allocator.blocks_in_use() == (
+                0 if eng.prefix_cache is None
+                else eng.prefix_cache.cached_unreferenced())
+
+    def test_contiguous_chunked_matches_whole_prompt(self, tiny_lm):
+        """The masked-scan chunk fallback (contiguous cache) interleaves the
+        same way and must match its own whole-prompt baseline."""
+        cfg, _, params = tiny_lm
+        schedule = make_schedule(5)
+        _, ref = drive(cfg, params,
+                       ServeConfig(max_batch=3, max_len=24, paged=False,
+                                   prefill_chunk=0),
+                       schedule, self.SP)
+        _, got = drive(cfg, params,
+                       ServeConfig(max_batch=3, max_len=24, paged=False,
+                                   prefill_chunk=2),
+                       schedule, self.SP)
+        assert got == ref
+
+
+class TestChunkedEngineBehavior:
+    def test_first_token_arrives_after_ceil_chunks_steps(self, tiny_lm):
+        """A lone request's first token lands exactly after
+        ceil(prompt/chunk) steps — chunks advance once per step."""
+        cfg, _, params = tiny_lm
+        eng = Engine(cfg, params,
+                     ServeConfig(max_batch=2, max_len=24, paged=True,
+                                 kv_block_size=4, prefill_chunk=3))
+        r = eng.submit(list(range(1, 8)), SamplingParams(max_tokens=2,
+                                                         ignore_eos=True))
+        outs = eng.step() + eng.step()
+        assert outs == []                      # 7 tokens / chunk 3 -> 3 steps
+        assert eng.sched.prefill_remaining(0) == 1
+        outs = eng.step()
+        assert [o.uid for o in outs] == [r.uid]
+        assert outs[0].index == 0
+        s = eng.stats()
+        assert s.prefill_positions == 7 and s.prefill_chunks == 3
+        assert s.ttft_ms is not None and s.ttft_ms["p50"] > 0
+
+    def test_decode_piggybacks_on_prefilling_slot(self, tiny_lm):
+        """While one slot prefills, a decoding slot keeps emitting a token
+        every step (the Sarathi property: no stop-the-world stall)."""
+        cfg, _, params = tiny_lm
+        eng = Engine(cfg, params,
+                     ServeConfig(max_batch=2, max_len=32, paged=True,
+                                 kv_block_size=4, prefill_chunk=2))
+        sp = SamplingParams(max_tokens=10, ignore_eos=True)
+        ra = eng.submit([1, 2], sp)
+        eng.step()                             # ra prefilled, first token out
+        rb = eng.submit(list(range(3, 13)), sp)   # 10 tokens: 5 chunk steps
+        for _ in range(5):
+            outs = eng.step()
+            # ra decodes every step even while rb chunks
+            assert any(o.uid == ra.uid for o in outs)
+        assert rb.num_generated == 1           # first token just emitted
+        assert eng.stats().prefill_chunks >= 5
+
+    def test_chunked_stats_count_positions_per_chunk(self, tiny_lm):
+        """Per-chunk accounting: a half-prefilled preemption charges only
+        the chunks that ran (not the whole admission), and the re-admission
+        with a prefix cache skips the published progress."""
+        cfg, _, params = tiny_lm
+        eng = Engine(cfg, params,
+                     ServeConfig(max_batch=2, max_len=32, paged=True,
+                                 kv_block_size=4, prefill_chunk=4,
+                                 prefix_cache=True, num_kv_blocks=8))
+        sp = SamplingParams(max_tokens=4, ignore_eos=True)
+        eng.submit(list(range(1, 13)), sp)     # 12 tokens: 3 blocks + growth
+        eng.submit(list(range(21, 33)), sp)    # contends for the 7 blocks
+        for _ in eng.stream():
+            pass
+        s = eng.stats()
+        assert s.preemptions > 0
+        # skipped > 0 iff some published progress was re-matched on resume
+        assert s.prefill_positions + s.prefill_positions_skipped >= 24
+        assert s.prefill_chunks >= 6
+
+
+class TestSchedulerChunkPlanner:
+    def _sched(self, chunk, n_slots=2, max_len=32, num_blocks=17, bs=4,
+               prefix=False):
+        alloc = BlockAllocator(num_blocks, bs)
+        cache = None
+        if prefix:
+            cache = RadixPrefixCache(alloc)
+            alloc.reclaim = cache.evict
+        sc = Scheduler(n_slots, max_len, eos_id=99, allocator=alloc,
+                       prefix_cache=cache, prefill_chunk=chunk)
+        return sc, alloc, cache
+
+    def test_admission_parks_pending_and_allocates_first_chunk(self):
+        sc, alloc, _ = self._sched(chunk=4)
+        sc.submit(GenerationRequest(uid=0, prompt=list(range(10))))
+        sc.admit()
+        # first chunk covers 4 positions = 1 block; nothing prefilled yet
+        assert sc.positions[0] == 0
+        assert sc.pending[0] == list(range(10))
+        assert len(sc.block_ids[0]) == 1
+        assert sc.prefill_remaining(0) == 10
+
+    def test_next_chunks_grows_and_advances(self):
+        sc, alloc, _ = self._sched(chunk=4)
+        sc.submit(GenerationRequest(uid=0, prompt=list(range(10))))
+        sc.admit()
+        assert sc.next_chunks() == {0: 4}
+        assert not sc.advance_prefill(0, 4)
+        assert sc.positions[0] == 4 and len(sc.pending[0]) == 6
+        assert sc.next_chunks() == {0: 4}      # grew to 2 blocks
+        assert len(sc.block_ids[0]) == 2
+        assert not sc.advance_prefill(0, 4)
+        # last chunk: 2 tokens + the next decode write -> 3 blocks
+        assert sc.next_chunks() == {0: 2}
+        assert len(sc.block_ids[0]) == 3
+        assert sc.advance_prefill(0, 2)        # prompt exhausted
+        assert sc.next_chunks() == {}          # now a decoding slot
+        out = sc.record(0, token=5)
+        assert not out.finished and sc.positions[0] == 10
+
+    def test_whole_prompt_mode_plans_single_chunk(self):
+        sc, alloc, _ = self._sched(chunk=0)
+        sc.submit(GenerationRequest(uid=0, prompt=list(range(10))))
+        sc.admit()
+        # whole prompt + next decode write covered up front (legacy shape)
+        assert len(sc.block_ids[0]) == 3
+        assert sc.next_chunks() == {0: 10}
+        assert sc.advance_prefill(0, 10)
+
+    def test_publish_as_blocks_fill(self):
+        """Each chunk publishes its completed blocks — a second identical
+        prompt admitted mid-prefill shares the progress so far."""
+        sc, alloc, cache = self._sched(chunk=4, prefix=True)
+        sc.submit(GenerationRequest(uid=0, prompt=list(range(10))))
+        sc.admit()
+        assert len(cache) == 0                 # nothing published at admit
+        sc.next_chunks()
+        sc.advance_prefill(0, 4)
+        assert len(cache) == 1                 # first full block published
+        sc.next_chunks()
+        sc.advance_prefill(0, 4)
+        assert len(cache) == 2
+        sc.submit(GenerationRequest(uid=1, prompt=list(range(10))))
+        sc.admit()
+        assert sc.shared_counts[1] == 2        # shares the filled prefix
+        assert sc.prefix_lens[1] == 8
+        assert sc.pending[1] == [8, 9]
+
+    def test_preempt_half_prefilled_slot_on_starvation(self):
+        """A chunk that cannot grow preempts the half-prefilled slot; the
+        request requeues with its pending tokens intact and its filled
+        blocks published for the resume."""
+        sc, alloc, cache = self._sched(chunk=4, n_slots=2, max_len=12,
+                                       num_blocks=4, prefix=True)
+        r0 = GenerationRequest(uid=0, prompt=list(range(11)))   # 3 blocks
+        r1 = GenerationRequest(uid=1, prompt=[50, 51, 52])
+        sc.submit(r0)
+        sc.submit(r1)
+        sc.admit()                             # r0: 1 block, r1: 1 block
+        plan = sc.next_chunks()
+        assert plan == {0: 4, 1: 3}
+        sc.advance_prefill(0, 4)               # r0 filled block 0
+        assert sc.advance_prefill(1, 3)        # r1 fully prefilled
+        sc.record(1, token=7)                  # r1 decoding, holds its block
+        plan = sc.next_chunks()                # r0 grows into the last free
+        assert plan == {0: 4}                  # block...
+        sc.advance_prefill(0, 4)               # ...and fills block 1
+        # r0's last chunk needs block 3 of 3; pool is empty, r1's block is
+        # pinned and r0's own published blocks are still referenced by its
+        # table (not evictable) -> preempt the half-prefilled slot
+        plan = sc.next_chunks()
+        assert 0 not in plan
+        assert sc.slots[0] is None and list(sc.waiting) == [r0]
+        assert sc.preemptions == 1
+        assert cache.match(list(range(8))) != []   # progress resumable
+        # once r1's block frees, r0 re-admits and resumes past the match
+        sc._free(1)
+        sc.admit()
+        assert sc.prefix_lens[0] == 8
+        assert sc.pending[0] == list(range(8, 11))
+
+    def test_full_match_reruns_last_block(self):
+        """A block-aligned fully-matched prompt shares all but its last
+        block: chunk writes always land in owned blocks, so the last block
+        is re-prefilled instead of trash-remapping a discarded write."""
+        sc, alloc, cache = self._sched(chunk=4, prefix=True)
+        sc.submit(GenerationRequest(uid=0, prompt=list(range(8))))
+        sc.admit()
+        sc.next_chunks()
+        sc.advance_prefill(0, 4)
+        sc.next_chunks()
+        sc.advance_prefill(0, 4)
+        sc._free(0)                            # both blocks in the trie
+        sc.submit(GenerationRequest(uid=1, prompt=list(range(8))))
+        sc.admit()
+        assert sc.shared_counts[0] == 1        # NOT 2: last block re-runs
+        assert sc.prefix_lens[0] == 4
+        assert sc.pending[0] == [4, 5, 6, 7]
+
+    def test_prefill_chunk_validation(self):
+        with pytest.raises(ValueError, match="prefill_chunk"):
+            Scheduler(2, 16, eos_id=99, prefill_chunk=-1)
+        with pytest.raises(ValueError, match="prefill_chunk"):
+            ServeConfig(prefill_chunk=-4)

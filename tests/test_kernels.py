@@ -9,6 +9,7 @@ from repro.core.distill import attention_relation_loss
 from repro.kernels.bitlinear import ops as bl_ops, ref as bl_ref
 from repro.kernels.bitlinear.kernel import bitlinear_kernel
 from repro.kernels.paged_attention import ops as pa_ops, ref as pa_ref
+from repro.kernels.paged_prefill import ops as pp_ops, ref as pp_ref
 from repro.kernels.relation_kd import ops as rk_ops, ref as rk_ref
 from repro.kernels.relation_kd.kernel import relation_kl_rows_kernel
 from repro.kernels.ssd_scan import ops as ssd_ops
@@ -206,6 +207,135 @@ class TestPagedAttentionDecode:
         fused = pa_ops.decode_kv_bytes(positions, [0, 1, 2], fused=True, **kw)
         dense = pa_ops.decode_kv_bytes(positions, [0, 1, 2], fused=False, **kw)
         assert fused == (1 + 3 + 8 + 1) * 8 * per_tok
+        assert dense == 4 * 8 * 8 * per_tok
+        assert fused < dense
+
+
+def _prefill_case(B, Hq, Hkv, Dh, bs, L, T, starts, lens, softcap=0.0,
+                  trash_rows=(), seed=0):
+    """Build a chunked paged-prefill problem with exclusively-owned blocks
+    per live row covering [0, start + len) and run kernel + ref.
+
+    Returns (kernel outs, ref outs, live row indices)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    n_blocks = 1 + B * L                  # trash block + exclusive blocks
+    k_pool = jax.random.normal(ks[0], (n_blocks, Hkv, bs, Dh), jnp.float32)
+    v_pool = jax.random.normal(ks[1], (n_blocks, Hkv, bs, Dh), jnp.float32)
+    q = jax.random.normal(ks[2], (B, T, Hq, Dh), jnp.float32)
+    kc = jax.random.normal(ks[3], (B, T, Hkv, Dh), jnp.float32)
+    vc = jax.random.normal(ks[4], (B, T, Hkv, Dh), jnp.float32)
+    bt = np.zeros((B, L), np.int32)       # unallocated entries -> trash (0)
+    nxt = 1
+    for b in range(B):
+        if b in trash_rows:
+            continue
+        last = min((starts[b] + lens[b] - 1) // bs, L - 1)
+        for j in range(last + 1):
+            bt[b, j] = nxt
+            nxt += 1
+    start = jnp.asarray(starts, jnp.int32)
+    ln = jnp.asarray(lens, jnp.int32)
+    bt = jnp.asarray(bt)
+    got = pp_ops.paged_prefill_chunk(q, kc, vc, k_pool, v_pool, bt, start,
+                                     ln, softcap=softcap, interpret=True)
+    g = Hq // Hkv
+    qg = (q.reshape(B, T, Hkv, g, Dh).transpose(0, 2, 1, 3, 4)
+          .reshape(B, Hkv, T * g, Dh))
+    want = pp_ref.paged_prefill_chunk_ref(
+        qg, kc.transpose(0, 2, 1, 3), vc.transpose(0, 2, 1, 3), k_pool,
+        v_pool, bt, start, ln, 1.0 / (Dh ** 0.5), softcap)
+    live = [b for b in range(B) if b not in trash_rows]
+    return got, want, live
+
+
+def _assert_prefill_parity(got, want, live, lens):
+    o_k, kp_k, vp_k = got
+    o_r, kp_r, vp_r = want
+    o_k = np.asarray(o_k)                       # [B, T, Hq, Dh]
+    B, T, Hq, Dh = o_k.shape
+    Hkv = np.asarray(kp_r).shape[1]
+    g = Hq // Hkv
+    o_r = (np.asarray(o_r).reshape(B, Hkv, T, g, Dh)
+           .transpose(0, 2, 1, 3, 4).reshape(B, T, Hq, Dh))
+    # ctx parity on every valid chunk position of every live row; pad rows
+    # (j >= lens) are unnormalized garbage both sides discard
+    for b in live:
+        np.testing.assert_allclose(o_k[b, :lens[b]], o_r[b, :lens[b]],
+                                   rtol=2e-5, atol=2e-5)
+    # scatter parity must be exact on every owned block; the trash block
+    # (id 0) is excluded — colliding pad/idle writes land in unspecified
+    # order there, and nothing ever attends it
+    np.testing.assert_array_equal(np.asarray(kp_k)[1:], np.asarray(kp_r)[1:])
+    np.testing.assert_array_equal(np.asarray(vp_k)[1:], np.asarray(vp_r)[1:])
+
+
+class TestPagedPrefillChunk:
+    @pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (4, 1)])
+    def test_gqa_ratios_mixed_progress(self, hq, hkv):
+        """Rows at different prefill depths: cold start (no resident KV),
+        mid-prompt, and a decode row (lens == 1) in one grid."""
+        B, Dh, bs, L, T = 3, 32, 4, 6, 8
+        got, want, live = _prefill_case(B, hq, hkv, Dh, bs, L, T,
+                                        [0, 9, 13], [8, 5, 1])
+        _assert_prefill_parity(got, want, live, [8, 5, 1])
+
+    @pytest.mark.parametrize("starts,lens", [([3, 4], [4, 4]), ([7, 2], [2, 3]),
+                                             ([0, 5], [4, 2])])
+    def test_chunk_straddles_block_boundaries(self, starts, lens):
+        """Chunks that start mid-block, end mid-block, or span two blocks:
+        the splice must keep resident rows of shared boundary blocks."""
+        B, Hq, Hkv, Dh, bs, L, T = 2, 4, 2, 32, 4, 4, 4
+        got, want, live = _prefill_case(B, Hq, Hkv, Dh, bs, L, T, starts,
+                                        lens)
+        _assert_prefill_parity(got, want, live, lens)
+
+    def test_padded_chunk_rows_never_written(self):
+        """lens < T: pad positions produce no pool writes (owned blocks hold
+        exactly lens new rows) and valid rows are unaffected."""
+        B, Hq, Hkv, Dh, bs, L, T = 2, 4, 2, 32, 4, 4, 8
+        got, want, live = _prefill_case(B, Hq, Hkv, Dh, bs, L, T, [0, 6],
+                                        [3, 5])
+        _assert_prefill_parity(got, want, live, [3, 5])
+
+    def test_decode_equivalence_t1(self):
+        """T=1 chunks are decode steps: parity with the decode kernel's
+        semantics through the same ref."""
+        B, Hq, Hkv, Dh, bs, L, T = 2, 4, 2, 32, 4, 3, 1
+        got, want, live = _prefill_case(B, Hq, Hkv, Dh, bs, L, T, [5, 8],
+                                        [1, 1])
+        _assert_prefill_parity(got, want, live, [1, 1])
+
+    def test_idle_trash_block_rows_are_finite(self):
+        """Idle rows (table all trash, parked start) stream garbage without
+        poisoning live rows or producing non-finite output."""
+        B, Hq, Hkv, Dh, bs, L, T = 3, 4, 2, 32, 4, 4, 4
+        got, want, live = _prefill_case(B, Hq, Hkv, Dh, bs, L, T,
+                                        [2, 11, 11], [4, 1, 1],
+                                        trash_rows=(2,))
+        _assert_prefill_parity(got, want, live, [4, 1, 1])
+        assert np.isfinite(np.asarray(got[0])[live]).all()
+
+    def test_logit_softcap(self):
+        B, Hq, Hkv, Dh, bs, L, T = 2, 4, 2, 32, 4, 4, 4
+        got, want, live = _prefill_case(B, Hq, Hkv, Dh, bs, L, T, [5, 0],
+                                        [4, 4], softcap=30.0)
+        _assert_prefill_parity(got, want, live, [4, 4])
+
+    def test_kv_bytes_model_resident_vs_dense(self):
+        """The traffic model the benchmark/roofline report: fused streams
+        blocks up to each chunked row's last touched block (+1 trash fetch
+        per idle row), gather reads the dense window for every slot."""
+        kw = dict(table_width=8, block_size=8, n_kv_heads=2, head_dim=32,
+                  n_layers=2, itemsize=4)
+        per_tok = 2 * 2 * 32 * 4 * 2
+        starts = [3, 24, 40, 63]             # slot 3 idle (parked)
+        lens = [5, 8, 1, 1]                  # two chunks + one decode row
+        fused = pp_ops.prefill_kv_bytes(starts, lens, [0, 1, 2], fused=True,
+                                        **kw)
+        dense = pp_ops.prefill_kv_bytes(starts, lens, [0, 1, 2], fused=False,
+                                        **kw)
+        # rows stream blocks 0..(start+len-1)//bs: 1 + 4 + 6, plus 1 trash
+        assert fused == (1 + 4 + 6 + 1) * 8 * per_tok
         assert dense == 4 * 8 * 8 * per_tok
         assert fused < dense
 

@@ -232,10 +232,21 @@ class TestSchedulerPrefixSharing:
         with pytest.raises(ValueError, match="prefix_cache"):
             Scheduler(2, 16, eos_id=99, prefix_cache=RadixPrefixCache(alloc))
 
-    def test_admission_publishes_prompt_blocks(self):
+    def _prefill(self, sc, slot):
+        """Drain the slot's pending prompt through the chunk planner (the
+        engine's fused step stands in for the actual KV writes)."""
+        while sc.prefill_remaining(slot):
+            n = sc.next_chunks()[slot]
+            sc.advance_prefill(slot, n)
+
+    def test_chunks_publish_prompt_blocks_as_they_fill(self):
+        """Publication is as-blocks-fill: admission publishes nothing, each
+        chunk publishes the blocks it completed."""
         sc, alloc, cache = self._sched()
         sc.submit(GenerationRequest(uid=0, prompt=list(range(10))))
         sc.admit()
+        assert len(cache) == 0                  # nothing published at admit
+        self._prefill(sc, 0)
         # 2 full blocks published, pinned by slot + trie
         assert len(cache) == 2
         for b in sc.block_ids[0][:2]:
@@ -243,14 +254,17 @@ class TestSchedulerPrefixSharing:
         assert sc.prefix_lens[0] == 0 and sc.shared_counts[0] == 0
 
     def test_second_identical_prompt_shares(self):
-        sc, alloc, cache = self._sched()
+        sc, alloc, cache = self._sched(n_slots=3)
         r0 = GenerationRequest(uid=0, prompt=list(range(10)))
         r1 = GenerationRequest(uid=1, prompt=list(range(10)))
         sc.submit(r0)
+        sc.admit()
+        self._prefill(sc, 0)                    # r0's full blocks published
         sc.submit(r1)
         sc.admit()
         assert sc.shared_counts[1] == 2
         assert sc.prefix_lens[1] == 8
+        assert sc.pending[1] == [8, 9]          # prefill resumes past them
         assert sc.block_ids[1][:2] == sc.block_ids[0][:2]   # same pool blocks
         shared = sc.block_ids[0][0]
         assert alloc.refcounts[shared] == 3     # two slots + trie
@@ -258,23 +272,28 @@ class TestSchedulerPrefixSharing:
     def test_divergent_tail_gets_own_blocks(self):
         sc, alloc, cache = self._sched()
         sc.submit(GenerationRequest(uid=0, prompt=[1, 2, 3, 4, 5, 6, 7, 8]))
+        sc.admit()
+        self._prefill(sc, 0)
+        sc._free(0)
         sc.submit(GenerationRequest(uid=1, prompt=[1, 2, 3, 4, 9, 9, 9, 9]))
         sc.admit()
-        assert sc.shared_counts[1] == 1
-        assert sc.block_ids[1][0] == sc.block_ids[0][0]
-        assert sc.block_ids[1][1] != sc.block_ids[0][1]
+        assert sc.shared_counts[0] == 1         # first block re-used
+        assert sc.prefix_lens[0] == 4
+        assert sc.pending[0] == [9, 9, 9, 9]    # divergent tail re-prefills
 
-    def test_fully_matched_prompt_caps_prefix_at_total_minus_one(self):
-        """The engine always recomputes the last position for its logits;
-        a block-aligned full match must leave the suffix >= 1."""
+    def test_fully_matched_prompt_reruns_last_block(self):
+        """Chunk writes always land in owned blocks (the first chunk seeds
+        the first token's logits), so a block-aligned full match shares all
+        but the final block and re-prefills that one."""
         sc, alloc, cache = self._sched()
         sc.submit(GenerationRequest(uid=0, prompt=list(range(8))))
         sc.admit()
+        self._prefill(sc, 0)
         sc._free(0)
         sc.submit(GenerationRequest(uid=1, prompt=list(range(8))))
         sc.admit()                              # re-admits into free slot 0
-        assert sc.shared_counts[0] == 2         # both blocks shared (reads)
-        assert sc.prefix_lens[0] == 7           # but suffix keeps 1 position
+        assert sc.shared_counts[0] == 1         # last block NOT shared
+        assert sc.prefix_lens[0] == 4           # suffix re-runs block 2
 
     def test_finish_releases_blocks_to_cache_not_free_list(self):
         sc, alloc, cache = self._sched()
@@ -382,9 +401,11 @@ class TestEnginePrefixParity:
         assert s.prefix_cache["hits"] >= 3       # SYS_A x2 repeats, SYS_B x1
         assert s0.prefix_cache is None
 
+    @pytest.mark.slow
     def test_parity_under_eviction_pressure(self, small_lm):
         """A pool too small to keep every prefix resident forces LRU
-        eviction; outputs must not change."""
+        eviction; outputs must not change.  (slow: the CI gate keeps
+        test_parity_and_strictly_fewer_prefill_positions as its canary.)"""
         cfg, _, params = small_lm
         _, ref = self._run(cfg, params, False)
         eng, got = self._run(cfg, params, True, num_kv_blocks=13)
@@ -394,6 +415,7 @@ class TestEnginePrefixParity:
         assert eng.allocator.blocks_in_use() == \
             eng.prefix_cache.cached_unreferenced()
 
+    @pytest.mark.slow
     def test_parity_under_preemption(self, small_lm):
         """Tight pool: admission waits + recompute preemption + prefix
         sharing all interact; greedy outputs must still match."""
@@ -419,9 +441,10 @@ class TestEnginePrefixParity:
         assert eng.stats().preemptions > 0
 
     def test_full_match_block_aligned_prompt(self, small_lm):
-        """A block-aligned prompt admitted twice fully matches; the engine
-        recomputes exactly one position (for the first-token logits) and its
-        discarded write must not corrupt the shared block."""
+        """A block-aligned prompt admitted twice fully matches up to its
+        last block; that block re-prefills (chunk writes always land in
+        owned blocks — the re-run seeds the first-token logits) and the
+        shared blocks must stay uncorrupted."""
         cfg, _, params = small_lm
         sp = SamplingParams(max_tokens=6, ignore_eos=True)
 
@@ -442,8 +465,9 @@ class TestEnginePrefixParity:
         assert got == ref
         assert got[0] == got[1]                  # same prompt, greedy
         s = eng.stats()
-        assert s.prefill_positions == len(SYS_A) + 1   # 8 cold + 1 recompute
-        assert s.prefill_positions_skipped == len(SYS_A) - 1
+        # 8 cold + the matched prompt's re-run last block
+        assert s.prefill_positions == len(SYS_A) + 4
+        assert s.prefill_positions_skipped == len(SYS_A) - 4
 
     def test_prefix_cache_requires_paged(self, small_lm):
         cfg, _, params = small_lm

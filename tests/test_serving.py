@@ -97,6 +97,10 @@ class TestScheduler:
                                         params=SamplingParams(max_tokens=2)))
         admitted, rejected = sc.admit()
         assert [s for s, _ in admitted] == [0, 1] and not rejected
+        # admission parks the prompt for chunked prefill; nothing filled yet
+        assert sc.positions[0] == 0 and sc.prefill_remaining(0) == 3
+        assert sc.next_chunks() == {0: 3, 1: 3}   # default: whole prompt
+        assert sc.advance_prefill(0, 3)
         assert sc.positions[0] == 3            # next write = prompt_len
         out = sc.record(0, token=7)            # 1st generated token
         assert not out.finished and sc.positions[0] == 3
