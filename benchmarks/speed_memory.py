@@ -654,6 +654,14 @@ if __name__ == "__main__":
         out = serving_decode_bench()
         out["prefix_cache"] = prefix_cache_bench()
         out["chunked_prefill"] = chunked_prefill_bench()
+        # PR-6 front-end benches (async-loop overlap, goodput under
+        # deadlines, closed-loop saturation) merge their own sections
+        from benchmarks.serving_loadgen import (async_overlap_bench,
+                                                goodput_bench,
+                                                saturation_bench)
+        out["async_overlap"] = async_overlap_bench()
+        out["goodput"] = goodput_bench()
+        out["saturation"] = saturation_bench()
         print(json.dumps(out, indent=1))
         print(f"wrote {RESULTS / 'BENCH_serving.json'} "
               f"(+ copy at {REPO_ROOT / 'BENCH_serving.json'})")

@@ -1,16 +1,23 @@
-"""Serving launcher: continuous-batching generation with a (optionally
-packed-ternary) student.
+"""Serving launcher: the async engine behind a JSON-lines TCP endpoint, plus
+a many-client load generator that drives it.
 
-Closed-loop (submit everything, drain):
+Standing server (graceful drain on Ctrl-C; protocol in serving/frontend.py):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
+        --packed --serve --port 8471
+
+Load generator — every request is its own client connection through the TCP
+front-end.  Closed loop (all arrivals at t=0, drain):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
         --packed --requests 8
 
-Open-loop load generator (Poisson arrivals at --arrival-rate req/s, requests
-admitted mid-flight by the scheduler) with per-token streaming output:
+Open loop (Poisson arrivals at --arrival-rate req/s, requests admitted
+mid-flight by the scheduler) with per-token streaming output and per-request
+deadlines:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
-        --requests 16 --arrival-rate 4 --stream
+        --requests 16 --arrival-rate 4 --stream --deadline-ms 2000
 
 Radix prefix cache (serving/prefix_cache.py): --prefix-cache shares the KV
 blocks of repeated prompt prefixes across requests, and --shared-prefixes N
@@ -22,18 +29,23 @@ where admission prefill collapses to the unshared suffix:
         --requests 16 --prefix-cache --shared-prefixes 2 --shared-prefix-len 32
 
 Prefill is chunked and interleaved by default (--prefill-chunk tokens per
-prefilling slot per step, piggybacked on the decode batch); --prefill-chunk 0
+prefilling slot per step, piggybacked on the decode batch; --prefill-budget
+caps the *total* chunk tokens per step across slots); --prefill-chunk 0
 restores the stop-the-world whole-prompt admission prefill for A/B latency
-comparisons.
+comparisons.  --max-queue bounds the waiting queue (overloaded submits are
+rejected immediately — backpressure).
 
 Engine.stats() (admissions, preemptions, chunked-prefill work, block
-occupancy, prefix-cache hits/misses/evictions) plus time-to-first-token
-percentiles are printed at end of run either way.
+occupancy, prefix-cache hits/misses/evictions, cancellations/deadlines,
+host-dispatch overlap) plus TTFT / queue-wait / end-to-end percentiles are
+printed at end of run either way.
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
+from collections import Counter
 
 import jax
 import numpy as np
@@ -42,7 +54,9 @@ from repro.core import quant as Q
 from repro.models import build_model
 from repro.models.base import get_config
 from repro.serving.api import SamplingParams
+from repro.serving.async_engine import AsyncEngine
 from repro.serving.engine import Engine, ServeConfig, convert_to_packed
+from repro.serving.frontend import FrontendServer, ServeClient
 
 
 def build_engine(args) -> Engine:
@@ -62,6 +76,7 @@ def build_engine(args) -> Engine:
                        max_len=prompt_len + args.max_tokens,
                        temperature=args.temperature, top_p=args.top_p,
                        prefill_chunk=args.prefill_chunk,
+                       prefill_budget=args.prefill_budget,
                        # None = auto: paged for attention-only stacks,
                        # contiguous for SSM/hybrid/cross caches
                        paged=False if args.contiguous_kv else None,
@@ -101,20 +116,33 @@ def make_prompt_source(args):
     return lambda: rng.integers(0, 64, args.prompt_len).tolist()
 
 
+def _pct_line(tag: str, d) -> str:
+    return (f"[{tag}] mean {d['mean']:.0f} ms  p50 {d['p50']:.0f} ms  "
+            f"p95 {d['p95']:.0f} ms  p99 {d['p99']:.0f} ms")
+
+
 def print_stats(eng: Engine) -> None:
     s = eng.stats()
     line = (f"[stats] admissions={s.admissions} preemptions={s.preemptions} "
             f"prefill_positions={s.prefill_positions} "
             f"prefill_chunks={s.prefill_chunks} "
-            f"skipped_via_prefix={s.prefill_positions_skipped}")
+            f"skipped_via_prefix={s.prefill_positions_skipped} "
+            f"tokens={s.tokens_generated} queue_depth={s.queue_depth}")
+    if s.cancellations or s.deadline_expirations:
+        line += (f" cancellations={s.cancellations} "
+                 f"deadline_expirations={s.deadline_expirations}")
     if s.blocks_in_use is not None:
         line += f" blocks_in_use={s.blocks_in_use} blocks_free={s.blocks_free}"
     print(line)
-    if s.ttft_ms is not None:
-        print(f"[ttft] mean {s.ttft_ms['mean']:.0f} ms  "
-              f"p50 {s.ttft_ms['p50']:.0f} ms  "
-              f"p95 {s.ttft_ms['p95']:.0f} ms  "
-              f"p99 {s.ttft_ms['p99']:.0f} ms")
+    if s.steps_committed:
+        print(f"[steps] committed={s.steps_committed} "
+              f"overlapped={s.steps_overlapped} "
+              f"({100.0 * s.steps_overlapped / s.steps_committed:.0f}% "
+              "dispatched before the previous sync)")
+    for tag, d in (("ttft", s.ttft_ms), ("queue-wait", s.queue_wait_ms),
+                   ("e2e", s.e2e_latency_ms), ("step-gap", s.step_gap_ms)):
+        if d is not None:
+            print(_pct_line(tag, d))
     if s.prefix_cache is not None:
         pc = s.prefix_cache
         print(f"[prefix-cache] hits={pc['hits']} misses={pc['misses']} "
@@ -124,66 +152,83 @@ def print_stats(eng: Engine) -> None:
               f"(unreferenced {pc['cached_unreferenced_blocks']})")
 
 
-def run_closed_loop(eng: Engine, args) -> None:
-    """Submit every request up front and drain the scheduler."""
+async def run_load(eng: Engine, args) -> None:
+    """Many-client load generator through the TCP front-end: one connection
+    per request, arrivals on a schedule.  ``--arrival-rate 0`` is the closed
+    loop (every arrival at t=0, drain); ``> 0`` draws Poisson inter-arrival
+    gaps (open loop).  Arrival sleeps are exact asyncio timers — the event
+    loop idles precisely until the next arrival instead of busy-polling."""
     draw = make_prompt_source(args)
-    sp = SamplingParams(max_tokens=args.max_tokens,
-                        temperature=args.temperature, top_p=args.top_p)
-    reqs = [eng.submit(draw(), sp) for _ in range(args.requests)]
-    t0 = time.time()
-    for out in eng.stream():
-        if args.stream and out.token >= 0:
-            print(f"  [uid {out.uid} #{out.index}] {out.token}"
-                  + (f"  <{out.finish_reason.value}>" if out.finished else ""))
-    dt = time.time() - t0
-    n_tok = sum(r.num_generated for r in reqs)
-    print(f"{len(reqs)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok/max(dt, 1e-9):.1f} tok/s)")
-    for r in reqs:
-        print(f"  req {r.uid} [{r.finish_reason.value}]: "
-              f"{r.output_tokens[:12]}{'...' if r.num_generated > 12 else ''}")
+    rng = np.random.default_rng(0)
+    if args.arrival_rate > 0:
+        arrivals = np.cumsum(
+            rng.exponential(1.0 / args.arrival_rate, args.requests))
+    else:
+        arrivals = np.zeros(args.requests)
+    prompts = [draw() for _ in range(args.requests)]
+    results = [None] * args.requests
+
+    async with AsyncEngine(eng, max_queue=args.max_queue) as aeng:
+        async with FrontendServer(aeng) as srv:
+            t0 = time.perf_counter()
+
+            async def one_client(i: int) -> None:
+                delay = arrivals[i] - (time.perf_counter() - t0)
+                if delay > 0:
+                    await asyncio.sleep(delay)
+                on_event = None
+                if args.stream:
+                    def on_event(e, i=i):
+                        if e.get("token", -1) >= 0:
+                            print(f"  [uid {e['uid']} #{e['index']}] "
+                                  f"{e['token']}"
+                                  + (f"  <{e['finish_reason']}>"
+                                     if e.get("finished") else ""))
+                async with ServeClient(port=srv.port) as c:
+                    results[i] = await c.request(
+                        prompts[i], max_tokens=args.max_tokens,
+                        temperature=args.temperature, top_p=args.top_p,
+                        deadline_ms=args.deadline_ms, on_event=on_event)
+
+            await asyncio.gather(*(one_client(i)
+                                   for i in range(args.requests)))
+            dt = time.perf_counter() - t0
+
+    n_tok = sum(sum(1 for e in evs if e.get("token", -1) >= 0)
+                for evs in results if evs)
+    reasons = Counter(evs[-1].get("finish_reason") for evs in results if evs)
+    mode = (f"open loop at {args.arrival_rate:.1f} req/s"
+            if args.arrival_rate > 0 else "closed loop")
+    print(f"{mode}: {args.requests} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / max(dt, 1e-9):.1f} tok/s)")
+    print("finish reasons: "
+          + "  ".join(f"{k}={v}" for k, v in sorted(reasons.items())))
+    if args.deadline_ms is not None:
+        met = sum(v for k, v in reasons.items() if k in ("stop", "length"))
+        print(f"goodput: {met}/{args.requests} met the "
+              f"{args.deadline_ms:.0f} ms deadline "
+              f"({met / max(dt, 1e-9):.2f} good req/s)")
     print_stats(eng)
 
 
-def run_open_loop(eng: Engine, args) -> None:
-    """Open-loop load generator: Poisson arrivals at --arrival-rate req/s;
-    the engine keeps stepping and the scheduler admits arrivals mid-flight,
-    which is exactly the regime where continuous batching pays off."""
-    rng = np.random.default_rng(0)
-    draw = make_prompt_source(args)
-    sp = SamplingParams(max_tokens=args.max_tokens,
-                        temperature=args.temperature, top_p=args.top_p)
-    gaps = rng.exponential(1.0 / args.arrival_rate, args.requests)
-    arrivals = np.cumsum(gaps)
-    t0 = time.time()
-    submitted, reqs, submit_ts, finish_ts = 0, [], {}, {}
-    n_tok = 0
-    while submitted < args.requests or eng.has_pending():
-        now = time.time() - t0
-        while submitted < args.requests and arrivals[submitted] <= now:
-            r = eng.submit(draw(), sp)
-            submit_ts[r.uid] = now
-            reqs.append(r)
-            submitted += 1
-        if not eng.has_pending():
-            # idle until the next arrival
-            time.sleep(max(0.0, arrivals[submitted] - (time.time() - t0)))
-            continue
-        for out in eng.step():
-            if out.token >= 0:
-                n_tok += 1
-            if args.stream and out.token >= 0:
-                print(f"  [uid {out.uid} #{out.index}] {out.token}")
-            if out.finished:
-                finish_ts[out.uid] = time.time() - t0
-    dt = time.time() - t0
-    lats = [finish_ts[u] - submit_ts[u] for u in finish_ts if u in submit_ts]
-    print(f"open loop: {len(reqs)} requests at {args.arrival_rate:.1f} req/s, "
-          f"{n_tok} tokens in {dt:.2f}s ({n_tok/max(dt, 1e-9):.1f} tok/s)")
-    if lats:
-        print(f"request latency: mean {np.mean(lats)*1e3:.0f} ms  "
-              f"p50 {np.percentile(lats, 50)*1e3:.0f} ms  "
-              f"p95 {np.percentile(lats, 95)*1e3:.0f} ms")
+async def run_server(eng: Engine, args) -> None:
+    """Standing endpoint: serve until interrupted, then drain gracefully
+    (stop admitting, finish in-flight requests, report stats)."""
+    aeng = AsyncEngine(eng, max_queue=args.max_queue)
+    async with aeng:
+        async with FrontendServer(
+                aeng, host=args.host, port=args.port,
+                defaults=SamplingParams(max_tokens=args.max_tokens,
+                                        temperature=args.temperature,
+                                        top_p=args.top_p),
+                default_deadline_ms=args.deadline_ms) as srv:
+            print(f"[serve] listening on {args.host}:{srv.port} "
+                  f"(max_queue={args.max_queue}) — Ctrl-C to drain and exit")
+            try:
+                while True:
+                    await asyncio.sleep(3600)
+            except (KeyboardInterrupt, asyncio.CancelledError):
+                print("[serve] draining...")
     print_stats(eng)
 
 
@@ -202,10 +247,27 @@ def main(argv=None):
                     help="print tokens as they are generated")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="open-loop Poisson arrivals (req/s); 0 = closed loop")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the standing TCP endpoint instead of the "
+                         "load generator (JSON lines; serving/frontend.py)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="--serve bind address")
+    ap.add_argument("--port", type=int, default=8471,
+                    help="--serve TCP port (0 = ephemeral)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound on the waiting queue; submits past it are "
+                         "rejected immediately (backpressure, default "
+                         "unbounded)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline: requests not finished within "
+                         "this many ms end with finish_reason=deadline")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="prompt tokens a prefilling slot advances per "
                          "engine step, interleaved with decode (0 = whole-"
                          "prompt stop-the-world admission prefill)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="cap on total chunk tokens per engine step across "
+                         "all slots (default: per-slot --prefill-chunk only)")
     ap.add_argument("--contiguous-kv", action="store_true",
                     help="per-slot contiguous KV regions instead of the "
                          "paged block pool")
@@ -239,10 +301,13 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     eng = build_engine(args)
-    if args.arrival_rate > 0:
-        run_open_loop(eng, args)
+    if args.serve:
+        try:
+            asyncio.run(run_server(eng, args))
+        except KeyboardInterrupt:
+            print_stats(eng)
     else:
-        run_closed_loop(eng, args)
+        asyncio.run(run_load(eng, args))
 
 
 if __name__ == "__main__":

@@ -1,7 +1,10 @@
 from repro.serving.api import (EngineStats, FinishReason, GenerationRequest,
                                SamplingParams, StepOutput, make_request)
+from repro.serving.async_engine import (AsyncEngine, EngineOverloaded,
+                                        drive_requests)
 from repro.serving.engine import (Engine, Request, ServeConfig, ServingEngine,
                                   convert_to_packed)
+from repro.serving.frontend import FrontendServer, ServeClient
 from repro.serving.paged import BlockAllocator, BlockPoolError
 from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.sampling import greedy, sample_batch, sample_top_p
@@ -12,5 +15,6 @@ __all__ = [
     "EngineStats", "FinishReason", "GenerationRequest", "SamplingParams",
     "StepOutput", "make_request", "Scheduler", "BlockAllocator",
     "BlockPoolError", "RadixPrefixCache", "greedy", "sample_batch",
-    "sample_top_p",
+    "sample_top_p", "AsyncEngine", "EngineOverloaded", "drive_requests",
+    "FrontendServer", "ServeClient",
 ]

@@ -7,6 +7,20 @@ either via ``Engine.stream()`` / ``Engine.step()`` or a per-request
 ``on_token`` callback.  When a request finishes, the final event carries a
 :class:`FinishReason`.
 
+Lifecycle: a submitted request *waits* in the scheduler queue, is *admitted*
+into a decode slot, *prefills* (chunked), *decodes*, and *finishes* — with
+``STOP`` (EOS), ``LENGTH`` (max_tokens or cache capacity), or ``ABORTED``
+(rejected before any compute: empty / oversized prompt, or a full request
+queue under backpressure).  Two reasons end a request from the *outside* at
+any point in that lifecycle — queued, mid-prefill, or mid-decode:
+``CANCELLED`` (``Engine.cancel()`` / a dropped client connection) and
+``DEADLINE`` (the request's deadline passed before it finished).  Both keep
+the tokens generated so far, immediately free the slot, and release its KV
+blocks back to the allocator (or the prefix cache, which keeps the written
+prefix resident for future requests); the terminal :class:`StepOutput` is a
+marker event with ``token == -1``, and no further events are ever emitted
+for that uid.
+
 This module is deliberately jax-free: it is the stable surface contract;
 scheduling lives in serving/scheduler.py and jitted compute in
 serving/engine.py.
@@ -21,7 +35,9 @@ from typing import Callable, Dict, List, Optional, Sequence
 class FinishReason(str, enum.Enum):
     STOP = "stop"          # hit an EOS / stop token
     LENGTH = "length"      # max_tokens generated, or per-slot cache exhausted
-    ABORTED = "aborted"    # rejected (e.g. prompt longer than cache capacity)
+    ABORTED = "aborted"    # rejected (oversized prompt, or queue backpressure)
+    CANCELLED = "cancelled"  # Engine.cancel() — queued, mid-prefill, or mid-decode
+    DEADLINE = "deadline"  # per-request deadline passed before completion
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,11 +60,20 @@ class SamplingParams:
 
 @dataclasses.dataclass
 class GenerationRequest:
-    """One prompt in flight.  Mutable runtime fields are engine-owned."""
+    """One prompt in flight.  Mutable runtime fields are engine-owned.
+
+    ``deadline`` is an absolute ``time.perf_counter()`` instant (``None`` =
+    no deadline): once passed, the engine finishes the request with
+    ``FinishReason.DEADLINE`` at the next step boundary — whether it is
+    still queued, mid-prefill, or mid-decode — keeping any tokens generated
+    so far.  Callers usually set it via the ``deadline_s`` (relative
+    seconds) argument of ``Engine.submit`` / the async front-end.
+    """
     uid: int
     prompt: List[int]
     params: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     on_token: Optional[Callable[["StepOutput"], None]] = None
+    deadline: Optional[float] = None
     # -- engine-owned runtime state ------------------------------------------
     output_tokens: List[int] = dataclasses.field(default_factory=list)
     finish_reason: Optional[FinishReason] = None
@@ -64,7 +89,13 @@ class GenerationRequest:
 
 @dataclasses.dataclass(frozen=True)
 class StepOutput:
-    """One generated token for one request (the streaming unit)."""
+    """One generated token for one request (the streaming unit).
+
+    Terminal *marker* events — rejection (``ABORTED``), cancellation
+    (``CANCELLED``), deadline expiry (``DEADLINE``) — carry ``token == -1``
+    and produce no new token; ``index`` is then the count of tokens the
+    request had generated when it ended (``-1`` for admission rejections).
+    """
     uid: int
     token: int
     index: int                                  # position in the output, 0-based
@@ -84,18 +115,42 @@ class EngineStats:
     ``prefill_chunks`` is how many per-slot chunks those positions took.
     ``ttft_ms`` holds time-to-first-token percentiles (mean / p50 / p95 /
     p99, wall-clock from submit to the first sampled token) once any request
-    has produced one, else ``None``.  Block fields are ``None`` on the
-    contiguous (non-paged) path, and ``prefix_cache`` is ``None`` unless
-    ``ServeConfig.prefix_cache`` is on — when set it holds the radix-cache
-    counters (hits / misses / evictions / tokens_matched / cached_blocks /
-    cached_unreferenced_blocks).
+    has produced one, else ``None``; ``queue_wait_ms`` the same percentiles
+    for submit -> admission (how long requests sat in the waiting queue) and
+    ``e2e_latency_ms`` for submit -> finish (end-to-end request latency,
+    terminal marker events included).  ``queue_depth`` is the instantaneous
+    waiting-queue length at snapshot time and ``tokens_generated`` the total
+    tokens emitted so far; ``cancellations`` / ``deadline_expirations``
+    count requests ended by ``Engine.cancel()`` and by deadline expiry.
+
+    ``step_gap_ms`` holds percentiles of the host-side *dispatch gap* — the
+    wall time between a step's outputs being synced off the device and the
+    next step's dispatch returning, i.e. how long the device sat idle while
+    the host scheduled; ``steps_overlapped`` counts steps that were
+    dispatched *before* the previous step was synced (the async loop's
+    speculative launches — their gap is zero by construction) out of
+    ``steps_committed`` total.
+
+    Block fields are ``None`` on the contiguous (non-paged) path, and
+    ``prefix_cache`` is ``None`` unless ``ServeConfig.prefix_cache`` is on —
+    when set it holds the radix-cache counters (hits / misses / evictions /
+    tokens_matched / cached_blocks / cached_unreferenced_blocks).
     """
     admissions: int = 0
     preemptions: int = 0
     prefill_positions: int = 0
     prefill_positions_skipped: int = 0
     prefill_chunks: int = 0
+    tokens_generated: int = 0
+    queue_depth: int = 0
+    cancellations: int = 0
+    deadline_expirations: int = 0
+    steps_committed: int = 0
+    steps_overlapped: int = 0
     ttft_ms: Optional[Dict[str, float]] = None
+    queue_wait_ms: Optional[Dict[str, float]] = None
+    e2e_latency_ms: Optional[Dict[str, float]] = None
+    step_gap_ms: Optional[Dict[str, float]] = None
     blocks_in_use: Optional[int] = None
     blocks_free: Optional[int] = None
     prefix_cache: Optional[Dict[str, int]] = None
@@ -104,7 +159,7 @@ class EngineStats:
 def make_request(prompt: Sequence[int], uid: int,
                  params: Optional[SamplingParams] = None,
                  on_token: Optional[Callable[[StepOutput], None]] = None,
-                 ) -> GenerationRequest:
+                 deadline: Optional[float] = None) -> GenerationRequest:
     return GenerationRequest(uid=uid, prompt=list(prompt),
                              params=params or SamplingParams(),
-                             on_token=on_token)
+                             on_token=on_token, deadline=deadline)

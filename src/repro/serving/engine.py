@@ -76,7 +76,22 @@ off (tests/test_prefix_cache.py).  ``Engine.stats()`` snapshots admissions,
 preemptions, per-chunk prefill work, block occupancy, prefix counters, and
 time-to-first-token percentiles.
 
-Known gaps recorded in ROADMAP.md Open items: the host loop is synchronous.
+The step itself is split **plan -> launch -> commit** (``plan_step`` /
+``launch_step`` / ``commit_step``; ``step()`` composes the three for the
+synchronous parity baseline): planning — deadline sweep, admission, chunk
+budgeting, block allocation — touches only host state, launching uses JAX
+async dispatch (the jitted call returns with the token array unmaterialized),
+and commit syncs the tokens and applies them to the scheduler.
+``serving/async_engine.py`` drives the phases from an asyncio loop so the
+host plans step N+1 while the device runs step N, and ``plan_spec`` goes one
+further for steady-state decode: it launches step N+1 *before* committing
+step N, feeding step N's token device-array straight back into the next
+dispatch (safe because decode positions advance deterministically; an
+unpredicted EOS just discards that row at commit via the plan's slot->uid
+owner snapshot).  Requests can carry deadlines and be cancelled mid-flight
+(``Engine.cancel`` / ``expire_deadlines``): the slot frees immediately, its
+blocks release to the allocator or stay published in the prefix cache, and
+the in-flight step's row for that slot is discarded at commit.
 """
 from __future__ import annotations
 
@@ -90,8 +105,8 @@ import numpy as np
 
 from repro.models import build_model
 from repro.models.base import ModelConfig
-from repro.serving.api import (EngineStats, GenerationRequest, SamplingParams,
-                               StepOutput, make_request)
+from repro.serving.api import (EngineStats, FinishReason, GenerationRequest,
+                               SamplingParams, StepOutput, make_request)
 from repro.serving.paged import BlockAllocator
 from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.sampling import sample_batch
@@ -114,6 +129,10 @@ class ServeConfig:
     # 0 = whole-prompt sequential-scan prefill — the retired stop-the-world
     # admission prefill's semantics, kept as the parity/latency baseline
     prefill_chunk: int = 32
+    # cap on *total* chunk tokens per engine step across all slots (None =
+    # per-slot prefill_chunk only): a burst of long prompts stalls past the
+    # budget instead of fattening the fused step and starving decode latency
+    prefill_budget: Optional[int] = None
     # -- paged KV cache (serving/paged.py) --------------------------------
     # block-pooled KV cache: True / False force it on/off; None (default)
     # auto-selects — paged for attention-only stacks, contiguous for models
@@ -174,6 +193,10 @@ class ServeConfig:
             raise ValueError(
                 f"prefix_cache_blocks={self.prefix_cache_blocks} must be "
                 ">= 1 or None")
+        if self.prefill_budget is not None and self.prefill_budget < 1:
+            raise ValueError(
+                f"prefill_budget={self.prefill_budget} must be >= 1 or None "
+                "(a zero budget would stall every prefill forever)")
 
     @property
     def blocks_per_slot(self) -> int:
@@ -195,6 +218,43 @@ class Request:
     max_tokens: int = 32
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """Host-side plan for one fused step, produced by ``Engine.plan_step()``
+    (or ``plan_spec()``) with **no device sync**: admission, deadline sweep,
+    chunk planning, and block allocation all happen here, so the async loop
+    can plan step N+1 while step N is still executing.
+
+    ``events`` are terminal StepOutputs already emitted during planning
+    (admission rejections, deadline expiries) — their callbacks have fired;
+    ``commit_step`` only prepends them to its return.  ``owners`` snapshots
+    slot -> uid at plan time so a slot freed mid-flight (cancel / deadline)
+    has its in-flight token discarded at commit instead of being credited to
+    the slot's next occupant.  ``stalled`` lists mid-prefill slots past the
+    step's ``prefill_budget``: they ride the fused step as emit-less pad rows
+    (their stale KV write is overwritten bit-identically by the real chunk
+    before anything attends it) and are skipped at commit.  ``spec`` marks a
+    speculative decode plan: launch feeds the *device array* of the previous
+    step's sampled tokens instead of the host-synced ``_tokens``."""
+    events: List[StepOutput]
+    active: List[int]
+    owners: Dict[int, int]
+    chunks: Dict[int, int]
+    stalled: List[int]
+    positions: np.ndarray          # per-slot write positions at plan time
+    spec: bool = False
+
+
+@dataclasses.dataclass
+class InflightStep:
+    """A dispatched-but-uncommitted step: the plan it ran, the un-synced
+    device array of sampled tokens (``None`` when no slot was active), and
+    the wall-clock instant dispatch returned (for the step-gap metric)."""
+    plan: StepPlan
+    tok: Optional[jax.Array]
+    launched_at: float = 0.0
 
 
 class Engine:
@@ -246,7 +306,8 @@ class Engine:
                                self.scfg.eos_id, self.scfg.prefill_bucket_min,
                                allocator=self.allocator,
                                prefix_cache=self.prefix_cache,
-                               prefill_chunk=self.scfg.prefill_chunk)
+                               prefill_chunk=self.scfg.prefill_chunk,
+                               prefill_budget=self.scfg.prefill_budget)
         # donate the cache (and key) buffers: step outputs replace them, so
         # XLA can update in place instead of copying the whole cache
         # (contiguous [slots, max_len] regions or the paged block pool)
@@ -272,6 +333,19 @@ class Engine:
         self._requests: Dict[int, GenerationRequest] = {}   # uid -> in flight
         self._submit_ts: Dict[int, float] = {}   # uid -> submit wall time
         self._ttft_ms: List[float] = []          # submit -> first token
+        self._queue_wait_ms: List[float] = []    # submit -> admission
+        self._e2e_ms: List[float] = []           # submit -> finish
+        # host dispatch-gap accounting (EngineStats.step_gap_ms): wall time
+        # from a step's device sync to the next step's dispatch return; a
+        # step launched *before* the previous sync (the async loop's
+        # speculative launches) counts as overlapped, gap 0 by construction
+        self._step_gap_ms: List[float] = []
+        self._last_sync: Optional[float] = None
+        self._steps_committed = 0
+        self._steps_overlapped = 0
+        self._tokens_generated = 0
+        self._cancellations = 0
+        self._deadline_expirations = 0
         # live decode state, allocated lazily on first admission; idle rows
         # hold pad_id so their (discarded) compute never depends on a dead
         # request's last token
@@ -394,15 +468,22 @@ class Engine:
     def submit(self, prompt: Sequence[int],
                params: Optional[SamplingParams] = None,
                uid: Optional[int] = None,
-               on_token=None) -> GenerationRequest:
-        """Enqueue a prompt; returns the live GenerationRequest handle."""
+               on_token=None,
+               deadline_s: Optional[float] = None) -> GenerationRequest:
+        """Enqueue a prompt; returns the live GenerationRequest handle.
+        ``deadline_s`` (relative seconds from now) arms a per-request
+        deadline: once it passes, the next plan/step boundary finishes the
+        request with ``FinishReason.DEADLINE`` wherever it is — queued,
+        mid-prefill, or mid-decode — keeping any tokens generated so far."""
         if uid is None:
             uid = self._uid_counter
         self._uid_counter = max(self._uid_counter, uid) + 1
         if params is None:
             params = SamplingParams(temperature=self.scfg.temperature,
                                     top_p=self.scfg.top_p)
-        req = make_request(prompt, uid, params, on_token)
+        deadline = (None if deadline_s is None
+                    else time.perf_counter() + deadline_s)
+        req = make_request(prompt, uid, params, on_token, deadline=deadline)
         return self.submit_request(req)
 
     def submit_request(self, req: GenerationRequest) -> GenerationRequest:
@@ -423,56 +504,160 @@ class Engine:
         """Admit waiting requests, then run one fused step over the slot
         batch: every prefilling slot advances up to ``prefill_chunk`` prompt
         tokens and every decoding slot one token (Sarathi-style
-        interleaving).  Returns the StepOutputs produced (rejections, then
-        one token per slot that completed its prompt or decoded)."""
-        outs: List[StepOutput] = []
-        self.last_decode = None        # stays None if no slot ran
+        interleaving).  Returns the StepOutputs produced (rejections and
+        deadline expiries, then one token per slot that completed its prompt
+        or decoded).  Internally plan -> launch -> commit; the async loop
+        (serving/async_engine.py) calls those phases separately so the host
+        plans step N+1 while the device runs step N."""
+        return self.commit_step(self.launch_step(self.plan_step()))
+
+    # -- plan / launch / commit ------------------------------------------------
+
+    def plan_step(self) -> StepPlan:
+        """Plan one fused step on the host, with no device sync: sweep
+        expired deadlines, admit waiting requests (keys set, prefix-skip
+        accounted, queue-wait recorded), plan this step's chunks (which may
+        preempt starved slots), and snapshot active slots / owners /
+        positions.  Rejection and deadline marker events are finalized here
+        (callbacks fire at plan time) and carried in ``plan.events``."""
+        self.last_decode = None        # stays None if no slot runs
+        events = self.expire_deadlines()
         admitted, rejected = self.sched.admit()
-        outs.extend(rejected)
+        self._finalize_outputs(rejected)
+        events.extend(rejected)
         if admitted:
             self._ensure_state()
+            now = time.perf_counter()
             for slot, req in admitted:
                 self._keys = self._keys.at[slot].set(self._request_key(req))
                 # positions covered by trie-shared blocks skip prefill; on a
                 # preemption resume this counts the re-matched progress too
                 self._prefill_skipped += int(self.sched.prefix_lens[slot])
-
+                t0 = self._submit_ts.get(req.uid)
+                if t0 is not None:
+                    self._queue_wait_ms.append((now - t0) * 1e3)
         # plan this step's chunks (may preempt half-prefilled slots whose
-        # growth starves), then run the fused step over whoever is active
+        # growth starves; may stall slots past the prefill budget)
         chunks = self.sched.next_chunks()
         active = self.sched.active_slots()
-        if active:
-            self._ensure_state()
-            if chunks:
-                outs.extend(self._run_chunk_step(chunks, active))
-            else:
-                outs.extend(self._run_decode_step(active))
+        stalled = [s for s in active
+                   if self.sched.pending[s] and s not in chunks]
+        owners = {s: self.sched.slots[s].uid for s in active}
+        return StepPlan(events=events, active=active, owners=owners,
+                        chunks=chunks, stalled=stalled,
+                        positions=np.asarray(self.sched.positions,
+                                             np.int32).copy())
 
-        # any slot freed this step (finish, abort, or paged preemption) must
+    def plan_spec(self, inflight: InflightStep) -> Optional[StepPlan]:
+        """Plan step N+1 *speculatively* while step N (``inflight``) is still
+        on the device, or return None when only a normal post-commit plan is
+        safe.  Speculation requires a pure-decode in-flight step whose slots
+        all provably survive its commit: same active set and owners, no row
+        finishing deterministically (max_tokens / cache capacity) at commit,
+        and every next-position block allocatable (``pregrow_decode``).  An
+        EOS finish is *allowed* — the speculative step's row is discarded at
+        commit via the owner check, and its stale KV write lands in a block
+        nothing attends before it is overwritten.  Declined when admission
+        could run instead (waiting requests + a free slot): filling a slot
+        beats overlapping one step."""
+        plan = inflight.plan
+        if inflight.tok is None or plan.chunks or plan.stalled:
+            return None                # only pure-decode steps speculate
+        sc = self.sched
+        active = sc.active_slots()
+        if not active or active != plan.active:
+            return None                # a cancel/deadline freed a slot
+        if sc.waiting and any(r is None for r in sc.slots):
+            return None                # admission possible: plan it for real
+        for slot in active:
+            req = sc.slots[slot]
+            if req is None or req.uid != plan.owners.get(slot):
+                return None
+            # the in-flight step appends one token at commit; a row that
+            # deterministically finishes there frees its slot — plan for real
+            if req.num_generated + 1 >= req.params.max_tokens:
+                return None
+            if int(sc.positions[slot]) + 1 > sc.max_len - 1:
+                return None            # capacity finish at commit
+            if not sc.pregrow_decode(slot):
+                return None            # pool starved: let commit preempt
+        positions = np.asarray(sc.positions, np.int32).copy()
+        for slot in active:
+            positions[slot] += 1       # where step N+1 writes, post-commit-N
+        return StepPlan(events=[], active=list(active), owners=dict(plan.owners),
+                        chunks={}, stalled=[], positions=positions, spec=True)
+
+    def launch_step(self, plan: StepPlan,
+                    feed: Optional[InflightStep] = None) -> InflightStep:
+        """Dispatch the planned fused step without syncing its outputs.  JAX
+        async dispatch returns as soon as the computation is enqueued, so the
+        returned :class:`InflightStep` holds an unmaterialized token array —
+        the host is free to plan (and with ``plan_spec``, even launch) the
+        next step while the device executes.  A speculative plan feeds
+        ``feed.tok`` — the previous step's *device* tokens — instead of the
+        host-synced ``self._tokens``."""
+        if not plan.active:
+            return InflightStep(plan=plan, tok=None,
+                                launched_at=time.perf_counter())
+        self._ensure_state()
+        if plan.chunks or plan.stalled:
+            tok = self._launch_chunk(plan)
+        else:
+            tok = self._launch_decode(plan, feed)
+        return InflightStep(plan=plan, tok=tok,
+                            launched_at=time.perf_counter())
+
+    def commit_step(self, inflight: InflightStep,
+                    tok_np: Optional[np.ndarray] = None) -> List[StepOutput]:
+        """Sync the in-flight step's tokens off the device and apply them to
+        the scheduler: ``advance_prefill`` for chunked slots, ``record`` for
+        every slot that produced a token.  Rows whose slot changed owner
+        since the plan (cancel / deadline / EOS-finish under speculation) are
+        discarded; budget-stalled rows are skipped.  ``tok_np`` lets the
+        async loop pass tokens it already materialized off-thread.  Returns
+        the plan's marker events followed by this step's outputs."""
+        plan = inflight.plan
+        sc = self.sched
+        outs: List[StepOutput] = []
+        if inflight.tok is not None:
+            if tok_np is None:
+                tok_np = np.asarray(inflight.tok)
+            now = time.perf_counter()
+            self._steps_committed += 1
+            if self._last_sync is not None:
+                gap = inflight.launched_at - self._last_sync
+                if gap <= 0.0:
+                    self._steps_overlapped += 1
+                self._step_gap_ms.append(max(0.0, gap) * 1e3)
+            self._last_sync = now
+            for slot in plan.active:
+                req = sc.slots[slot]
+                if req is None or req.uid != plan.owners.get(slot):
+                    continue           # slot freed mid-flight: discard token
+                n = plan.chunks.get(slot)
+                if n is not None:
+                    if not sc.advance_prefill(slot, n):
+                        continue       # still prefilling: no token this step
+                elif slot in plan.stalled:
+                    continue           # budget-stalled: emit-less pad row
+                self._tokens[slot] = int(tok_np[slot])
+                outs.append(sc.record(slot, int(tok_np[slot])))
+            self._prefill_positions += sum(plan.chunks.values())
+            self._prefill_chunks += len(plan.chunks)
+        # any slot freed this step (finish, cancel, or paged preemption) must
         # decode the pad token while idle, not the dead request's last token
-        for slot, req in enumerate(self.sched.slots):
+        for slot, req in enumerate(sc.slots):
             if req is None:
                 self._tokens[slot] = self.scfg.pad_id
+        self._finalize_outputs(outs)
+        return plan.events + outs
 
-        now = time.perf_counter()
-        for out in outs:
-            if out.index == 0 and out.token >= 0:
-                t0 = self._submit_ts.get(out.uid)
-                if t0 is not None:
-                    self._ttft_ms.append((now - t0) * 1e3)
-            if out.finished or out.index == 0:
-                self._submit_ts.pop(out.uid, None)
-            req = self._requests.get(out.uid)
-            if req is not None and req.on_token is not None:
-                req.on_token(out)
-            if out.finished:
-                self._requests.pop(out.uid, None)
-        return outs
-
-    def _run_decode_step(self, active: List[int]) -> List[StepOutput]:
-        """Pure-decode step (no prefilling slots): the paged_attention decode
-        kernel / gather path, one token per active slot."""
+    def _launch_decode(self, plan: StepPlan,
+                       feed: Optional[InflightStep]) -> jax.Array:
+        """Pure-decode dispatch (no prefilling slots): the paged_attention
+        decode kernel / gather path, one token per active slot."""
         sc = self.sched
+        positions = plan.positions
         bt = None
         width = None
         if self.paged:
@@ -480,60 +665,69 @@ class Engine:
             # (power-of-two widths bound retraces, like chunk buckets) —
             # per-step KV gather bandwidth then tracks the batch's actual
             # depth instead of max_len
-            depth = int(sc.positions[active].max()) + 1
+            depth = int(positions[plan.active].max()) + 1
             width = bucket_length(self.allocator.blocks_for(depth), 1,
                                   sc.block_tables.shape[1])
             bt = jnp.asarray(sc.block_tables[:, :width])
         # snapshot of the step shape actually run (post-admission,
         # pre-record): benchmarks/speed_memory.py models per-step KV
         # traffic from this instead of guessing from advanced state
-        self.last_decode = {"active": list(active),
-                            "positions": sc.positions.tolist(),
+        self.last_decode = {"active": list(plan.active),
+                            "positions": positions.tolist(),
                             "table_width": width,
                             "chunks": None}
+        # a speculative launch feeds the previous step's sampled tokens as a
+        # device array — no host sync; keys and cache already flow through
+        # self._keys / self._cache as unmaterialized step-N outputs
+        toks_in = (feed.tok if plan.spec and feed is not None
+                   else jnp.asarray(self._tokens))
         tok, self._cache, self._keys = self._decode(
-            self.params, jnp.asarray(self._tokens), self._cache,
-            jnp.asarray(sc.positions), self._keys,
+            self.params, toks_in, self._cache,
+            jnp.asarray(positions), self._keys,
             jnp.asarray(sc.temperatures), jnp.asarray(sc.top_ps), bt)
-        tok_np = np.asarray(tok)
-        self._tokens = tok_np.copy()
-        return [self.sched.record(slot, int(tok_np[slot])) for slot in active]
+        return tok
 
-    def _run_chunk_step(self, chunks: Dict[int, int],
-                        active: List[int]) -> List[StepOutput]:
-        """Fused chunk step: prefilling slots advance their planned chunk,
-        decoding slots their one token, in a single jitted call."""
+    def _launch_chunk(self, plan: StepPlan) -> jax.Array:
+        """Fused chunk-step dispatch: prefilling slots advance their planned
+        chunk, decoding slots their one token, in a single jitted call.
+        Budget-stalled mid-prefill slots ride along as emit-less length-1 pad
+        rows: their stale KV write at the current fill position is rewritten
+        bit-identically by the real chunk before anything attends it, and
+        ``emit=False`` keeps their PRNG stream untouched."""
         sc, scfg = self.sched, self.scfg
+        chunks = plan.chunks
         # chunk widths bucket to powers of two (bounds recompiles to
         # O(log prefill_chunk) shapes); whole-prompt mode buckets by
         # prefill_bucket_min exactly like the retired admission prefill
-        max_l = max(chunks.values())
+        max_l = max(chunks.values()) if chunks else 1
         if scfg.prefill_chunk > 0:
             t = bucket_length(max_l, 1, scfg.prefill_chunk)
         else:
             t = bucket_length(max_l, scfg.prefill_bucket_min, scfg.max_len)
         toks = np.full((scfg.max_batch, t), scfg.pad_id, np.int32)
-        start = np.asarray(sc.positions, np.int32).copy()
+        start = plan.positions.copy()
         lens = np.ones((scfg.max_batch,), np.int32)
         emit = np.zeros((scfg.max_batch,), bool)
-        for slot in active:
+        for slot in plan.active:
             n = chunks.get(slot)
             if n is not None:
                 toks[slot, :n] = sc.pending[slot][:n]
                 lens[slot] = n
                 emit[slot] = n == len(sc.pending[slot])  # prompt exhausted
+            elif slot in plan.stalled:
+                pass                   # emit-less pad row (see docstring)
             else:
                 toks[slot, 0] = self._tokens[slot]
                 emit[slot] = True
         bt = None
         width = None
         if self.paged:
-            depth = max(int(start[s]) + int(lens[s]) for s in active)
+            depth = max(int(start[s]) + int(lens[s]) for s in plan.active)
             width = bucket_length(self.allocator.blocks_for(depth), 1,
                                   sc.block_tables.shape[1])
             bt = jnp.asarray(sc.block_tables[:, :width])
-        self.last_decode = {"active": list(active),
-                            "positions": sc.positions.tolist(),
+        self.last_decode = {"active": list(plan.active),
+                            "positions": start.tolist(),
                             "table_width": width,
                             "chunks": dict(chunks), "chunk_t": t,
                             "starts": start.tolist(), "lens": lens.tolist()}
@@ -548,18 +742,74 @@ class Engine:
             tok, self._cache, self._keys = fn(*args, bt)
         else:
             tok, self._cache, self._keys = self._chunk_scan(*args)
-        tok_np = np.asarray(tok)
-        self._prefill_positions += sum(chunks.values())
-        self._prefill_chunks += len(chunks)
-        outs: List[StepOutput] = []
-        for slot in active:
-            n = chunks.get(slot)
-            if n is not None:
-                if not sc.advance_prefill(slot, n):
-                    continue           # still prefilling: no token this step
-            self._tokens[slot] = int(tok_np[slot])
-            outs.append(sc.record(slot, int(tok_np[slot])))
+        return tok
+
+    # -- cancellation / deadlines ----------------------------------------------
+
+    def cancel(self, uid: int,
+               reason: FinishReason = FinishReason.CANCELLED
+               ) -> Optional[StepOutput]:
+        """End a request from the outside — queued, mid-prefill, or
+        mid-decode.  The slot is freed immediately and its blocks released
+        (to the prefix cache when enabled: even a half-prefilled prompt's
+        published progress stays resident).  Emits the terminal marker
+        StepOutput (token == -1) through the request's callback and returns
+        it; returns None if the uid is not in flight.  No further StepOutputs
+        are ever emitted for the uid — a step in flight when the cancel lands
+        has its row discarded at commit (owner check)."""
+        req = self._requests.get(uid)
+        if req is None or req.done:
+            return None
+        out = self.sched.cancel(uid, reason)
+        if out is None:                # defensive: unknown to the scheduler
+            self._requests.pop(uid, None)
+            self._submit_ts.pop(uid, None)
+            return None
+        if reason == FinishReason.DEADLINE:
+            self._deadline_expirations += 1
+        else:
+            self._cancellations += 1
+        self._finalize_outputs([out])
+        return out
+
+    def expire_deadlines(self) -> List[StepOutput]:
+        """Finish every in-flight request whose deadline has passed with
+        ``FinishReason.DEADLINE`` (queued, mid-prefill, and mid-decode alike).
+        Called at every plan boundary; the async loop also sweeps between
+        speculative launches.  Returns the (already finalized) marker
+        events."""
+        now = time.perf_counter()
+        expired = [req.uid for req in self._requests.values()
+                   if req.deadline is not None and now >= req.deadline]
+        outs = []
+        for uid in expired:
+            out = self.cancel(uid, FinishReason.DEADLINE)
+            if out is not None:
+                outs.append(out)
         return outs
+
+    def _finalize_outputs(self, outs: List[StepOutput]) -> None:
+        """Per-output bookkeeping: latency samples (TTFT at the first real
+        token, queue-wait at admission elsewhere, end-to-end at finish),
+        token counters, the per-request callback, and in-flight map cleanup."""
+        if not outs:
+            return
+        now = time.perf_counter()
+        for out in outs:
+            if out.token >= 0:
+                self._tokens_generated += 1
+                if out.index == 0:
+                    t0 = self._submit_ts.get(out.uid)
+                    if t0 is not None:
+                        self._ttft_ms.append((now - t0) * 1e3)
+            req = self._requests.get(out.uid)
+            if req is not None and req.on_token is not None:
+                req.on_token(out)
+            if out.finished:
+                t0 = self._submit_ts.pop(out.uid, None)
+                if t0 is not None:
+                    self._e2e_ms.append((now - t0) * 1e3)
+                self._requests.pop(out.uid, None)
 
     def stream(self) -> Iterator[StepOutput]:
         """Drive steps until all submitted work finishes, yielding tokens in
@@ -638,24 +888,37 @@ class Engine:
         """Snapshot of the engine's runtime counters: admissions,
         preemptions, chunked-prefill work (positions run per chunk vs
         positions skipped via prefix sharing, chunk count), paged-block
-        occupancy, time-to-first-token percentiles, and — with
-        ``ServeConfig(prefix_cache=True)`` — the radix-cache
-        hit/miss/eviction counters."""
+        occupancy, latency percentiles (TTFT, queue wait, end-to-end),
+        host dispatch-gap / overlap accounting, cancellation and deadline
+        counters, and — with ``ServeConfig(prefix_cache=True)`` — the
+        radix-cache hit/miss/eviction counters."""
         alloc = self.allocator
-        ttft = None
-        if self._ttft_ms:
-            arr = np.asarray(self._ttft_ms)
-            ttft = {"mean": float(arr.mean()),
+
+        def pct(xs: List[float]) -> Optional[Dict[str, float]]:
+            if not xs:
+                return None
+            arr = np.asarray(xs)
+            return {"mean": float(arr.mean()),
                     "p50": float(np.percentile(arr, 50)),
                     "p95": float(np.percentile(arr, 95)),
                     "p99": float(np.percentile(arr, 99))}
+
         return EngineStats(
             admissions=self.sched.admissions,
             preemptions=self.sched.preemptions,
             prefill_positions=self._prefill_positions,
             prefill_positions_skipped=self._prefill_skipped,
             prefill_chunks=self._prefill_chunks,
-            ttft_ms=ttft,
+            tokens_generated=self._tokens_generated,
+            queue_depth=len(self.sched.waiting),
+            cancellations=self._cancellations,
+            deadline_expirations=self._deadline_expirations,
+            steps_committed=self._steps_committed,
+            steps_overlapped=self._steps_overlapped,
+            ttft_ms=pct(self._ttft_ms),
+            queue_wait_ms=pct(self._queue_wait_ms),
+            e2e_latency_ms=pct(self._e2e_ms),
+            step_gap_ms=pct(self._step_gap_ms),
             blocks_in_use=None if alloc is None else alloc.blocks_in_use(),
             blocks_free=None if alloc is None else alloc.available(),
             prefix_cache=(None if self.prefix_cache is None

@@ -1,0 +1,281 @@
+"""TCP request front-end: a newline-delimited-JSON streaming endpoint over
+:class:`~repro.serving.async_engine.AsyncEngine`.
+
+The container has no HTTP framework, so the wire protocol is deliberately
+minimal — JSON lines over a plain asyncio TCP socket, one object per line
+(it maps 1:1 onto an SSE/HTTP endpoint if one is ever layered on top):
+
+Client -> server (one JSON object per line):
+
+* ``{"prompt": [int...], "max_tokens": 32, "temperature": 0.0,
+  "top_p": 1.0, "seed": null, "ignore_eos": false, "deadline_ms": 500}``
+  — submit a generation request.  Only ``prompt`` is required;
+  ``deadline_ms`` (relative) arms a per-request deadline.
+* ``{"cancel": <uid>}`` — cancel an in-flight request by uid (any
+  connection may cancel any uid; uids are returned in the ack).
+
+Server -> client:
+
+* ack: ``{"uid": <n>}`` on acceptance, or a terminal rejection line
+  ``{"uid": -1, "token": -1, "index": -1, "finished": true,
+  "finish_reason": "aborted", "error": "overloaded"}`` when the bounded
+  queue is full (backpressure) — the client is answered immediately, nothing
+  queues unboundedly.
+* one event line per :class:`~repro.serving.api.StepOutput`:
+  ``{"uid", "token", "index", "finished", "finish_reason"}``.  The last
+  line for a request always has ``finished: true``; terminal markers
+  (cancelled / deadline / aborted) carry ``token: -1``.
+
+A connection submits requests sequentially (one stream at a time — a
+many-client load generator opens one connection per simulated client, see
+benchmarks/serving_loadgen.py); **dropping the connection mid-stream cancels
+the in-flight request**, freeing its slot and KV blocks immediately.
+
+``FrontendServer`` wraps ``asyncio.start_server``; ``ServeClient`` is the
+matching client used by the load generator, ``launch/serve.py``, and the CI
+smoke test.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence
+
+from repro.serving.api import SamplingParams, StepOutput
+from repro.serving.async_engine import AsyncEngine, EngineOverloaded
+
+
+def encode_output(out: StepOutput) -> bytes:
+    return (json.dumps({
+        "uid": out.uid, "token": out.token, "index": out.index,
+        "finished": out.finished,
+        "finish_reason": (out.finish_reason.value
+                          if out.finish_reason is not None else None),
+    }) + "\n").encode()
+
+
+def parse_params(msg: Dict, defaults: SamplingParams) -> SamplingParams:
+    return dataclasses.replace(
+        defaults,
+        max_tokens=int(msg.get("max_tokens", defaults.max_tokens)),
+        temperature=float(msg.get("temperature", defaults.temperature)),
+        top_p=float(msg.get("top_p", defaults.top_p)),
+        seed=msg.get("seed", defaults.seed),
+        ignore_eos=bool(msg.get("ignore_eos", defaults.ignore_eos)))
+
+
+class FrontendServer:
+    """Serve an :class:`AsyncEngine` over TCP (see module docstring).
+
+    ``port=0`` binds an ephemeral port; the bound port is in ``.port`` after
+    :meth:`start`.  ``default_deadline_ms`` arms a deadline for requests that
+    do not set their own."""
+
+    def __init__(self, aeng: AsyncEngine, host: str = "127.0.0.1",
+                 port: int = 0,
+                 defaults: Optional[SamplingParams] = None,
+                 default_deadline_ms: Optional[float] = None):
+        self.aeng = aeng
+        self.host = host
+        self.port = port
+        self.defaults = defaults or SamplingParams()
+        self.default_deadline_ms = default_deadline_ms
+        self._server: Optional[asyncio.AbstractServer] = None
+
+    async def start(self) -> None:
+        self._server = await asyncio.start_server(
+            self._handle, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+
+    async def aclose(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+
+    async def __aenter__(self) -> "FrontendServer":
+        await self.start()
+        return self
+
+    async def __aexit__(self, exc_type, exc, tb) -> None:
+        await self.aclose()
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            while True:
+                line = await reader.readline()
+                if not line:
+                    return                      # client went away while idle
+                try:
+                    msg = json.loads(line)
+                except json.JSONDecodeError:
+                    writer.write(json.dumps(
+                        {"error": "bad json"}).encode() + b"\n")
+                    await writer.drain()
+                    continue
+                if "cancel" in msg:
+                    self.aeng.cancel(int(msg["cancel"]))
+                    continue
+                if "prompt" not in msg:
+                    writer.write(json.dumps(
+                        {"error": "missing prompt"}).encode() + b"\n")
+                    await writer.drain()
+                    continue
+                await self._serve_request(msg, reader, writer)
+        except (ConnectionResetError, BrokenPipeError):
+            pass
+        finally:
+            writer.close()
+
+    async def _serve_request(self, msg: Dict, reader: asyncio.StreamReader,
+                             writer: asyncio.StreamWriter) -> None:
+        deadline_ms = msg.get("deadline_ms", self.default_deadline_ms)
+        try:
+            req = self.aeng.submit(
+                [int(t) for t in msg["prompt"]],
+                parse_params(msg, self.defaults),
+                deadline_s=(None if deadline_ms is None
+                            else float(deadline_ms) / 1e3))
+        except EngineOverloaded:
+            # backpressure: answer now with a terminal rejection line
+            writer.write(json.dumps(
+                {"uid": -1, "token": -1, "index": -1, "finished": True,
+                 "finish_reason": "aborted", "error": "overloaded"}
+            ).encode() + b"\n")
+            await writer.drain()
+            return
+        writer.write(json.dumps({"uid": req.uid}).encode() + b"\n")
+        await writer.drain()
+
+        async def pump() -> None:
+            try:
+                async for out in self.aeng.stream(req.uid):
+                    writer.write(encode_output(out))
+                    await writer.drain()
+                    if out.finished:
+                        return
+            except (ConnectionResetError, BrokenPipeError):
+                # client vanished mid-stream without a clean EOF
+                self.aeng.cancel(req.uid)
+                self.aeng.release_stream(req.uid)
+                raise
+
+        # stream events while watching the socket: an EOF mid-stream means
+        # the client disconnected — cancel its request (free the slot and
+        # blocks immediately); an in-stream line may be an explicit cancel
+        pump_task = asyncio.ensure_future(pump())
+        peek: Optional[asyncio.Task] = asyncio.ensure_future(
+            reader.readline())
+        try:
+            while not pump_task.done():
+                waiters = {pump_task} | ({peek} if peek is not None else set())
+                done, _ = await asyncio.wait(
+                    waiters, return_when=asyncio.FIRST_COMPLETED)
+                if peek is not None and peek in done:
+                    try:
+                        line = peek.result()
+                    except (ConnectionResetError, BrokenPipeError):
+                        # a client that closes with unread streamed tokens
+                        # in its buffer resets the connection instead of a
+                        # clean FIN — same meaning: the consumer is gone
+                        line = b""
+                    if not line:                # disconnect: cancel + bail
+                        self.aeng.cancel(req.uid)
+                        pump_task.cancel()
+                        self.aeng.release_stream(req.uid)
+                        return
+                    try:
+                        inner = json.loads(line)
+                    except json.JSONDecodeError:
+                        inner = {}
+                    if "cancel" in inner:
+                        self.aeng.cancel(int(inner["cancel"]))
+                    peek = asyncio.ensure_future(reader.readline())
+            await pump_task
+        finally:
+            # unwind the peek fully before _handle's next readline() — an
+            # abandoned cancelled task still holds the stream's read waiter
+            for t in (peek, pump_task):
+                if t is None:
+                    continue
+                if not t.done():
+                    t.cancel()
+                await asyncio.gather(t, return_exceptions=True)
+
+
+class ServeClient:
+    """Minimal client for the JSON-lines endpoint (the load generator's and
+    the CI smoke test's request path — and the reference for third-party
+    clients)."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0):
+        self.host, self.port = host, port
+        self._reader: Optional[asyncio.StreamReader] = None
+        self._writer: Optional[asyncio.StreamWriter] = None
+
+    async def connect(self) -> "ServeClient":
+        self._reader, self._writer = await asyncio.open_connection(
+            self.host, self.port)
+        return self
+
+    async def close(self) -> None:
+        if self._writer is not None:
+            self._writer.close()
+            try:
+                await self._writer.wait_closed()
+            except (ConnectionResetError, BrokenPipeError):
+                pass
+            self._writer = None
+
+    async def __aenter__(self) -> "ServeClient":
+        return await self.connect()
+
+    async def __aexit__(self, exc_type, exc, tb) -> None:
+        await self.close()
+
+    async def _send(self, obj: Dict) -> None:
+        self._writer.write(json.dumps(obj).encode() + b"\n")
+        await self._writer.drain()
+
+    async def _recv(self) -> Dict:
+        line = await self._reader.readline()
+        if not line:
+            raise ConnectionError("server closed the connection")
+        return json.loads(line)
+
+    async def request(self, prompt: Sequence[int],
+                      deadline_ms: Optional[float] = None,
+                      cancel_after: Optional[int] = None,
+                      on_event=None,
+                      **params) -> List[Dict]:
+        """Submit one request and consume its stream to the end.  Returns
+        every event line (the ack excluded); the last has ``finished: true``.
+        ``params`` are protocol fields (max_tokens / temperature / ...);
+        ``cancel_after=k`` sends an explicit cancel once ``k`` tokens have
+        streamed (exercises mid-flight cancellation); ``on_event`` is called
+        with each event dict as it arrives (per-token streaming)."""
+        msg = {"prompt": list(map(int, prompt)), **params}
+        if deadline_ms is not None:
+            msg["deadline_ms"] = deadline_ms
+        await self._send(msg)
+        ack = await self._recv()
+        if ack.get("finished"):
+            if on_event is not None:
+                on_event(ack)
+            return [ack]                        # rejected (backpressure)
+        uid = ack["uid"]
+        events: List[Dict] = []
+        seen = 0
+        while True:
+            out = await self._recv()
+            events.append(out)
+            if on_event is not None:
+                on_event(out)
+            if out.get("finished"):
+                return events
+            seen += 1
+            if cancel_after is not None and seen >= cancel_after:
+                await self._send({"cancel": uid})
+                cancel_after = None              # send it once

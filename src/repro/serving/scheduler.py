@@ -17,6 +17,15 @@ the resident-token count while prefilling, ``prompt_len + generated - 1``
 once decoding.  ``prefill_remaining()`` exposes the per-slot backlog.
 ``prefill_chunk == 0`` plans the whole remaining prompt as one chunk — the
 stop-the-world admission-prefill semantics, kept as the parity reference.
+``prefill_budget`` caps the **total** chunk tokens per step across slots
+(not just per slot): a burst of long prompts stalls past the budget instead
+of fattening the fused step and starving decode latency.
+
+Requests can also end from the outside: ``cancel(uid)`` removes a queued
+request or frees a live slot (mid-prefill included) with
+``FinishReason.CANCELLED`` / ``DEADLINE``, releasing its blocks through the
+same ``_free`` path as a finish — prefix-cache-published progress stays
+resident.
 
 Cache layouts (engine-selected):
 
@@ -108,12 +117,16 @@ class Scheduler:
                  bucket_min: int = 8,
                  allocator: Optional[BlockAllocator] = None,
                  prefix_cache: Optional[RadixPrefixCache] = None,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0,
+                 prefill_budget: Optional[int] = None):
         if prefix_cache is not None and allocator is None:
             raise ValueError("prefix_cache requires the paged allocator")
         if prefill_chunk < 0:
             raise ValueError(f"prefill_chunk={prefill_chunk} must be >= 0 "
                              "(0 = whole-prompt chunks)")
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError(f"prefill_budget={prefill_budget} must be >= 1 "
+                             "or None (a 0 budget would never prefill)")
         self.n_slots = n_slots
         self.max_len = max_len
         self.eos_id = eos_id
@@ -121,6 +134,11 @@ class Scheduler:
         # chunk-width bucketing itself happens engine-side
         self.bucket_min = bucket_min
         self.prefill_chunk = prefill_chunk
+        # cap on *total* chunk tokens planned per engine step, across all
+        # prefilling slots (None = per-slot prefill_chunk only): bounds the
+        # whole step's prefill work so a burst of long prompts cannot starve
+        # decode latency; slots past the budget stall for the step
+        self.prefill_budget = prefill_budget
         self.waiting: Deque[GenerationRequest] = deque()
         # uid -> arrival sequence number; preemption reinserts by arrival
         # order so an older request is never overtaken (strict FIFO even
@@ -269,37 +287,55 @@ class Scheduler:
             self.admissions += 1
         return admitted, rejected
 
+    def _cover(self, start: int, n: int, completes: bool) -> int:
+        """Positions an ``n``-token chunk from ``start`` must have allocated:
+        the chunk's writes, plus the next decode write when the chunk
+        completes the prompt (positions >= max_len are never written, so the
+        capacity edge needs no phantom block)."""
+        return min(start + n + (1 if completes else 0), self.max_len)
+
     def _chunk_cover(self, start: int, total: int) -> int:
-        """Positions the slot's allocation must cover to run its next chunk
-        from ``start``: the chunk's writes, plus the next decode write when
-        the chunk completes the prompt (positions >= max_len are never
-        written, so the capacity edge needs no phantom block)."""
+        """Cover for the slot's next *unclipped* chunk from ``start``
+        (admission's first-chunk allocation; the per-step ``prefill_budget``
+        clip is applied later, in :meth:`next_chunks`)."""
         suffix = total - start
         n = suffix if self.prefill_chunk <= 0 else min(self.prefill_chunk,
                                                        suffix)
-        return min(start + n + (1 if n == suffix else 0), self.max_len)
+        return self._cover(start, n, completes=n == suffix)
 
     def next_chunks(self) -> Dict[int, int]:
         """Plan this step's prefill work: {slot: chunk length} for every
         prefilling slot, each up to ``prefill_chunk`` tokens (0 = the whole
-        remainder).  On the paged path the slot's allocation is grown to
-        cover the chunk first; if the pool cannot (even after prefix-cache
-        eviction), the half-prefilled slot is preempted — its published
-        blocks let the resume skip the recompute when the cache is on."""
+        remainder).  ``prefill_budget`` additionally caps the *sum* of chunk
+        tokens across slots: planning walks slots in order, clipping the last
+        funded chunk and stalling the rest for this step (a stalled slot
+        stays admitted and resumes next step — decode rows never consume
+        budget, so one burst of long prompts cannot fatten every step).  On
+        the paged path the slot's allocation is grown to cover the chunk
+        first; if the pool cannot (even after prefix-cache eviction), the
+        half-prefilled slot is preempted — its published blocks let the
+        resume skip the recompute when the cache is on."""
         plan: Dict[int, int] = {}
+        budget = self.prefill_budget
         for slot, req in enumerate(self.slots):
             if req is None or not self.pending[slot]:
                 continue
             remaining = len(self.pending[slot])
             n = remaining if self.prefill_chunk <= 0 else min(
                 self.prefill_chunk, remaining)
+            if budget is not None:
+                if budget <= 0:
+                    continue               # stalled: over budget this step
+                n = min(n, budget)
             if self.allocator is not None:
                 start = int(self.positions[slot])
-                need = self.allocator.blocks_for(
-                    self._chunk_cover(start, start + remaining))
+                need = self.allocator.blocks_for(self._cover(
+                    start, n, completes=n == remaining))
                 if not self._grow_to(slot, need):
                     self._preempt(slot)
                     continue
+            if budget is not None:
+                budget -= n
             plan[slot] = n
         return plan
 
@@ -350,7 +386,48 @@ class Scheduler:
         self.temperatures[slot] = 0.0
         self.top_ps[slot] = 1.0
 
+    # -- cancellation ----------------------------------------------------------
+
+    def cancel(self, uid: int, reason: FinishReason = FinishReason.CANCELLED,
+               ) -> Optional[StepOutput]:
+        """End a request from the outside — still queued, mid-prefill, or
+        mid-decode.  Frees its slot and releases its blocks (``_free``: with
+        a prefix cache the fully written prefix is *published*, so even a
+        half-prefilled cancellation leaves its progress resident for future
+        identical prompts).  Returns the terminal marker StepOutput, or None
+        if the uid is not live here (already finished, or never submitted).
+        The caller (engine) guarantees no further StepOutputs are emitted
+        for this uid — any in-flight step's row is discarded on commit."""
+        for i, req in enumerate(self.waiting):
+            if req.uid == uid:
+                del self.waiting[i]
+                self._arrival.pop(uid, None)
+                req.finish_reason = reason
+                return StepOutput(uid=uid, token=-1, index=req.num_generated,
+                                  finished=True, finish_reason=reason)
+        for slot, req in enumerate(self.slots):
+            if req is not None and req.uid == uid:
+                req.finish_reason = reason
+                self._arrival.pop(uid, None)
+                self._free(slot)
+                return StepOutput(uid=uid, token=-1, index=req.num_generated,
+                                  finished=True, finish_reason=reason)
+        return None
+
     # -- per-token lifecycle ---------------------------------------------------
+
+    def pregrow_decode(self, slot: int) -> bool:
+        """Grow the slot's allocation to cover its *next* decode write
+        (position ``positions[slot] + 1``) ahead of time — the async loop's
+        speculative launch calls this before dispatching step N+1 while step
+        N is still on the device; ``record()``'s own growth then finds the
+        block already present (``_grow_to`` is idempotent)."""
+        if self.allocator is None:
+            return True
+        nxt = int(self.positions[slot]) + 1
+        if nxt > self.max_len - 1:      # never written: LENGTH fires first
+            return True
+        return self._grow_to(slot, nxt // self.allocator.block_size + 1)
 
     def record(self, slot: int, token: int) -> StepOutput:
         """Append one generated token to the slot's request, apply stop

@@ -1,0 +1,179 @@
+"""Cancellation lifecycle: a request must be killable at every point of its
+life — still queued, mid-prefill (chunks pending), mid-decode — with its slot
+freed and its KV blocks returned immediately, no StepOutputs after the
+terminal marker, and (with a prefix cache) its already-written prefix
+published for future identical prompts."""
+import jax
+import pytest
+
+from repro.models import build_model, get_config
+from repro.serving.api import (FinishReason, GenerationRequest,
+                               SamplingParams)
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.paged import BlockAllocator
+from repro.serving.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_config("qwen1.5-0.5b").reduced(layers=2).replace(
+        compute_dtype="float32", param_dtype="float32")
+    return cfg, build_model(cfg).init(jax.random.PRNGKey(0))
+
+
+class TestSchedulerCancel:
+    """Unit level: Scheduler.cancel bookkeeping, no model involved."""
+
+    def _sched(self, chunk=4):
+        alloc = BlockAllocator(num_blocks=17, block_size=4)
+        return alloc, Scheduler(n_slots=2, max_len=32, eos_id=99,
+                                allocator=alloc, prefill_chunk=chunk)
+
+    def test_cancel_while_queued(self):
+        _, sc = self._sched()
+        sc.submit(GenerationRequest(uid=0, prompt=[1, 2, 3],
+                                    params=SamplingParams()))
+        out = sc.cancel(0)
+        assert out is not None and out.finished
+        assert out.finish_reason == FinishReason.CANCELLED
+        assert out.token == -1 and out.index == 0
+        assert not sc.waiting and not sc.has_work()
+
+    def test_cancel_mid_prefill_frees_blocks(self):
+        alloc, sc = self._sched(chunk=4)
+        sc.submit(GenerationRequest(uid=0, prompt=list(range(1, 13)),
+                                    params=SamplingParams()))
+        sc.admit()
+        chunks = sc.next_chunks()
+        assert chunks == {0: 4}
+        sc.advance_prefill(0, 4)
+        assert sc.prefill_remaining(0) == 8      # genuinely mid-prefill
+        assert alloc.blocks_in_use() > 0
+        out = sc.cancel(0)
+        assert out.finish_reason == FinishReason.CANCELLED
+        assert sc.slots[0] is None
+        assert alloc.blocks_in_use() == 0        # every block returned
+
+    def test_cancel_unknown_uid_is_none(self):
+        _, sc = self._sched()
+        assert sc.cancel(123) is None
+        # cancelling twice: the second call is a no-op
+        sc.submit(GenerationRequest(uid=0, prompt=[1], params=SamplingParams()))
+        assert sc.cancel(0) is not None
+        assert sc.cancel(0) is None
+
+    def test_pregrow_decode_is_idempotent_with_record(self):
+        alloc, sc = self._sched(chunk=0)
+        sc.submit(GenerationRequest(uid=0, prompt=[1, 2, 3, 4],
+                                    params=SamplingParams(max_tokens=8)))
+        sc.admit()
+        sc.next_chunks()
+        sc.advance_prefill(0, 4)
+        for tok in (7, 8, 9, 10):                # next write position -> 7
+            sc.record(0, token=tok)
+        # the write after next (position 8) crosses into an unallocated block
+        before = alloc.blocks_in_use()
+        assert sc.pregrow_decode(0)
+        assert alloc.blocks_in_use() == before + 1
+        sc.record(0, token=11)                   # record's growth: no-op
+        assert alloc.blocks_in_use() == before + 1
+
+
+class TestEngineCancel:
+    """Engine level: cancel through the full step loop, with emitted-output
+    and block-leak assertions."""
+
+    def _engine(self, lm, **scfg_kw):
+        cfg, params = lm
+        kw = dict(max_batch=2, max_len=48, kv_block_size=4, paged=True)
+        kw.update(scfg_kw)
+        return Engine(cfg, params, ServeConfig(**kw))
+
+    def test_cancel_while_queued(self, lm):
+        eng = self._engine(lm, max_batch=1)
+        sp = SamplingParams(max_tokens=3, ignore_eos=True)
+        events = []
+        a = eng.submit([1, 2, 3], sp)
+        b = eng.submit([4, 5, 6], sp, on_token=events.append)
+        eng.step()                               # admits A only; B queued
+        out = eng.cancel(b.uid)
+        assert out.finish_reason == FinishReason.CANCELLED
+        assert b.done and b.output_tokens == []
+        for _ in eng.stream():                   # drain A
+            pass
+        assert a.done and a.num_generated == 3
+        # B's callback saw exactly the terminal marker, nothing else
+        assert [e.uid for e in events] == [b.uid]
+        assert events[0].token == -1 and events[0].finished
+        assert eng.stats().cancellations == 1
+        assert eng.allocator.blocks_in_use() == 0
+
+    def test_cancel_mid_prefill(self, lm):
+        eng = self._engine(lm, prefill_chunk=4)
+        events = []
+        req = eng.submit(list(range(1, 13)),
+                         SamplingParams(max_tokens=4, ignore_eos=True),
+                         on_token=events.append)
+        eng.step()                               # one chunk: 4 of 12 filled
+        assert eng.sched.prefill_remaining(0) == 8
+        assert eng.allocator.blocks_in_use() > 0
+        eng.cancel(req.uid)
+        assert req.done and req.finish_reason == FinishReason.CANCELLED
+        assert eng.allocator.blocks_in_use() == 0
+        assert not eng.has_pending()
+        # stepping on past the cancel emits nothing further for this uid
+        n_events = len(events)
+        for _ in range(3):
+            assert eng.step() == []
+        assert len(events) == n_events
+
+    def test_cancel_mid_decode_keeps_streamed_tokens(self, lm):
+        eng = self._engine(lm, max_batch=1)
+        events = []
+        req = eng.submit([1, 2, 3, 4],
+                         SamplingParams(max_tokens=40, ignore_eos=True),
+                         on_token=events.append)
+        while req.num_generated < 3:
+            eng.step()
+        streamed = list(req.output_tokens)
+        eng.cancel(req.uid)
+        assert req.finish_reason == FinishReason.CANCELLED
+        assert req.output_tokens == streamed     # progress kept
+        assert events[-1].token == -1 and events[-1].finished
+        assert events[-1].index == len(streamed)
+        n_events = len(events)
+        for _ in range(3):
+            assert eng.step() == []
+        assert len(events) == n_events
+        assert eng.allocator.blocks_in_use() == 0
+        assert eng.stats().tokens_generated == len(streamed)
+
+    def test_cancel_mid_prefill_publishes_prefix(self, lm):
+        eng = self._engine(lm, prefill_chunk=8, prefix_cache=True)
+        prompt = list(range(1, 13))
+        req = eng.submit(prompt, SamplingParams(max_tokens=2,
+                                                ignore_eos=True))
+        eng.step()                               # 8 of 12 prefilled
+        eng.cancel(req.uid)
+        # the two fully written blocks survive as published prefix
+        cached = eng.prefix_cache.stats()["cached_unreferenced_blocks"]
+        assert cached == 2
+        assert eng.allocator.blocks_in_use() == cached
+        # an identical prompt reuses them instead of re-prefilling
+        skipped0 = eng._prefill_skipped
+        req2 = eng.submit(prompt, SamplingParams(max_tokens=2,
+                                                 ignore_eos=True))
+        for _ in eng.stream():
+            pass
+        assert req2.done and req2.num_generated == 2
+        assert eng._prefill_skipped - skipped0 == 8
+
+    def test_deadline_counted_separately_from_cancel(self, lm):
+        eng = self._engine(lm)
+        req = eng.submit([1, 2, 3], SamplingParams(max_tokens=4),
+                         deadline_s=0.0)
+        outs = eng.step()                        # expiry swept at plan time
+        assert [o.finish_reason for o in outs] == [FinishReason.DEADLINE]
+        assert req.done
+        st = eng.stats()
+        assert st.deadline_expirations == 1 and st.cancellations == 0

@@ -316,3 +316,99 @@ class TestPacked:
         packed = linear_bytes(pparams, "w_packed")
         assert packed > 0
         assert packed * 7 < full  # fp32 w -> uint8/4: ~16x; vs bf16: 8x
+
+
+class TestPrefillBudget:
+    """Per-step prefill token budget: caps the *sum* of chunk tokens across
+    slots per step; unfunded slots stall (stay admitted, resume next step)."""
+
+    def _sched(self, chunk, budget, n_slots=3):
+        from repro.serving.paged import BlockAllocator
+        alloc = BlockAllocator(num_blocks=33, block_size=4)
+        return Scheduler(n_slots=n_slots, max_len=32, eos_id=99,
+                         allocator=alloc, prefill_chunk=chunk,
+                         prefill_budget=budget)
+
+    def test_budget_caps_sum_across_slots(self):
+        sc = self._sched(chunk=8, budget=10)
+        for uid in range(3):
+            sc.submit(GenerationRequest(uid=uid, prompt=list(range(1, 13)),
+                                        params=SamplingParams()))
+        sc.admit()
+        # slot 0 gets its full chunk (8), slot 1 the clipped remainder (2),
+        # slot 2 stalls entirely
+        assert sc.next_chunks() == {0: 8, 1: 2}
+
+    def test_stalled_slots_resume_next_step(self):
+        sc = self._sched(chunk=8, budget=10)
+        for uid in range(3):
+            sc.submit(GenerationRequest(uid=uid, prompt=list(range(1, 13)),
+                                        params=SamplingParams()))
+        sc.admit()
+        for slot, n in sc.next_chunks().items():
+            sc.advance_prefill(slot, n)
+        # next step: planning restarts at slot 0's backlog, slot 2 is funded
+        # once earlier slots shrink
+        assert sc.next_chunks() == {0: 4, 1: 6}
+        for slot, n in {0: 4, 1: 6}.items():
+            sc.advance_prefill(slot, n)
+        assert sc.next_chunks() == {1: 4, 2: 6}
+
+    def test_unchunked_prefill_also_budgeted(self):
+        # chunk=0 means "whole remainder", still clipped by the budget
+        sc = self._sched(chunk=0, budget=10)
+        for uid in range(2):
+            sc.submit(GenerationRequest(uid=uid, prompt=list(range(1, 13)),
+                                        params=SamplingParams()))
+        sc.admit()
+        assert sc.next_chunks() == {0: 10}
+
+    def test_budget_validation(self, small_lm):
+        cfg, _, params = small_lm
+        with pytest.raises(ValueError, match="prefill_budget"):
+            Engine(cfg, params, ServeConfig(max_batch=2, max_len=32,
+                                            prefill_budget=0))
+
+    def test_budget_outputs_match_unbudgeted(self, small_lm):
+        """Stalled rows ride the fused step as emit-less pad rows — they must
+        not perturb anyone's tokens (greedy parity vs no budget)."""
+        cfg, _, params = small_lm
+        prompts = [list(range(1, 14)), list(range(3, 12)),
+                   list(range(5, 17))]
+        sp = SamplingParams(max_tokens=4, ignore_eos=True)
+
+        def run(budget):
+            eng = Engine(cfg, params, ServeConfig(
+                max_batch=3, max_len=48, kv_block_size=4, paged=True,
+                prefill_chunk=4, prefill_budget=budget))
+            reqs = [eng.submit(p, sp) for p in prompts]
+            for _ in eng.stream():
+                pass
+            assert eng.allocator.blocks_in_use() == 0
+            return eng, [r.output_tokens for r in reqs]
+
+        eng_b, got = run(budget=6)       # forces stalls: 3 slots x chunk 4
+        _, want = run(budget=None)
+        assert got == want
+
+
+class TestEngineStats:
+    def test_latency_and_counter_fields(self, small_lm):
+        cfg, _, params = small_lm
+        eng = Engine(cfg, params, ServeConfig(max_batch=2, max_len=32,
+                                              kv_block_size=4))
+        sp = SamplingParams(max_tokens=3, ignore_eos=True)
+        reqs = [eng.submit([1, 2, 3], sp), eng.submit([4, 5], sp)]
+        for _ in eng.stream():
+            pass
+        st = eng.stats()
+        assert st.tokens_generated == sum(r.num_generated for r in reqs) == 6
+        assert st.queue_depth == 0
+        assert st.steps_committed > 0
+        assert st.steps_overlapped == 0          # sync loop never overlaps
+        for sample in (st.queue_wait_ms, st.e2e_latency_ms, st.ttft_ms,
+                       st.step_gap_ms):
+            assert sample is not None
+            assert set(sample) == {"mean", "p50", "p95", "p99"}
+        assert st.e2e_latency_ms["p50"] >= st.queue_wait_ms["p50"]
+        assert st.cancellations == 0 and st.deadline_expirations == 0
