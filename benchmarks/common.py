@@ -21,6 +21,25 @@ from repro.models.base import ModelConfig
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 RESULTS.mkdir(exist_ok=True)
 
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def write_bench_serving(update: Dict, fresh: bool = False) -> None:
+    """The one canonical BENCH_serving.json writer: merge ``update`` into the
+    document and emit both copies — benchmarks/results/ (the CI artifact) and
+    the repo root (so the bench trajectory is visible without digging into
+    artifacts).  ``serving_decode_bench`` writes the base document fresh
+    (``fresh=True``); the prefix-cache / chunked-prefill / loadgen benches
+    fold their sections into it."""
+    path = RESULTS / "BENCH_serving.json"
+    doc: Dict = {}
+    if not fresh and path.exists():
+        doc = json.loads(path.read_text())
+    doc.update(update)
+    text = json.dumps(doc, indent=1)
+    path.write_text(text)
+    (REPO_ROOT / "BENCH_serving.json").write_text(text)
+
 # ~1M-param student: big enough to learn the synthetic tasks, small enough
 # for CPU benchmarking.  qwen3-family shape (qk_norm) like the paper's base.
 TINY = ModelConfig(name="bench-tiny", family="dense", vocab=288, d_model=128,

@@ -40,7 +40,7 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
-from benchmarks.speed_memory import _write_bench_serving
+from benchmarks.common import write_bench_serving
 from repro.models import build_model, get_config
 from repro.serving.api import SamplingParams
 from repro.serving.async_engine import AsyncEngine, drive_requests
@@ -48,12 +48,13 @@ from repro.serving.engine import Engine, ServeConfig
 from repro.serving.frontend import FrontendServer, ServeClient
 
 
-def _build_engine() -> Engine:
+def _build_engine(sanitize: bool = False) -> Engine:
     cfg = get_config("qwen1.5-0.5b").reduced(layers=2).replace(
         compute_dtype="float32", param_dtype="float32")
     params = build_model(cfg).init(jax.random.PRNGKey(0))
     return Engine(cfg, params, ServeConfig(
-        max_batch=4, max_len=64, kv_block_size=8, prefill_chunk=16))
+        max_batch=4, max_len=64, kv_block_size=8, prefill_chunk=16,
+        sanitize=sanitize))
 
 
 def _fuzzed_schedule(rng, n, max_tokens, jitter_s=0.005):
@@ -142,7 +143,7 @@ def async_overlap_bench(n_requests: int = 8, max_tokens: int = 12) -> dict:
                 "next dispatch; overlapped steps dispatched before the "
                 "previous sync (gap 0)",
     }
-    _write_bench_serving({"async_overlap": out})
+    write_bench_serving({"async_overlap": out})
     return out
 
 
@@ -227,7 +228,7 @@ def goodput_bench(n_requests: int = 12,
                 "deadline per wall second; cancelled / expired / rejected "
                 "requests are goodput misses by construction",
     }
-    _write_bench_serving({"goodput": out})
+    write_bench_serving({"goodput": out})
     return out
 
 
@@ -272,15 +273,17 @@ def saturation_bench(requests_per_client: int = 3,
         "note": "closed loop: each client holds exactly one request in "
                 "flight; throughput saturates once clients >= max_batch",
     }
-    _write_bench_serving({"saturation": out})
+    write_bench_serving({"saturation": out})
     return out
 
 
-def smoke() -> None:
+def smoke(sanitize: bool = False) -> None:
     """CI smoke: server up, four client behaviors (normal, expired deadline,
     explicit cancel, disconnect) through the real TCP endpoint, block
-    accounting back to zero.  Seconds, not minutes."""
-    eng = _build_engine()
+    accounting back to zero.  Seconds, not minutes.  With ``sanitize=True``
+    the whole run executes under the shadow block-pool (every transition and
+    write-set validated; a violation raises SanitizerError)."""
+    eng = _build_engine(sanitize=sanitize)
 
     async def main() -> None:
         async with AsyncEngine(eng, max_queue=8) as aeng:
@@ -320,9 +323,16 @@ def smoke() -> None:
         assert st.deadline_expirations >= 1, st
         assert eng.allocator.blocks_in_use() == 0, \
             f"leaked blocks: {eng.allocator.blocks_in_use()}"
+        if eng.shadow is not None:
+            eng.shadow.assert_drained()           # zero OWNED/SHARED blocks
+        tail = ""
+        if st.sanitizer is not None:
+            tail = (f" sanitized(transitions={st.sanitizer['transitions']} "
+                    f"write_checks={st.sanitizer['write_checks']})")
         print(f"serve smoke OK: cancellations={st.cancellations} "
               f"deadline_expirations={st.deadline_expirations} "
-              f"steps_overlapped={st.steps_overlapped}/{st.steps_committed}")
+              f"steps_overlapped={st.steps_overlapped}/{st.steps_committed}"
+              + tail)
 
     asyncio.run(main())
 
@@ -332,9 +342,12 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast end-to-end server check (CI)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run the smoke under the shadow block-pool "
+                         "sanitizer (repro.analysis)")
     a = ap.parse_args()
     if a.smoke:
-        smoke()
+        smoke(sanitize=a.sanitize)
     else:
         out = {"async_overlap": async_overlap_bench(),
                "goodput": goodput_bench(),

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import RESULTS, cached, emit
+from benchmarks.common import RESULTS, cached, emit, write_bench_serving
 from repro.core import quant as Q
 from repro.models.base import get_config
 
@@ -265,27 +265,8 @@ def serving_decode_bench(n_requests: int = 8, max_tokens: int = 8) -> dict:
                 "KV bytes are the analytic per-step traffic model shared "
                 "with launch/roofline.py",
     }
-    _write_bench_serving(out, fresh=True)
+    write_bench_serving(out, fresh=True)
     return out
-
-
-REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
-
-
-def _write_bench_serving(update: dict, fresh: bool = False) -> None:
-    """Merge ``update`` into BENCH_serving.json — written both under
-    benchmarks/results/ (the CI artifact) and at the repo root, so the bench
-    trajectory is visible without digging into artifacts.
-    ``serving_decode_bench`` writes the base document fresh; the prefix-cache
-    and chunked-prefill benches fold their sections into it."""
-    path = RESULTS / "BENCH_serving.json"
-    doc = {}
-    if not fresh and path.exists():
-        doc = json.loads(path.read_text())
-    doc.update(update)
-    text = json.dumps(doc, indent=1)
-    path.write_text(text)
-    (REPO_ROOT / "BENCH_serving.json").write_text(text)
 
 
 def prefix_cache_bench(n_requests: int = 10, max_tokens: int = 6) -> dict:
@@ -366,7 +347,7 @@ def prefix_cache_bench(n_requests: int = 10, max_tokens: int = 6) -> dict:
                 "admission prefill scan (FLOPs proxy); peak KV bytes count "
                 "request-referenced blocks, shared prefix blocks once",
     }
-    _write_bench_serving({"prefix_cache": out})
+    write_bench_serving({"prefix_cache": out})
     return out
 
 
@@ -525,7 +506,7 @@ def chunked_prefill_bench(chunk: int = 16, prompt_len: int = 72,
                 "model shared with launch/roofline.py — fused reads "
                 "O(resident tokens) per chunk, gather the dense window",
     }
-    _write_bench_serving({"chunked_prefill": out})
+    write_bench_serving({"chunked_prefill": out})
     return out
 
 

@@ -1,0 +1,27 @@
+"""Correctness tooling for the serving stack: static lint, a runtime
+block-pool sanitizer, and a retrace watchdog.
+
+Three layers, all runnable via ``python -m repro.analysis`` (see
+``__main__.py``) and gated in CI:
+
+* :mod:`repro.analysis.lint` — AST-based rules over ``src/``: host-device
+  syncs reachable from the engine's hot plan/launch/commit path, bare
+  ``assert`` in library code, jit hygiene, and per-package Pallas kernel
+  rules (BlockSpec alignment, ``input_output_aliases`` covering scatter
+  outputs, kernel/ref signature parity).
+* :mod:`repro.analysis.shadow` — an ASan-style shadow-state machine
+  mirroring :class:`~repro.serving.paged.BlockAllocator`
+  (FREE/OWNED/SHARED/PUBLISHED/TRASH) that validates every
+  alloc/free/share/publish transition plus engine-level write-sets, enabled
+  with ``ServeConfig(sanitize=True)``.
+* :mod:`repro.analysis.retrace` — wraps the engine's jitted impls and fails
+  when steady-state steps recompile.
+
+This package must stay importable without jax: ``lint`` is pure
+``ast``/stdlib and ``shadow`` is numpy-free pure Python, so the CI lint gate
+needs no accelerator stack.  Only ``retrace`` (and the dynamic smokes in
+``__main__``) touch jax, and they import it lazily.
+"""
+from repro.analysis.shadow import BlockState, SanitizerError, ShadowBlockPool
+
+__all__ = ["BlockState", "SanitizerError", "ShadowBlockPool"]

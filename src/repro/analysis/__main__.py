@@ -1,0 +1,182 @@
+"""CLI for the analysis gate: ``python -m repro.analysis``.
+
+Default run (what CI gates on) is jax-free and fast:
+
+1. the static lint over ``src/repro`` — unsuppressed, un-baselined
+   findings fail with exit code 1;
+2. the shadow-pool protocol self-test — a scripted clean request
+   lifecycle must pass, then seeded mutations (a dropped trie reference,
+   a scatter into a published block, a recycled live block) must each be
+   *caught*; a sanitizer that misses its seeded bugs is itself a failure.
+
+Flags:
+
+* ``--write-baseline``  regenerate ``analysis/baseline.json`` from the
+  current findings (grandfathers them; the gate then fails only on new
+  violations).
+* ``--retrace-smoke``   also self-test the retrace watchdog against a
+  tiny jitted function (imports jax).
+* ``--verbose``         list suppressed and baselined findings too.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.lint import (RULES, default_baseline_path, run_lint,
+                                 write_baseline)
+from repro.analysis.shadow import SanitizerError, ShadowBlockPool
+
+
+def _expect_raise(what: str, fn) -> bool:
+    try:
+        fn()
+    except SanitizerError:
+        print(f"  caught : {what}")
+        return True
+    print(f"  MISSED : {what} — the sanitizer did not fire", file=sys.stderr)
+    return False
+
+
+def shadow_selftest() -> bool:
+    """Exercise the full block lifecycle cleanly, then seed mutations the
+    shadow must catch.  Mirrors the serving protocol without importing it."""
+    ok = True
+
+    # -- clean lifecycle: admit -> publish -> second reader -> drain --------
+    sh = ShadowBlockPool(num_blocks=8, block_size=4)
+    sh.on_alloc([1, 2])          # admission allocates a private suffix
+    sh.claim(slot=0, ids=[1, 2])
+    sh.check_write(0, 1)         # chunk scatters into owned blocks: legal
+    sh.check_write(0, 2)
+    sh.on_share(1, 2)            # trie takes its reference as block 1 fills
+    sh.publish(1)
+    sh.on_alloc([3])             # a second request: prefix hit on block 1
+    sh.claim(1, [3])
+    sh.on_share(1, 3)
+    sh.attach_reader(1, 1)
+    sh.check_write(1, 3)
+    sh.on_free(1, 2)             # request 0 finishes
+    sh.on_free(2, 0)
+    sh.on_free(1, 1)             # request 1 finishes; block 1 trie-only
+    sh.on_free(3, 0)
+    try:
+        sh.assert_drained()
+        print("  clean lifecycle: alloc/claim/publish/share/drain ok")
+    except SanitizerError as e:
+        print(f"  FAILED clean lifecycle: {e}", file=sys.stderr)
+        ok = False
+
+    # -- mutation 1: scatter into a published block -------------------------
+    sh = ShadowBlockPool(8, 4)
+    sh.on_alloc([1])
+    sh.claim(0, [1])
+    sh.on_share(1, 2)
+    sh.publish(1)
+    ok &= _expect_raise("write into a published prefix block",
+                        lambda: sh.check_write(0, 1))
+
+    # -- mutation 2: trie reference dropped without unpublish ---------------
+    sh = ShadowBlockPool(8, 4)
+    sh.on_alloc([1])
+    sh.claim(0, [1])
+    sh.on_share(1, 2)
+    sh.publish(1)
+    sh.on_free(1, 1)             # slot lets go; block is trie-only now
+    ok &= _expect_raise("published block freed without evicting the node",
+                        lambda: sh.on_free(1, 0))
+
+    # -- mutation 3: allocator recycles a block that still has a holder -----
+    sh = ShadowBlockPool(8, 4)
+    sh.on_alloc([1])
+    sh.claim(0, [1])
+    ok &= _expect_raise("re-allocation of a live block",
+                        lambda: sh.on_alloc([1]))
+
+    # -- mutation 4: a slot writes a block another slot owns ----------------
+    sh = ShadowBlockPool(8, 4)
+    sh.on_alloc([1])
+    sh.claim(0, [1])
+    ok &= _expect_raise("cross-slot write into an exclusively-owned block",
+                        lambda: sh.check_write(1, 1))
+    return ok
+
+
+def retrace_selftest() -> bool:
+    """Watchdog mechanics against a tiny jitted fn (imports jax)."""
+    import jax.numpy as jnp
+
+    from repro.analysis.retrace import RetraceError, RetraceWatchdog
+
+    class _Stub:
+        _jit_specs = {"_f": (lambda x: x * 2, ())}
+
+    stub = _Stub()
+    wd = RetraceWatchdog.attach(stub)
+    x = jnp.ones((4,), jnp.float32)
+    stub._f(x)
+    stub._f(x)                      # cache hit: no new trace
+    wd.check()
+    if wd.traces_per_impl() != {"_f": 1}:
+        print(f"  FAILED: expected one trace, saw {wd.traces_per_impl()}",
+              file=sys.stderr)
+        return False
+    wd.freeze()
+    stub._f(jnp.ones((8,), jnp.float32))   # new signature after freeze
+    try:
+        wd.check()
+    except RetraceError:
+        print("  caught : post-freeze retrace on a new signature")
+        return True
+    print("  MISSED : post-freeze retrace not flagged", file=sys.stderr)
+    return False
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static lint + sanitizer/watchdog self-tests")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="grandfather current findings into baseline.json")
+    ap.add_argument("--retrace-smoke", action="store_true",
+                    help="also self-test the retrace watchdog (needs jax)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="list suppressed/baselined findings too")
+    args = ap.parse_args(argv)
+
+    if args.write_baseline:
+        path = write_baseline()
+        print(f"wrote {path}")
+        return 0
+
+    rc = 0
+    print(f"lint: {len(RULES)} rules over src/repro "
+          f"(baseline: {default_baseline_path().name})")
+    res = run_lint()
+    for f in res.active:
+        print(f"  {f.render()}", file=sys.stderr)
+    if args.verbose:
+        for f in res.suppressed:
+            print(f"  suppressed: {f.render()}")
+        for f in res.baselined:
+            print(f"  baselined : {f.render()}")
+    print(f"  {len(res.active)} active, {len(res.suppressed)} suppressed, "
+          f"{len(res.baselined)} baselined")
+    if not res.ok:
+        rc = 1
+
+    print("shadow pool self-test:")
+    if not shadow_selftest():
+        rc = 1
+
+    if args.retrace_smoke:
+        print("retrace watchdog self-test:")
+        if not retrace_selftest():
+            rc = 1
+
+    print("analysis: " + ("ok" if rc == 0 else "FAILED"))
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

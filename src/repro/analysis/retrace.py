@@ -1,0 +1,109 @@
+"""Retrace watchdog: fail when steady-state serving steps recompile.
+
+``jax.jit`` retraces (and recompiles) whenever a call arrives with an
+argument signature — shapes, dtypes, weak-type flags — it has not seen.
+The engine *designs* for a bounded signature set: chunk lengths and block-
+table widths bucket to powers of two precisely so the trace count is
+O(log(max_len)), and a steady-state pure-decode workload must hit a single
+cached executable every step.  A silent regression here (a host scalar
+sneaking into a traced argument, an un-bucketed width, a dtype flapping
+between weak and strong) shows up as multi-second compile stalls in
+production — long after the PR that caused it.
+
+:meth:`RetraceWatchdog.attach` rebuilds the engine's jitted impls (the
+``Engine._jit_specs`` registry) with a trace-counting wrapper around each
+Python impl.  The wrapped function body only executes when jax actually
+*traces* — cache hits never reach Python — so every execution is exactly
+one (re)compile.  The watchdog records a count per ``(impl, signature)``:
+
+* at any time, a signature traced more than once is a hard violation
+  (the jit cache should have held it);
+* after :meth:`freeze` (the workload's steady state), tracing any *new*
+  signature is also a violation.
+
+``check()`` raises :class:`RetraceError` with the offending signatures;
+``counts`` is exposed for tests asserting "compiles exactly once".
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+
+class RetraceError(RuntimeError):
+    """A jitted serving impl recompiled when it should not have."""
+
+
+def _signature(args) -> Tuple:
+    """Hashable abstract signature of a call: (shape, dtype, weak_type) per
+    array-like leaf, the raw value for hashable statics."""
+    import jax
+
+    def leaf(x):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            return (tuple(x.shape), str(x.dtype),
+                    bool(getattr(x, "weak_type", False)))
+        return x
+
+    return tuple(leaf(x) for x in jax.tree_util.tree_leaves(args))
+
+
+class RetraceWatchdog:
+    def __init__(self):
+        # (impl name, signature) -> times traced
+        self.counts: Dict[Tuple[str, Tuple], int] = {}
+        self.frozen = False
+        self._violations: List[str] = []
+
+    def wrap(self, name: str, fn):
+        """Trace-counting wrapper: the body runs once per jax trace."""
+
+        def traced(*args, **kwargs):
+            key = (name, _signature(args))
+            n = self.counts.get(key, 0) + 1
+            self.counts[key] = n
+            if n > 1:
+                self._violations.append(
+                    f"{name} retraced (trace #{n}) for an already-seen "
+                    f"signature — the jit cache should have held it")
+            elif self.frozen:
+                self._violations.append(
+                    f"{name} traced a new signature after freeze() — "
+                    "steady-state steps must not recompile")
+            return fn(*args, **kwargs)
+
+        traced.__name__ = f"watchdog[{name}]"
+        return traced
+
+    @classmethod
+    def attach(cls, engine) -> "RetraceWatchdog":
+        """Rebuild ``engine``'s jitted impls with counting wrappers.  Call
+        before the first step (attaching later discards warm jit caches and
+        the already-compiled signatures would count as fresh traces)."""
+        import jax
+
+        wd = cls()
+        for attr, (impl, donate) in engine._jit_specs.items():
+            setattr(engine, attr,
+                    jax.jit(wd.wrap(attr, impl), donate_argnums=donate))
+        return wd
+
+    def freeze(self) -> None:
+        """Declare steady state: every signature the workload needs should
+        already be compiled; any further trace is a violation."""
+        self.frozen = True
+
+    def traces_per_impl(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for (name, _), n in self.counts.items():
+            out[name] = out.get(name, 0) + n
+        return out
+
+    @property
+    def violations(self) -> List[str]:
+        return list(self._violations)
+
+    def check(self) -> None:
+        if self._violations:
+            raise RetraceError(
+                "; ".join(self._violations)
+                + f" (traces so far: {self.traces_per_impl()})")

@@ -61,9 +61,14 @@ def w2a8_kernel(x: jax.Array, wp: jax.Array, gamma: jax.Array,
     """x [M, K]; wp uint8 [K//4, N]; gamma [M,1]; delta scalar -> y [M, N]."""
     m, k = x.shape
     kp, n = wp.shape
-    assert kp * 4 == k, (k, kp)
+    if kp * 4 != k:
+        raise ValueError(f"wp has {kp} packed rows but x has k={k} columns; "
+                         "pack_ternary packs 4 weights per byte, so wp must "
+                         "have exactly k/4 rows")
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
-    assert bk % 4 == 0
+    if bk % 4 != 0:
+        raise ValueError(f"bk={bk} must be a multiple of 4 to unpack whole "
+                         "bytes of 2-bit weights per K tile")
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
     return pl.pallas_call(
         functools.partial(_kernel, n_k=grid[2]),

@@ -85,12 +85,15 @@ def build_engine(args) -> Engine:
                        attn_impl=args.attn_impl,
                        block_kv=args.block_kv,
                        prefix_cache=args.prefix_cache,
-                       prefix_cache_blocks=args.prefix_cache_blocks)
+                       prefix_cache_blocks=args.prefix_cache_blocks,
+                       sanitize=args.sanitize)
     eng = Engine(cfg, params, scfg)
     mode = (f"paged bs={scfg.kv_block_size} blocks={scfg.pool_blocks()}"
             if eng.paged else "contiguous")
     if eng.prefix_cache is not None:
         mode += ", radix prefix cache"
+    if eng.shadow is not None:
+        mode += ", sanitized"
     print(f"[kv-cache] {mode}, {eng.kv_cache_bytes() / 2**20:.2f} MiB")
     if eng.paged:
         print(f"[attn] decode impl = {eng.attn_impl}"
@@ -289,6 +292,11 @@ def main(argv=None):
     ap.add_argument("--prefix-cache-blocks", type=int, default=None,
                     help="cap on blocks the prefix cache may keep resident "
                          "(default: unbounded, evict only on pool pressure)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="shadow the paged block pool (repro.analysis): "
+                         "validate every alloc/share/free/publish transition "
+                         "and each step's KV write-set; violations raise "
+                         "SanitizerError (debug/CI knob, paged only)")
     ap.add_argument("--shared-prefixes", type=int, default=0,
                     help="load-gen: draw every prompt from N shared system "
                          "prefixes plus a random tail (0 = fully random "

@@ -135,6 +135,11 @@ class EngineStats:
     ``prefix_cache`` is ``None`` unless ``ServeConfig.prefix_cache`` is on —
     when set it holds the radix-cache counters (hits / misses / evictions /
     tokens_matched / cached_blocks / cached_unreferenced_blocks).
+
+    ``sanitizer`` is ``None`` unless ``ServeConfig.sanitize`` is on — when
+    set it holds the shadow block pool's counters (transitions validated,
+    write-set checks, allocator cross-verifications, published blocks, and
+    the per-state block census).
     """
     admissions: int = 0
     preemptions: int = 0
@@ -154,6 +159,7 @@ class EngineStats:
     blocks_in_use: Optional[int] = None
     blocks_free: Optional[int] = None
     prefix_cache: Optional[Dict[str, int]] = None
+    sanitizer: Optional[Dict[str, int]] = None
 
 
 def make_request(prompt: Sequence[int], uid: int,

@@ -114,6 +114,11 @@ class AsyncEngine:
         if self._task is not None:
             await self._task
             self._task = None
+        if drain and self.engine.shadow is not None and \
+                not self.engine.sched.has_work():
+            # graceful shutdown ran everything to completion: the shadow
+            # pool must agree no request still holds blocks
+            self.engine.shadow.assert_drained()
         self._closed = True
 
     # -- request surface -----------------------------------------------------
@@ -203,8 +208,9 @@ class AsyncEngine:
                 if inflight.tok is not None:
                     # the only device sync per step, moved off-thread so the
                     # event loop keeps serving clients while the device runs
+                    sync = np.asarray  # lint: allow(host-sync) budgeted sync
                     tok_np = await loop.run_in_executor(
-                        None, np.asarray, inflight.tok)
+                        None, sync, inflight.tok)
                 else:
                     await asyncio.sleep(0)
                 eng.commit_step(inflight, tok_np)

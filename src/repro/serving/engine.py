@@ -163,6 +163,13 @@ class ServeConfig:
     # cap on blocks the trie may hold (None = unbounded; eviction then
     # happens only when alloc() would starve)
     prefix_cache_blocks: Optional[int] = None
+    # -- block-pool sanitizer (repro.analysis.shadow, paged only) ----------
+    # mirror every block lifecycle transition (alloc/share/free/publish)
+    # through an ASan-style shadow state machine and check each step's KV
+    # write-set before dispatch: any protocol violation raises
+    # SanitizerError at the faulting call.  Debug/CI knob — adds O(pool)
+    # host work per step, keep off in production
+    sanitize: bool = False
 
     def __post_init__(self):
         if self.prefill_bucket_min < 1:
@@ -197,6 +204,10 @@ class ServeConfig:
             raise ValueError(
                 f"prefill_budget={self.prefill_budget} must be >= 1 or None "
                 "(a zero budget would stall every prefill forever)")
+        if self.sanitize and self.paged is False:
+            raise ValueError(
+                "sanitize=True shadows the paged block pool; it requires "
+                "the paged cache (ServeConfig(paged=True) or auto)")
 
     @property
     def blocks_per_slot(self) -> int:
@@ -308,21 +319,47 @@ class Engine:
                                prefix_cache=self.prefix_cache,
                                prefill_chunk=self.scfg.prefill_chunk,
                                prefill_budget=self.scfg.prefill_budget)
-        # donate the cache (and key) buffers: step outputs replace them, so
-        # XLA can update in place instead of copying the whole cache
-        # (contiguous [slots, max_len] regions or the paged block pool)
-        # every step (no-op on backends without donation support, e.g. CPU)
-        self._decode = jax.jit(self._decode_impl, donate_argnums=(2, 4))
-        # the fused chunk step: retraced per (chunk bucket, table width).
-        # prefill_chunk > 0 on paged models runs chunk attention
+        # ASan-style shadow of the block pool (repro.analysis.shadow): the
+        # allocator reports every refcount transition, the scheduler / prefix
+        # cache declare what each reference means, and launch/commit check
+        # write-sets and cross-verify the mirror.  Lazy import keeps the
+        # serving stack free of the analysis package unless asked for.
+        self.shadow = None
+        if self.scfg.sanitize:
+            if not self.paged:
+                raise ValueError(
+                    "sanitize=True shadows the paged block pool; this model "
+                    "resolved to the contiguous layout — pass "
+                    "ServeConfig(paged=True) for an attention-only stack")
+            from repro.analysis.shadow import ShadowBlockPool
+            self.shadow = ShadowBlockPool(self.allocator.num_blocks,
+                                          self.allocator.block_size)
+            self.allocator.observer = self.shadow
+            self.sched.shadow = self.shadow
+            if self.prefix_cache is not None:
+                self.prefix_cache.shadow = self.shadow
+        # the jitted step impls, built from one registry so tooling (the
+        # retrace watchdog, tests) can rebuild them with wrappers: attr ->
+        # (python impl, donate_argnums).  Donating the cache (and key)
+        # buffers lets XLA update them in place instead of copying the whole
+        # cache (contiguous [slots, max_len] regions or the paged block
+        # pool) every step (no-op on backends without donation, e.g. CPU).
+        # _chunk is the fused chunk step, retraced per (chunk bucket, table
+        # width): prefill_chunk > 0 on paged models runs chunk attention
         # (kernels/paged_prefill or the gather fallback); contiguous/SSM
         # models — and prefill_chunk == 0, the legacy stop-the-world
         # whole-prompt baseline — run a sequential scan of decode steps
-        self._chunk = (jax.jit(self._chunk_step_impl, donate_argnums=(2, 6))
-                       if self.paged else None)
-        self._chunk_scan = jax.jit(
-            self._chunk_scan_paged_impl if self.paged
-            else self._chunk_scan_impl, donate_argnums=(2, 6))
+        # (_chunk_scan).
+        self._jit_specs = {
+            "_decode": (self._decode_impl, (2, 4)),
+            "_chunk_scan": (self._chunk_scan_paged_impl if self.paged
+                            else self._chunk_scan_impl, (2, 6)),
+        }
+        if self.paged:
+            self._jit_specs["_chunk"] = (self._chunk_step_impl, (2, 6))
+        self._chunk = None
+        for attr, (impl, donate) in self._jit_specs.items():
+            setattr(self, attr, jax.jit(impl, donate_argnums=donate))
         # prefill work counters (Engine.stats()): positions run through
         # chunk steps (counted per chunk, not per admission) vs positions
         # skipped via shared blocks, and how many chunks it took
@@ -545,8 +582,8 @@ class Engine:
         owners = {s: self.sched.slots[s].uid for s in active}
         return StepPlan(events=events, active=active, owners=owners,
                         chunks=chunks, stalled=stalled,
-                        positions=np.asarray(self.sched.positions,
-                                             np.int32).copy())
+                        positions=self.sched.positions.astype(np.int32,
+                                                              copy=True))
 
     def plan_spec(self, inflight: InflightStep) -> Optional[StepPlan]:
         """Plan step N+1 *speculatively* while step N (``inflight``) is still
@@ -581,7 +618,7 @@ class Engine:
                 return None            # capacity finish at commit
             if not sc.pregrow_decode(slot):
                 return None            # pool starved: let commit preempt
-        positions = np.asarray(sc.positions, np.int32).copy()
+        positions = sc.positions.astype(np.int32, copy=True)
         for slot in active:
             positions[slot] += 1       # where step N+1 writes, post-commit-N
         return StepPlan(events=[], active=list(active), owners=dict(plan.owners),
@@ -600,6 +637,8 @@ class Engine:
             return InflightStep(plan=plan, tok=None,
                                 launched_at=time.perf_counter())
         self._ensure_state()
+        if self.shadow is not None:
+            self._sanitize_writes(plan)
         if plan.chunks or plan.stalled:
             tok = self._launch_chunk(plan)
         else:
@@ -621,7 +660,8 @@ class Engine:
         outs: List[StepOutput] = []
         if inflight.tok is not None:
             if tok_np is None:
-                tok_np = np.asarray(inflight.tok)
+                # the step's one budgeted device sync
+                tok_np = np.asarray(inflight.tok)  # lint: allow(host-sync)
             now = time.perf_counter()
             self._steps_committed += 1
             if self._last_sync is not None:
@@ -649,8 +689,36 @@ class Engine:
         for slot, req in enumerate(sc.slots):
             if req is None:
                 self._tokens[slot] = self.scfg.pad_id
+        if self.shadow is not None:
+            # cross-check the mirror against the live allocator every step,
+            # and assert the drained invariant (no OWNED/SHARED blocks) the
+            # moment no work remains
+            self.shadow.verify(self.allocator)
+            if not sc.has_work():
+                self.shadow.assert_drained()
         self._finalize_outputs(outs)
         return plan.events + outs
+
+    def _sanitize_writes(self, plan: StepPlan) -> None:
+        """Check the step's KV write-set against the shadow pool before
+        dispatch: a chunked slot writes positions ``[start, start+n)``, a
+        decode (or budget-stalled pad) row writes position ``start`` — every
+        logical block those positions map to must be the trash block or a
+        block the slot owns exclusively.  Shared/published prefix blocks are
+        immutable; catching an attempt *here* names the faulting slot and
+        block instead of surfacing later as cross-request corruption."""
+        sc = self.sched
+        bs = self.allocator.block_size
+        width = sc.block_tables.shape[1]
+        for slot in plan.active:
+            start = int(plan.positions[slot])
+            n = plan.chunks.get(slot, 1)
+            # positions >= max_len are never written (LENGTH fires first);
+            # unallocated trailing blocks map to trash, which is writable
+            first = min(start // bs, width - 1)
+            last = min((start + n - 1) // bs, width - 1)
+            for lb in range(first, last + 1):
+                self.shadow.check_write(slot, int(sc.block_tables[slot, lb]))
 
     def _launch_decode(self, plan: StepPlan,
                        feed: Optional[InflightStep]) -> jax.Array:
@@ -922,7 +990,9 @@ class Engine:
             blocks_in_use=None if alloc is None else alloc.blocks_in_use(),
             blocks_free=None if alloc is None else alloc.available(),
             prefix_cache=(None if self.prefix_cache is None
-                          else self.prefix_cache.stats()))
+                          else self.prefix_cache.stats()),
+            sanitizer=(None if self.shadow is None
+                       else self.shadow.stats()))
 
     def kv_cache_bytes(self) -> int:
         """Resident KV-cache bytes of the live decode state (the paged pool

@@ -77,6 +77,9 @@ class BlockAllocator:
         # unreferenced prefix blocks are LRU-recycled instead of starving
         # admission/growth.
         self.reclaim: Optional[Callable[[int], int]] = None
+        # sanitizer hook (repro.analysis.shadow.ShadowBlockPool): when set,
+        # every alloc/share/free transition is mirrored and validated.
+        self.observer = None
 
     # -- capacity ------------------------------------------------------------
 
@@ -109,6 +112,8 @@ class BlockAllocator:
             return None
         ids = [self._free.popleft() for _ in range(n)]
         self.refcounts[ids] = 1
+        if self.observer is not None:
+            self.observer.on_alloc(ids)
         return ids
 
     def share(self, block_id: int) -> int:
@@ -119,6 +124,8 @@ class BlockAllocator:
         if self.refcounts[block_id] <= 0:
             raise BlockPoolError(f"share() on free block {block_id}")
         self.refcounts[block_id] += 1
+        if self.observer is not None:
+            self.observer.on_share(int(block_id), int(self.refcounts[block_id]))
         return int(self.refcounts[block_id])
 
     def free(self, ids: Sequence[int]) -> None:
@@ -132,3 +139,5 @@ class BlockAllocator:
             self.refcounts[b] -= 1
             if self.refcounts[b] == 0:
                 self._free.append(b)
+            if self.observer is not None:
+                self.observer.on_free(int(b), int(self.refcounts[b]))

@@ -82,6 +82,9 @@ class RadixPrefixCache:
         self.misses = 0
         self.evictions = 0
         self.tokens_matched = 0
+        # sanitizer hook (repro.analysis.shadow.ShadowBlockPool): publish /
+        # unpublish mark blocks immutable while the trie references them.
+        self.shadow = None
 
     def __len__(self) -> int:
         """Blocks currently held by the trie."""
@@ -143,6 +146,8 @@ class RadixPrefixCache:
                 if block_ids[j] == TRASH_BLOCK:
                     break              # never cache trash-mapped entries
                 self.allocator.share(block_ids[j])   # the trie's reference
+                if self.shadow is not None:
+                    self.shadow.publish(int(block_ids[j]))
                 child = _Node(key, int(block_ids[j]), node, now)
                 node.children[key] = child
                 self._num_nodes += 1
@@ -182,6 +187,8 @@ class RadixPrefixCache:
                 if freed >= n:
                     break
                 del victim.parent.children[victim.key]
+                if self.shadow is not None:
+                    self.shadow.unpublish(victim.block_id)
                 self.allocator.free([victim.block_id])
                 self._num_nodes -= 1
                 self.evictions += 1

@@ -170,6 +170,9 @@ class Scheduler:
         # (read-only) rather than owned.
         self.prefix_lens = np.zeros((n_slots,), np.int32)
         self.shared_counts = [0] * n_slots
+        # sanitizer hook (repro.analysis.shadow.ShadowBlockPool): claim /
+        # attach_reader declare what each block reference *means* per slot.
+        self.shadow = None
         if allocator is not None:
             self.block_tables = np.full(
                 (n_slots, allocator.blocks_for(max_len)), TRASH_BLOCK,
@@ -276,6 +279,10 @@ class Scheduler:
             self.temperatures[slot] = req.params.temperature
             self.top_ps[slot] = req.params.top_p
             if alloc is not None:
+                if self.shadow is not None:
+                    self.shadow.claim(slot, got)
+                    for b in shared:
+                        self.shadow.attach_reader(slot, b)
                 self.block_ids[slot] = ids
                 self.block_tables[slot, :] = TRASH_BLOCK
                 self.block_tables[slot, :len(ids)] = ids
@@ -350,7 +357,8 @@ class Scheduler:
         exhausted: the step's sampled token for this row is the request's
         first output and the engine records it."""
         req = self.slots[slot]
-        assert req is not None, f"advance_prefill() on idle slot {slot}"
+        if req is None:
+            raise ValueError(f"advance_prefill() on idle slot {slot}")
         filled_before = int(self.positions[slot])
         del self.pending[slot][:n]
         self.positions[slot] += n
@@ -436,7 +444,8 @@ class Scheduler:
         crosses into an unallocated block; if the pool is exhausted the slot
         is preempted (freed + requeued at the front) instead."""
         req = self.slots[slot]
-        assert req is not None, f"record() on idle slot {slot}"
+        if req is None:
+            raise ValueError(f"record() on idle slot {slot}")
         req.output_tokens.append(token)
         self.positions[slot] = len(req.prompt) + req.num_generated - 1
 
@@ -481,6 +490,8 @@ class Scheduler:
             got = self.allocator.alloc(1)
             if got is None:
                 return False
+            if self.shadow is not None:
+                self.shadow.claim(slot, got)
             self.block_ids[slot].extend(got)
             self.block_tables[slot, len(self.block_ids[slot]) - 1] = got[0]
         return True

@@ -67,6 +67,9 @@ class TestAsyncParity:
     @pytest.mark.parametrize("seed,scfg_kw", [
         (0, dict(prefill_chunk=8)),
         (1, dict(prefill_chunk=4, prefill_budget=6, prefix_cache=True)),
+        # the same fuzzed loop under the shadow block-pool sanitizer: every
+        # alloc/share/free/publish transition and write-set validated live
+        (2, dict(prefill_chunk=4, prefix_cache=True, sanitize=True)),
     ])
     def test_fuzzed_arrivals_token_parity(self, lm, seed, scfg_kw):
         cfg, params = lm
@@ -85,6 +88,10 @@ class TestAsyncParity:
         assert eng_a.allocator.blocks_in_use() == (
             0 if eng_a.prefix_cache is None
             else eng_a.prefix_cache.stats()["cached_unreferenced_blocks"])
+        if eng_a.shadow is not None:
+            # zero leaked blocks at drain, per the shadow's own census
+            eng_a.shadow.assert_drained()
+            assert eng_a.shadow.stats()["write_checks"] > 0
 
     def test_step_gap_zero_on_overlapped_steps(self, lm):
         cfg, params = lm

@@ -120,6 +120,28 @@ class TestFuzzChunkedParity:
                 0 if eng.prefix_cache is None
                 else eng.prefix_cache.cached_unreferenced())
 
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_chunked_fuzz_sanitized(self, tiny_lm, seed):
+        """The same fuzzed schedules under the shadow block-pool sanitizer
+        (ServeConfig(sanitize=True)): every alloc/share/free/publish
+        transition and every step's KV write-set is validated live, outputs
+        stay parity-identical, and the pool drains with zero OWNED/SHARED
+        blocks — including a pool tight enough to preempt and evict."""
+        cfg, _, params = tiny_lm
+        schedule = make_schedule(seed)
+        ref = self._ref(cfg, params, schedule)
+        for kw in (dict(prefill_chunk=3),
+                   dict(prefill_chunk=2, prefix_cache=True,
+                        num_kv_blocks=13)):
+            eng, got = drive(cfg, params,
+                             ServeConfig(max_batch=3, max_len=24, paged=True,
+                                         kv_block_size=4, sanitize=True,
+                                         **kw),
+                             schedule, self.SP)
+            assert got == ref, f"seed {seed}, config {kw}"
+            eng.shadow.assert_drained()
+            assert eng.shadow.stats()["write_checks"] > 0
+
     def test_contiguous_chunked_matches_whole_prompt(self, tiny_lm):
         """The masked-scan chunk fallback (contiguous cache) interleaves the
         same way and must match its own whole-prompt baseline."""
