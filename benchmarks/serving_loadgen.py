@@ -28,6 +28,13 @@ Run standalone (writes/merges BENCH_serving.json):
 CI smoke (seconds, exercises server + deadline + cancellation end-to-end):
 
     PYTHONPATH=src python -m benchmarks.serving_loadgen --smoke
+
+Fault-injected chaos soak (PR 8: seeded FaultPlan + ServingSupervisor;
+gates on full fault coverage, zero leaked blocks, token parity for
+unaffected requests, and the snapshot-restore resuming in-flight work):
+
+    PYTHONPATH=src python -m benchmarks.serving_loadgen --smoke --chaos \
+        --sanitize
 """
 from __future__ import annotations
 
@@ -277,6 +284,198 @@ def saturation_bench(requests_per_client: int = 3,
     return out
 
 
+def chaos_soak(smoke: bool = False, sanitize: bool = False,
+               seed: int = 0) -> dict:
+    """Fault-injected soak (PR 8): the full client workload runs against an
+    engine wired to a seeded :class:`FaultPlan` covering every injection
+    seam — device-step raises at plan/launch/commit, NaN logits driven to
+    quarantine, slow/hung steps, allocator exhaustion spikes, malformed /
+    oversized / disconnecting clients, and a host-loop crash that forces a
+    supervisor snapshot-restore.  Gates:
+
+    * every scheduled fault actually fired (``FaultPlan.unfired() == []``);
+    * the drain is clean — zero leaked blocks, shadow census agrees when
+      ``sanitize=True``;
+    * token parity: every request not directly hit by a fault (quarantined /
+      disconnected / shed) streams exactly the tokens of a fault-free
+      greedy baseline — retries and the snapshot-restore are invisible;
+    * the restart really resumed in-flight work (>= 1 restart and the
+      resumed requests completing with parity), and >= 1 quarantine and
+      >= 1 step retry were exercised.
+
+    Reports recovery latency and goodput-under-faults to
+    BENCH_serving.json["chaos"]."""
+    from repro.serving.faults import FaultPlan
+    from repro.serving.supervisor import ServingSupervisor, SupervisorConfig
+
+    n_requests = 10 if smoke else 12
+    max_tokens = 12 if smoke else 16
+    rng = np.random.default_rng(seed + 7)
+    prompts = [rng.integers(0, 64, int(rng.integers(8, 14))).tolist()
+               for _ in range(n_requests)]
+    sp = SamplingParams(max_tokens=max_tokens, ignore_eos=True)
+
+    # fault-free greedy baseline: the parity reference (sync engine; PR-6
+    # benches gate sync/async parity, so this is the ground truth)
+    base = _build_engine()
+    reqs = [base.submit(p, sp) for p in prompts]
+    for _ in base.stream():
+        pass
+    expected = [list(r.output_tokens) for r in reqs]
+
+    plan = FaultPlan.chaos(seed=seed, n_requests=n_requests,
+                           quarantine_after=2, restarts=1)
+
+    def factory() -> Engine:
+        e = _build_engine(sanitize=sanitize)
+        e.fault_hook = plan.engine_hook
+        if e.allocator is not None:
+            e.allocator.fault_hook = plan.alloc_hook
+        return e
+
+    sup = ServingSupervisor(factory, SupervisorConfig(quarantine_after=2))
+    eng = factory()
+    results: List[Optional[List[Dict]]] = [None] * n_requests
+    affected = set()        # request indices a fault hit directly
+    t0 = time.perf_counter()
+
+    async def main() -> Engine:
+        async with AsyncEngine(eng, supervisor=sup) as aeng:
+            aeng.loop_fault_hook = plan.loop_hook
+            async with FrontendServer(aeng, max_line_bytes=2048) as srv:
+
+                async def one(i: int) -> None:
+                    kind = plan.client_fault(i)
+                    kw = dict(max_tokens=max_tokens, temperature=0.0,
+                              ignore_eos=True)
+                    async with ServeClient(port=srv.port) as c:
+                        if kind == "malformed":
+                            # junk line first: typed error, connection lives
+                            await c.send_raw(b"}{ not json\n")
+                            err = await c._recv()
+                            if "error" not in err:
+                                raise RuntimeError(
+                                    f"no typed error for bad json: {err}")
+                        if kind == "disconnect":
+                            await c._send({"prompt": prompts[i], **kw})
+                            await c._recv()          # ack
+                            await c._recv()          # one streamed token
+                            affected.add(i)
+                            return                   # close = disconnect
+                        if kind == "oversized":
+                            # over max_line_bytes: the server answers with a
+                            # typed error (the cleared buffer's tail may add
+                            # a bad-json error), then serves the real request
+                            await c.send_raw(b"x" * 8192 + b"\n")
+                            await c._send({"prompt": prompts[i], **kw})
+                            saw_err, ack = 0, None
+                            while ack is None:
+                                line = await c._recv()
+                                if "uid" in line:
+                                    ack = line
+                                elif "error" in line:
+                                    saw_err += 1
+                                else:
+                                    raise RuntimeError(
+                                        f"unexpected line: {line}")
+                            if not saw_err:
+                                raise RuntimeError(
+                                    "no typed error for oversized line")
+                            evs: List[Dict] = []
+                            while True:
+                                out = await c._recv()
+                                evs.append(out)
+                                if out.get("finished"):
+                                    break
+                            results[i] = evs
+                            return
+                        results[i] = await c.request(prompts[i], **kw)
+
+                await asyncio.gather(*(one(i) for i in range(n_requests)))
+                # the disconnected request cancels server-side; let it drain
+                for _ in range(200):
+                    if not aeng.engine._requests:
+                        break
+                    await asyncio.sleep(0.05)
+            return aeng.engine
+
+    final = asyncio.run(main())
+    wall = time.perf_counter() - t0
+    st = final.stats()
+
+    missing = plan.unfired()
+    if missing:
+        raise RuntimeError(f"chaos schedule not fully delivered: {missing}")
+    if st.engine_restarts < 1:
+        raise RuntimeError("scheduled host-loop crash did not restart")
+    if st.quarantines < 1:
+        raise RuntimeError("nan fault run did not quarantine its request")
+    if st.step_retries < 1:
+        raise RuntimeError("no failed step was ever retried")
+    leaked = final.allocator.blocks_in_use()
+    if leaked != 0:
+        raise RuntimeError(f"leaked blocks after chaos drain: {leaked}")
+    if final.shadow is not None:
+        final.shadow.assert_drained()
+
+    # token parity for every request no fault hit directly
+    completed_ok, mismatched = 0, []
+    for i, evs in enumerate(results):
+        if i in affected or evs is None:
+            continue
+        reason = evs[-1].get("finish_reason")
+        if reason in ("error", "aborted"):       # quarantined / shed
+            affected.add(i)
+            continue
+        if reason not in ("stop", "length"):
+            raise RuntimeError(f"request {i} ended {reason!r} under chaos")
+        toks = [e["token"] for e in evs if e.get("token", -1) >= 0]
+        if toks != expected[i]:
+            mismatched.append(i)
+        completed_ok += 1
+    if mismatched:
+        raise RuntimeError(
+            "token parity broken for fault-free requests "
+            f"{mismatched} (retries/restore must be invisible)")
+    if completed_ok == 0:
+        raise RuntimeError("no request survived the chaos soak unaffected")
+
+    out = {
+        "config": {"arch": "qwen1.5-0.5b reduced(2)", "max_batch": 4,
+                   "n_requests": n_requests, "max_tokens": max_tokens,
+                   "seed": seed, "sanitize": sanitize,
+                   "faults_scheduled": len(plan.faults)},
+        "wall_s": wall,
+        "fault_classes": sorted({f"{s}:{k}" for s, k, _ in plan.fired}),
+        "injections_delivered": len(plan.fired),
+        "counters": {"step_failures": st.step_failures,
+                     "step_retries": st.step_retries,
+                     "quarantines": st.quarantines,
+                     "engine_restarts": st.engine_restarts,
+                     "load_sheds": st.load_sheds,
+                     "hung_steps": st.hung_steps,
+                     "degrade_tier": st.degrade_tier},
+        "recovery_ms": st.recovery_ms,
+        "warm_restore": bool(sup.last_restart_warm),
+        "affected_requests": sorted(affected),
+        "completed_unaffected": completed_ok,
+        "token_parity_unaffected": True,
+        "goodput_req_per_s": completed_ok / max(wall, 1e-9),
+        "note": "parity gate: requests not directly hit by a fault stream "
+                "exactly the fault-free greedy baseline's tokens — step "
+                "retries and the snapshot-restore are invisible to them",
+    }
+    write_bench_serving({"chaos": out})
+    print(f"chaos soak OK: {len(plan.fired)} injections "
+          f"({len(out['fault_classes'])} classes), "
+          f"retries={st.step_retries} quarantines={st.quarantines} "
+          f"restarts={st.engine_restarts} "
+          f"(warm={out['warm_restore']}) hung={st.hung_steps}; "
+          f"{completed_ok}/{n_requests} unaffected with token parity, "
+          f"0 leaked blocks")
+    return out
+
+
 def smoke(sanitize: bool = False) -> None:
     """CI smoke: server up, four client behaviors (normal, expired deadline,
     explicit cancel, disconnect) through the real TCP endpoint, block
@@ -345,12 +544,19 @@ if __name__ == "__main__":
     ap.add_argument("--sanitize", action="store_true",
                     help="run the smoke under the shadow block-pool "
                          "sanitizer (repro.analysis)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-injected soak: seeded FaultPlan over every "
+                         "injection seam, supervised recovery, parity and "
+                         "leak gates (with --smoke: CI-sized)")
     a = ap.parse_args()
-    if a.smoke:
+    if a.chaos:
+        chaos_soak(smoke=a.smoke, sanitize=a.sanitize)
+    elif a.smoke:
         smoke(sanitize=a.sanitize)
     else:
         out = {"async_overlap": async_overlap_bench(),
                "goodput": goodput_bench(),
-               "saturation": saturation_bench()}
+               "saturation": saturation_bench(),
+               "chaos": chaos_soak()}
         print(json.dumps(out, indent=1))
         print("merged into BENCH_serving.json")

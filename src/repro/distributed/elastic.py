@@ -44,7 +44,8 @@ class StepWatchdog:
         self._t0 = time.monotonic()
 
     def stop(self) -> Optional[StragglerReport]:
-        assert self._t0 is not None, "start() not called"
+        if self._t0 is None:
+            raise ValueError("StepWatchdog.stop() before start()")
         dt = time.monotonic() - self._t0
         self._t0 = None
         self._step += 1
@@ -91,6 +92,10 @@ class SimulatedFailure(RuntimeError):
     """Raised by tests / chaos hooks to exercise the restart path."""
 
 
+class RestartBudgetExhausted(RuntimeError):
+    """Raised when a restart loop has spent its failure budget."""
+
+
 def run_with_restarts(train_once: Callable[[int, int], Tuple[int, bool]],
                       max_restarts: int = 3) -> Dict[str, int]:
     """Supervisor: ``train_once(attempt, start_step) -> (end_step, done)``.
@@ -109,4 +114,4 @@ def run_with_restarts(train_once: Callable[[int, int], Tuple[int, bool]],
             pass
         attempt += 1
         if attempt > max_restarts:
-            raise RuntimeError("restart budget exhausted")
+            raise RestartBudgetExhausted("restart budget exhausted")

@@ -57,6 +57,7 @@ from repro.serving.api import SamplingParams
 from repro.serving.async_engine import AsyncEngine
 from repro.serving.engine import Engine, ServeConfig, convert_to_packed
 from repro.serving.frontend import FrontendServer, ServeClient
+from repro.serving.supervisor import ServingSupervisor
 
 
 def build_engine(args) -> Engine:
@@ -153,6 +154,15 @@ def print_stats(eng: Engine) -> None:
               f"tokens_matched={pc['tokens_matched']} "
               f"cached_blocks={pc['cached_blocks']} "
               f"(unreferenced {pc['cached_unreferenced_blocks']})")
+    if (s.step_failures or s.step_retries or s.quarantines
+            or s.engine_restarts or s.load_sheds or s.hung_steps
+            or s.degrade_tier):
+        print(f"[robustness] step_failures={s.step_failures} "
+              f"retries={s.step_retries} quarantines={s.quarantines} "
+              f"restarts={s.engine_restarts} load_sheds={s.load_sheds} "
+              f"hung_steps={s.hung_steps} degrade_tier={s.degrade_tier}")
+        if s.recovery_ms is not None:
+            print(_pct_line("recovery", s.recovery_ms))
 
 
 async def run_load(eng: Engine, args) -> None:
@@ -171,7 +181,9 @@ async def run_load(eng: Engine, args) -> None:
     prompts = [draw() for _ in range(args.requests)]
     results = [None] * args.requests
 
-    async with AsyncEngine(eng, max_queue=args.max_queue) as aeng:
+    sup = _make_supervisor(eng, args)
+    async with AsyncEngine(eng, max_queue=args.max_queue,
+                           supervisor=sup) as aeng:
         async with FrontendServer(aeng) as srv:
             t0 = time.perf_counter()
 
@@ -196,6 +208,7 @@ async def run_load(eng: Engine, args) -> None:
             await asyncio.gather(*(one_client(i)
                                    for i in range(args.requests)))
             dt = time.perf_counter() - t0
+        eng = aeng.engine        # a supervisor restart swaps the engine
 
     n_tok = sum(sum(1 for e in evs if e.get("token", -1) >= 0)
                 for evs in results if evs)
@@ -214,10 +227,20 @@ async def run_load(eng: Engine, args) -> None:
     print_stats(eng)
 
 
+def _make_supervisor(eng: Engine, args):
+    """--supervise: a ServingSupervisor whose factory rebuilds an identical
+    engine (same config and weights) for snapshot-restore after a crash."""
+    if not getattr(args, "supervise", False):
+        return None
+    cfg, params, scfg = eng.cfg, eng.params, eng.scfg
+    return ServingSupervisor(lambda: Engine(cfg, params, scfg))
+
+
 async def run_server(eng: Engine, args) -> None:
     """Standing endpoint: serve until interrupted, then drain gracefully
     (stop admitting, finish in-flight requests, report stats)."""
-    aeng = AsyncEngine(eng, max_queue=args.max_queue)
+    aeng = AsyncEngine(eng, max_queue=args.max_queue,
+                       supervisor=_make_supervisor(eng, args))
     async with aeng:
         async with FrontendServer(
                 aeng, host=args.host, port=args.port,
@@ -232,7 +255,7 @@ async def run_server(eng: Engine, args) -> None:
                     await asyncio.sleep(3600)
             except (KeyboardInterrupt, asyncio.CancelledError):
                 print("[serve] draining...")
-    print_stats(eng)
+    print_stats(aeng.engine)
 
 
 def main(argv=None):
@@ -292,6 +315,12 @@ def main(argv=None):
     ap.add_argument("--prefix-cache-blocks", type=int, default=None,
                     help="cap on blocks the prefix cache may keep resident "
                          "(default: unbounded, evict only on pool pressure)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="wrap the async loop in a ServingSupervisor: step "
+                         "retry with backoff, quarantine of poisoned "
+                         "requests, snapshot-restore of the engine on host-"
+                         "loop crashes, and graceful load shedding under "
+                         "sustained pressure (serving/supervisor.py)")
     ap.add_argument("--sanitize", action="store_true",
                     help="shadow the paged block pool (repro.analysis): "
                          "validate every alloc/share/free/publish transition "

@@ -38,6 +38,30 @@ class FinishReason(str, enum.Enum):
     ABORTED = "aborted"    # rejected (oversized prompt, or queue backpressure)
     CANCELLED = "cancelled"  # Engine.cancel() — queued, mid-prefill, or mid-decode
     DEADLINE = "deadline"  # per-request deadline passed before completion
+    ERROR = "error"        # quarantined: the request's step failed repeatedly
+
+
+class ServingError(RuntimeError):
+    """Base class for typed serving-path failures.
+
+    Everything the serving stack raises on purpose derives from this (or
+    from :class:`~repro.serving.paged.BlockPoolError`, which predates it),
+    so supervisors and front-ends can distinguish engine faults from
+    programming errors."""
+
+
+class StepFailure(ServingError):
+    """A committed step produced unusable output (non-finite logits surfaced
+    as out-of-range sentinel tokens, or an injected device fault).  Raised by
+    ``Engine.commit_step`` *before* any scheduler/request mutation, so the
+    failed plan can be re-launched verbatim.  ``uids``/``slots`` name the
+    rows the failure was attributed to (empty when not row-attributable)."""
+
+    def __init__(self, message: str, uids: Sequence[int] = (),
+                 slots: Sequence[int] = ()):
+        super().__init__(message)
+        self.uids = list(uids)
+        self.slots = list(slots)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,6 +164,18 @@ class EngineStats:
     set it holds the shadow block pool's counters (transitions validated,
     write-set checks, allocator cross-verifications, published blocks, and
     the per-state block census).
+
+    The robustness counters are filled in by the engine and the serving
+    supervisor (serving/supervisor.py): ``step_failures`` counts steps whose
+    commit raised (injected device faults, non-finite logits);
+    ``step_retries`` how many of those were re-launched against the same
+    plan; ``quarantines`` requests finished with ``FinishReason.ERROR``
+    after repeated attributable failures; ``engine_restarts`` full
+    snapshot-restore cycles; ``load_sheds`` requests rejected or dropped by
+    graceful degradation; ``hung_steps`` steps flagged by the median+k·MAD
+    hung-step watchdog; ``degrade_tier`` the current degradation tier
+    (0 = normal .. 3 = shedding); ``recovery_ms`` percentiles of
+    crash-to-first-committed-step wall time across restarts.
     """
     admissions: int = 0
     preemptions: int = 0
@@ -160,6 +196,15 @@ class EngineStats:
     blocks_free: Optional[int] = None
     prefix_cache: Optional[Dict[str, int]] = None
     sanitizer: Optional[Dict[str, int]] = None
+    # -- robustness (fault-injected serving; see serving/supervisor.py) ------
+    step_failures: int = 0
+    step_retries: int = 0
+    quarantines: int = 0
+    engine_restarts: int = 0
+    load_sheds: int = 0
+    hung_steps: int = 0
+    degrade_tier: int = 0
+    recovery_ms: Optional[Dict[str, float]] = None
 
 
 def make_request(prompt: Sequence[int], uid: int,

@@ -49,13 +49,22 @@ from typing import AsyncIterator, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.serving.api import (FinishReason, GenerationRequest,
-                               SamplingParams, StepOutput)
+                               SamplingParams, ServingError, StepOutput)
 from repro.serving.engine import Engine, InflightStep
+from repro.serving.supervisor import ServingSupervisor
 
 
 class EngineOverloaded(RuntimeError):
     """Raised by ``AsyncEngine.submit`` when the bounded waiting queue is
     full (backpressure) or the engine is draining/shut down."""
+
+
+class EngineSaturated(EngineOverloaded):
+    """Raised by ``AsyncEngine.submit`` while the supervisor's graceful
+    degradation is at the shedding tier: the engine is alive but refusing
+    new work until pressure clears.  Subclasses :class:`EngineOverloaded`
+    so existing backpressure handling (the front-end's typed rejection
+    line) covers it."""
 
 
 class AsyncEngine:
@@ -70,11 +79,22 @@ class AsyncEngine:
                 ...                           # out.finished on the last event
     """
 
-    def __init__(self, engine: Engine, max_queue: Optional[int] = None):
+    def __init__(self, engine: Engine, max_queue: Optional[int] = None,
+                 supervisor: Optional[ServingSupervisor] = None):
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue={max_queue} must be >= 1 or None")
         self.engine = engine
         self.max_queue = max_queue
+        # fault-tolerance layer (serving/supervisor.py): when present, the
+        # host loop retries failed steps, quarantines poisoned requests,
+        # obeys degradation tiers (speculation gating, load shedding), and
+        # snapshot-restores the engine on a crash instead of dying
+        self.supervisor = supervisor
+        if supervisor is not None:
+            supervisor.attach(engine)
+        # chaos-harness hook (repro.serving.faults.FaultPlan.loop_hook):
+        # called once per loop iteration; may raise a HostLoopError
+        self.loop_fault_hook = None
         self._streams: Dict[int, asyncio.Queue] = {}
         self._wake: Optional[asyncio.Event] = None
         self._task: Optional[asyncio.Task] = None
@@ -87,7 +107,7 @@ class AsyncEngine:
     def start(self) -> None:
         """Start the host loop task (requires a running event loop)."""
         if self._task is not None:
-            raise RuntimeError("AsyncEngine already started")
+            raise ServingError("AsyncEngine already started")
         self._wake = asyncio.Event()
         self._task = asyncio.get_running_loop().create_task(self._loop())
 
@@ -133,6 +153,13 @@ class AsyncEngine:
         immediately instead of queueing unboundedly."""
         if self._draining or self._closed:
             raise EngineOverloaded("engine is draining; not accepting work")
+        if self.supervisor is not None and self.supervisor.shedding:
+            # graceful degradation tier 3: typed rejection, counted as shed
+            self.engine._load_sheds += 1
+            self.rejected_overload += 1
+            raise EngineSaturated(
+                "engine is shedding load (degradation tier "
+                f"{self.supervisor.controller.tier})")
         if (self.max_queue is not None
                 and len(self.engine.sched.waiting) >= self.max_queue):
             self.rejected_overload += 1
@@ -178,11 +205,15 @@ class AsyncEngine:
     # -- host loop -----------------------------------------------------------
 
     async def _loop(self) -> None:
-        eng = self.engine
         loop = asyncio.get_running_loop()
+        sup = self.supervisor
         inflight: Optional[InflightStep] = None
-        try:
-            while True:
+        while True:
+            # rebound every iteration: a supervisor restart swaps the engine
+            eng = self.engine
+            try:
+                if self.loop_fault_hook is not None:
+                    self.loop_fault_hook()
                 if inflight is None:
                     if not eng.has_pending():
                         if self._draining:
@@ -201,9 +232,20 @@ class AsyncEngine:
                 # a step is on the device: sweep deadlines, then try to
                 # launch its successor *before* syncing (double-buffering)
                 eng.expire_deadlines()
-                spec = eng.plan_spec(inflight)
-                nxt = (eng.launch_step(spec, feed=inflight)
-                       if spec is not None else None)
+                nxt = None
+                try:
+                    # degradation tier >= 2 disables speculative launches
+                    spec = (eng.plan_spec(inflight)
+                            if sup is None or sup.allows_spec else None)
+                    nxt = (eng.launch_step(spec, feed=inflight)
+                           if spec is not None else None)
+                except BaseException as e:
+                    if sup is None or not isinstance(e, sup.RETRYABLE):
+                        raise
+                    # a fault on the *speculative* launch: the in-flight
+                    # step is healthy — drop the speculation and commit it
+                    eng._step_failures += 1
+                    nxt = None
                 tok_np = None
                 if inflight.tok is not None:
                     # the only device sync per step, moved off-thread so the
@@ -214,15 +256,74 @@ class AsyncEngine:
                 else:
                     await asyncio.sleep(0)
                 eng.commit_step(inflight, tok_np)
+                if sup is not None:
+                    sup.note_commit(ok=True)
                 inflight = nxt
-        except BaseException:
-            # the loop dying must not strand consumers mid-stream: deliver a
-            # terminal marker to every open stream, then surface the error
-            for uid, q in list(self._streams.items()):
-                q.put_nowait(StepOutput(
-                    uid=uid, token=-1, index=-1, finished=True,
-                    finish_reason=FinishReason.ABORTED))
-            raise
+            except (KeyboardInterrupt, SystemExit, asyncio.CancelledError):
+                self._abort_streams()
+                raise
+            except BaseException as e:
+                if sup is None:
+                    # unsupervised: surface the error (legacy behavior)
+                    self._abort_streams()
+                    raise
+                failed_plan = inflight.plan if inflight is not None else None
+                inflight = None
+                if isinstance(e, sup.RETRYABLE):
+                    try:
+                        await self._retry_step(loop, sup, failed_plan, e)
+                        continue
+                    except (KeyboardInterrupt, SystemExit,
+                            asyncio.CancelledError):
+                        self._abort_streams()
+                        raise
+                    except BaseException as exhausted:
+                        e = exhausted
+                # escalation: snapshot-restore onto a fresh engine (restart
+                # raises EngineCrash once the budget is spent)
+                try:
+                    self.engine = sup.restart(cause=e)
+                except BaseException:
+                    self._abort_streams()
+                    raise
+
+    async def _retry_step(self, loop, sup: ServingSupervisor,
+                          plan, exc: BaseException) -> None:
+        """Relaunch a failed plan with the supervisor's bounded backoff (no
+        speculation during the storm).  Raises once the retry budget is
+        spent, or if the supervisor replans after a quarantine (``plan is
+        None`` seeds a fresh plan)."""
+        attempt = 0
+        while True:
+            plan, delay = sup.on_step_failure(plan, exc, attempt)
+            attempt += 1
+            if delay > 0:
+                await asyncio.sleep(delay)
+            eng = self.engine
+            if eng.plan_stale(plan):
+                # a cancel/deadline landed during the backoff sleep: the
+                # plan's rows died under it — replan from live state
+                plan = eng.plan_step()
+            try:
+                inflight = eng.launch_step(plan)
+                tok_np = None
+                if inflight.tok is not None:
+                    sync = np.asarray  # lint: allow(host-sync) budgeted sync
+                    tok_np = await loop.run_in_executor(
+                        None, sync, inflight.tok)
+                eng.commit_step(inflight, tok_np)
+                sup.note_commit(ok=True)
+                return
+            except sup.RETRYABLE as e:
+                exc = e
+
+    def _abort_streams(self) -> None:
+        """The loop dying must not strand consumers mid-stream: deliver a
+        terminal marker to every open stream before surfacing the error."""
+        for uid, q in list(self._streams.items()):
+            q.put_nowait(StepOutput(
+                uid=uid, token=-1, index=-1, finished=True,
+                finish_reason=FinishReason.ABORTED))
 
 
 async def drive_requests(aeng: AsyncEngine,

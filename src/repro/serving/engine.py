@@ -106,10 +106,11 @@ import numpy as np
 from repro.models import build_model
 from repro.models.base import ModelConfig
 from repro.serving.api import (EngineStats, FinishReason, GenerationRequest,
-                               SamplingParams, StepOutput, make_request)
+                               SamplingParams, StepFailure, StepOutput,
+                               make_request)
 from repro.serving.paged import BlockAllocator
 from repro.serving.prefix_cache import RadixPrefixCache
-from repro.serving.sampling import sample_batch
+from repro.serving.sampling import guard_nonfinite, sample_batch
 from repro.serving.scheduler import Scheduler, bucket_length
 
 
@@ -383,6 +384,21 @@ class Engine:
         self._tokens_generated = 0
         self._cancellations = 0
         self._deadline_expirations = 0
+        # robustness counters (EngineStats; bumped here and by the serving
+        # supervisor) and the fault-injection hook: when set (repro.serving.
+        # faults.FaultPlan.engine_hook), it is called at the plan / launch /
+        # commit seams and may raise an injected fault, sleep, or corrupt the
+        # commit's synced tokens — always *before* any scheduler mutation, so
+        # a failed step is side-effect-free to replay
+        self.fault_hook = None
+        self._step_failures = 0
+        self._step_retries = 0
+        self._quarantines = 0
+        self._engine_restarts = 0
+        self._load_sheds = 0
+        self._hung_steps = 0
+        self._degrade_tier = 0
+        self._recovery_ms: List[float] = []
         # live decode state, allocated lazily on first admission; idle rows
         # hold pad_id so their (discarded) compute never depends on a dead
         # request's last token
@@ -409,7 +425,8 @@ class Engine:
                                                attn_impl=self.attn_impl)
         split = jax.vmap(jax.random.split)(keys)       # [B, 2, 2]
         new_keys, subs = split[:, 0], split[:, 1]
-        nxt = sample_batch(subs, logits, temps, top_ps)
+        nxt = guard_nonfinite(sample_batch(subs, logits, temps, top_ps),
+                              logits)
         return nxt, cache, new_keys
 
     def _chunk_step_impl(self, params, tokens, cache, start, lens, emit, keys,
@@ -429,7 +446,8 @@ class Engine:
                                    axis=1)[:, 0]
         split = jax.vmap(jax.random.split)(keys)       # [B, 2, 2]
         new_keys = jnp.where(emit[:, None], split[:, 0], keys)
-        nxt = sample_batch(split[:, 1], last, temps, top_ps)
+        nxt = guard_nonfinite(sample_batch(split[:, 1], last, temps, top_ps),
+                              last)
         return nxt, cache, new_keys
 
     def _chunk_scan_impl(self, params, tokens, cache, start, lens, emit, keys,
@@ -463,7 +481,8 @@ class Engine:
         (cache, last), _ = jax.lax.scan(step, init, jnp.arange(slen))
         split = jax.vmap(jax.random.split)(keys)
         new_keys = jnp.where(emit[:, None], split[:, 0], keys)
-        nxt = sample_batch(split[:, 1], last, temps, top_ps)
+        nxt = guard_nonfinite(sample_batch(split[:, 1], last, temps, top_ps),
+                              last)
         return nxt, cache, new_keys
 
     def _chunk_scan_paged_impl(self, params, tokens, cache, start, lens, emit,
@@ -497,7 +516,8 @@ class Engine:
         (cache, last), _ = jax.lax.scan(step, init, jnp.arange(slen))
         split = jax.vmap(jax.random.split)(keys)
         new_keys = jnp.where(emit[:, None], split[:, 0], keys)
-        nxt = sample_batch(split[:, 1], last, temps, top_ps)
+        nxt = guard_nonfinite(sample_batch(split[:, 1], last, temps, top_ps),
+                              last)
         return nxt, cache, new_keys
 
     # -- request lifecycle --------------------------------------------------------
@@ -557,6 +577,10 @@ class Engine:
         preempt starved slots), and snapshot active slots / owners /
         positions.  Rejection and deadline marker events are finalized here
         (callbacks fire at plan time) and carried in ``plan.events``."""
+        if self.fault_hook is not None:
+            # fires before any side effect: a raised plan fault leaves the
+            # scheduler untouched and the supervisor simply replans
+            self.fault_hook("plan", {})
         self.last_decode = None        # stays None if no slot runs
         events = self.expire_deadlines()
         admitted, rejected = self.sched.admit()
@@ -636,6 +660,11 @@ class Engine:
         if not plan.active:
             return InflightStep(plan=plan, tok=None,
                                 launched_at=time.perf_counter())
+        if self.fault_hook is not None:
+            # fires before dispatch: a raised launch fault (or injected
+            # slow/hung step) leaves device state untouched — the same plan
+            # relaunches verbatim
+            self.fault_hook("launch", {"plan": plan})
         self._ensure_state()
         if self.shadow is not None:
             self._sanitize_writes(plan)
@@ -662,6 +691,18 @@ class Engine:
             if tok_np is None:
                 # the step's one budgeted device sync
                 tok_np = np.asarray(inflight.tok)  # lint: allow(host-sync)
+            if self.fault_hook is not None:
+                # fires after the sync but before validation/mutation; may
+                # raise an injected device fault or corrupt token rows (the
+                # NaN-logits simulation — replaced array read back from ctx)
+                ctx = {"plan": plan, "tok": tok_np}
+                self.fault_hook("commit", ctx)
+                tok_np = ctx["tok"]
+            # validate *before* any scheduler/request mutation: a failed
+            # step must be side-effect-free so the supervisor can relaunch
+            # the same plan (KV rewrites are (token, position)-determined,
+            # hence bit-identical on replay)
+            self._validate_tokens(plan, tok_np)
             now = time.perf_counter()
             self._steps_committed += 1
             if self._last_sync is not None:
@@ -698,6 +739,84 @@ class Engine:
                 self.shadow.assert_drained()
         self._finalize_outputs(outs)
         return plan.events + outs
+
+    def _validate_tokens(self, plan: StepPlan, tok_np: np.ndarray) -> None:
+        """Reject a step whose *consumable* rows carry out-of-range tokens —
+        the ``NONFINITE_TOKEN`` sentinel the jitted impls substitute when a
+        row's logits contain NaN/Inf, or garbage from an injected fault.
+        Only rows whose sample would actually be consumed are checked: live
+        owner, not budget-stalled, and (for chunked rows) completing their
+        prompt this step — a poisoned mid-prompt row's sample is discarded
+        anyway.  Raises :class:`StepFailure` naming the poisoned rows,
+        before any scheduler/request mutation."""
+        sc = self.sched
+        bad_slots: List[int] = []
+        bad_uids: List[int] = []
+        for slot in plan.active:
+            req = sc.slots[slot]
+            if req is None or req.uid != plan.owners.get(slot):
+                continue               # discarded at commit anyway
+            if slot in plan.stalled:
+                continue               # emit-less pad row
+            n = plan.chunks.get(slot)
+            if n is not None and n < len(sc.pending[slot]):
+                continue               # mid-prompt chunk: sample discarded
+            t = int(tok_np[slot])
+            if t < 0 or t >= self.cfg.padded_vocab:
+                bad_slots.append(slot)
+                bad_uids.append(req.uid)
+        if bad_slots:
+            raise StepFailure(
+                f"step produced non-finite/out-of-range tokens for slots "
+                f"{bad_slots} (uids {bad_uids}); plan is safe to relaunch",
+                uids=bad_uids, slots=bad_slots)
+
+    def plan_stale(self, plan: StepPlan) -> bool:
+        """True when ``plan`` no longer matches live scheduler state — a
+        request it covers was cancelled / expired / preempted since it was
+        planned (its slot freed or re-assigned, or its pending prompt
+        consumed).  A failed step's plan is only safe to *relaunch* verbatim
+        while fresh: chunk rows re-materialize their tokens from
+        ``sched.pending``, so a stale plan must be replanned instead (the
+        supervisor's retry path checks this between failure and relaunch —
+        the cancel-races-retry window)."""
+        sc = self.sched
+        for slot in plan.active:
+            req = sc.slots[slot]
+            if req is None or req.uid != plan.owners.get(slot):
+                return True
+            n = plan.chunks.get(slot)
+            if n is not None and n > len(sc.pending[slot]):
+                return True
+        return False
+
+    def quarantine(self, uid: int) -> Optional[StepOutput]:
+        """Finish a repeatedly-failing request with ``FinishReason.ERROR``
+        (the supervisor's last resort once retries keep tracing a failure to
+        the same row): tokens generated so far are kept, the slot frees and
+        its blocks release exactly like a cancel, and the engine keeps
+        serving everyone else."""
+        return self.cancel(uid, FinishReason.ERROR)
+
+    def shed_queued(self, keep: int) -> List[StepOutput]:
+        """Graceful-degradation load shedding: drop waiting (not yet
+        admitted) requests beyond the ``keep`` newest-last until the queue is
+        that short, finishing each with an ``ABORTED`` marker event.  Sheds
+        from the back of the queue, so the oldest waiters (including
+        preemption re-queues, which re-enter at the front) keep their place.
+        Returns the finalized marker events."""
+        outs: List[StepOutput] = []
+        sc = self.sched
+        while len(sc.waiting) > max(0, keep):
+            req = sc.waiting.pop()
+            sc._arrival.pop(req.uid, None)
+            req.finish_reason = FinishReason.ABORTED
+            outs.append(StepOutput(uid=req.uid, token=-1,
+                                   index=req.num_generated, finished=True,
+                                   finish_reason=FinishReason.ABORTED))
+            self._load_sheds += 1
+        self._finalize_outputs(outs)
+        return outs
 
     def _sanitize_writes(self, plan: StepPlan) -> None:
         """Check the step's KV write-set against the shadow pool before
@@ -835,6 +954,8 @@ class Engine:
             return None
         if reason == FinishReason.DEADLINE:
             self._deadline_expirations += 1
+        elif reason == FinishReason.ERROR:
+            self._quarantines += 1
         else:
             self._cancellations += 1
         self._finalize_outputs([out])
@@ -992,7 +1113,15 @@ class Engine:
             prefix_cache=(None if self.prefix_cache is None
                           else self.prefix_cache.stats()),
             sanitizer=(None if self.shadow is None
-                       else self.shadow.stats()))
+                       else self.shadow.stats()),
+            step_failures=self._step_failures,
+            step_retries=self._step_retries,
+            quarantines=self._quarantines,
+            engine_restarts=self._engine_restarts,
+            load_sheds=self._load_sheds,
+            hung_steps=self._hung_steps,
+            degrade_tier=self._degrade_tier,
+            recovery_ms=pct(self._recovery_ms))
 
     def kv_cache_bytes(self) -> int:
         """Resident KV-cache bytes of the live decode state (the paged pool

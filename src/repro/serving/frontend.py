@@ -75,17 +75,27 @@ class FrontendServer:
     def __init__(self, aeng: AsyncEngine, host: str = "127.0.0.1",
                  port: int = 0,
                  defaults: Optional[SamplingParams] = None,
-                 default_deadline_ms: Optional[float] = None):
+                 default_deadline_ms: Optional[float] = None,
+                 max_line_bytes: int = 1 << 16,
+                 max_protocol_errors: int = 8):
         self.aeng = aeng
         self.host = host
         self.port = port
         self.defaults = defaults or SamplingParams()
         self.default_deadline_ms = default_deadline_ms
+        # line-protocol hardening: lines past max_line_bytes are rejected
+        # with a typed error (the stream resyncs at the next newline), and a
+        # connection accumulating more than max_protocol_errors poisoned
+        # lines is told so and closed — one misbehaving client cannot spin
+        # the handler forever
+        self.max_line_bytes = max_line_bytes
+        self.max_protocol_errors = max_protocol_errors
+        self.protocol_errors: Dict[str, int] = {}   # error kind -> count
         self._server: Optional[asyncio.AbstractServer] = None
 
     async def start(self) -> None:
         self._server = await asyncio.start_server(
-            self._handle, self.host, self.port)
+            self._handle, self.host, self.port, limit=self.max_line_bytes)
         self.port = self._server.sockets[0].getsockname()[1]
 
     async def aclose(self) -> None:
@@ -101,51 +111,104 @@ class FrontendServer:
     async def __aexit__(self, exc_type, exc, tb) -> None:
         await self.aclose()
 
+    async def _protocol_error(self, writer: asyncio.StreamWriter,
+                              kind: str, state: Dict) -> bool:
+        """Answer a poisoned line with a typed error line.  Returns False —
+        and closes the conversation with a final ``error budget exhausted``
+        line — once this connection has spent its error budget."""
+        self.protocol_errors[kind] = self.protocol_errors.get(kind, 0) + 1
+        state["errors"] = state.get("errors", 0) + 1
+        if state["errors"] > self.max_protocol_errors:
+            writer.write(json.dumps(
+                {"error": "error budget exhausted", "finished": True}
+            ).encode() + b"\n")
+            await writer.drain()
+            return False
+        writer.write(json.dumps({"error": kind}).encode() + b"\n")
+        await writer.drain()
+        return True
+
     async def _handle(self, reader: asyncio.StreamReader,
                       writer: asyncio.StreamWriter) -> None:
+        state: Dict = {"errors": 0}
         try:
             while True:
-                line = await reader.readline()
+                try:
+                    line = await reader.readline()
+                except ValueError:
+                    # line overran the stream limit: readline discarded the
+                    # buffered prefix, so the stream resyncs at the next
+                    # newline (the tail may surface as one bad-json line,
+                    # also charged to the error budget)
+                    if not await self._protocol_error(
+                            writer, "oversized line", state):
+                        return
+                    continue
                 if not line:
                     return                      # client went away while idle
                 try:
                     msg = json.loads(line)
                 except json.JSONDecodeError:
-                    writer.write(json.dumps(
-                        {"error": "bad json"}).encode() + b"\n")
-                    await writer.drain()
+                    if not await self._protocol_error(
+                            writer, "bad json", state):
+                        return
+                    continue
+                if not isinstance(msg, dict):
+                    # valid JSON, wrong shape (e.g. a bare int or list)
+                    if not await self._protocol_error(
+                            writer, "unknown message type", state):
+                        return
                     continue
                 if "cancel" in msg:
-                    self.aeng.cancel(int(msg["cancel"]))
+                    try:
+                        uid = int(msg["cancel"])
+                    except (TypeError, ValueError):
+                        if not await self._protocol_error(
+                                writer, "bad cancel", state):
+                            return
+                        continue
+                    self.aeng.cancel(uid)
                     continue
                 if "prompt" not in msg:
-                    writer.write(json.dumps(
-                        {"error": "missing prompt"}).encode() + b"\n")
-                    await writer.drain()
+                    if not await self._protocol_error(
+                            writer, "unknown message type", state):
+                        return
                     continue
-                await self._serve_request(msg, reader, writer)
+                if not await self._serve_request(msg, reader, writer, state):
+                    return
         except (ConnectionResetError, BrokenPipeError):
             pass
         finally:
             writer.close()
 
     async def _serve_request(self, msg: Dict, reader: asyncio.StreamReader,
-                             writer: asyncio.StreamWriter) -> None:
+                             writer: asyncio.StreamWriter,
+                             state: Dict) -> bool:
+        """Serve one submit message to stream completion.  Returns False when
+        the connection should close (error budget spent or client gone)."""
         deadline_ms = msg.get("deadline_ms", self.default_deadline_ms)
         try:
-            req = self.aeng.submit(
-                [int(t) for t in msg["prompt"]],
-                parse_params(msg, self.defaults),
-                deadline_s=(None if deadline_ms is None
-                            else float(deadline_ms) / 1e3))
-        except EngineOverloaded:
-            # backpressure: answer now with a terminal rejection line
+            prompt = [int(t) for t in msg["prompt"]]
+            params = parse_params(msg, self.defaults)
+            deadline_s = (None if deadline_ms is None
+                          else float(deadline_ms) / 1e3)
+        except (TypeError, ValueError):
+            # prompt not int-coercible, or poisoned params fields
+            return await self._protocol_error(writer, "bad request", state)
+        try:
+            req = self.aeng.submit(prompt, params, deadline_s=deadline_s)
+        except EngineOverloaded as e:
+            # backpressure / load shedding: answer now with a terminal
+            # rejection line naming which it was
+            from repro.serving.async_engine import EngineSaturated
             writer.write(json.dumps(
                 {"uid": -1, "token": -1, "index": -1, "finished": True,
-                 "finish_reason": "aborted", "error": "overloaded"}
+                 "finish_reason": "aborted",
+                 "error": ("shedding" if isinstance(e, EngineSaturated)
+                           else "overloaded")}
             ).encode() + b"\n")
             await writer.drain()
-            return
+            return True
         writer.write(json.dumps({"uid": req.uid}).encode() + b"\n")
         await writer.drain()
 
@@ -168,6 +231,7 @@ class FrontendServer:
         pump_task = asyncio.ensure_future(pump())
         peek: Optional[asyncio.Task] = asyncio.ensure_future(
             reader.readline())
+        ok = True
         try:
             while not pump_task.done():
                 waiters = {pump_task} | ({peek} if peek is not None else set())
@@ -181,19 +245,43 @@ class FrontendServer:
                         # in its buffer resets the connection instead of a
                         # clean FIN — same meaning: the consumer is gone
                         line = b""
+                    except ValueError:
+                        # oversized line mid-stream: typed error, resync
+                        if not await self._protocol_error(
+                                writer, "oversized line", state):
+                            ok = False
+                            break
+                        peek = asyncio.ensure_future(reader.readline())
+                        continue
                     if not line:                # disconnect: cancel + bail
                         self.aeng.cancel(req.uid)
                         pump_task.cancel()
                         self.aeng.release_stream(req.uid)
-                        return
+                        return False
                     try:
                         inner = json.loads(line)
                     except json.JSONDecodeError:
                         inner = {}
+                    if not isinstance(inner, dict):
+                        inner = {}
                     if "cancel" in inner:
-                        self.aeng.cancel(int(inner["cancel"]))
+                        try:
+                            self.aeng.cancel(int(inner["cancel"]))
+                        except (TypeError, ValueError):
+                            if not await self._protocol_error(
+                                    writer, "bad cancel", state):
+                                ok = False
+                                break
                     peek = asyncio.ensure_future(reader.readline())
-            await pump_task
+            if ok:
+                await pump_task
+            else:
+                # error budget spent mid-stream: the consumer is being
+                # dropped — end its request like a disconnect
+                self.aeng.cancel(req.uid)
+                pump_task.cancel()
+                self.aeng.release_stream(req.uid)
+            return ok
         finally:
             # unwind the peek fully before _handle's next readline() — an
             # abandoned cancelled task still holds the stream's read waiter
@@ -237,6 +325,12 @@ class ServeClient:
 
     async def _send(self, obj: Dict) -> None:
         self._writer.write(json.dumps(obj).encode() + b"\n")
+        await self._writer.drain()
+
+    async def send_raw(self, data: bytes) -> None:
+        """Write raw bytes on the wire — the chaos harness's malformed /
+        oversized line injector (a well-behaved client has no use for it)."""
+        self._writer.write(data)
         await self._writer.drain()
 
     async def _recv(self) -> Dict:

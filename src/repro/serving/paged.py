@@ -80,6 +80,12 @@ class BlockAllocator:
         # sanitizer hook (repro.analysis.shadow.ShadowBlockPool): when set,
         # every alloc/share/free transition is mirrored and validated.
         self.observer = None
+        # fault-injection hook (repro.serving.faults.FaultPlan.alloc_hook):
+        # when set and returning True for this call, alloc() reports
+        # starvation even if blocks are free — a simulated exhaustion spike.
+        # Callers already treat None as "wait and retry next step", so the
+        # injected starvation exercises the real backoff path.
+        self.fault_hook: Optional[Callable[[int], bool]] = None
 
     # -- capacity ------------------------------------------------------------
 
@@ -106,6 +112,8 @@ class BlockAllocator:
         callers treat that as 'wait', never as partial allocation.  When the
         free list is short, the ``reclaim`` hook (prefix-cache LRU eviction)
         is given a chance to recycle cached-but-unreferenced blocks first."""
+        if self.fault_hook is not None and self.fault_hook(n):
+            return None
         if n > len(self._free) and self.reclaim is not None:
             self.reclaim(n - len(self._free))
         if n > len(self._free):

@@ -10,9 +10,23 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# Sentinel emitted by ``guard_nonfinite`` for rows whose logits contain
+# NaN/Inf.  Outside the valid token range, so the host-side commit validation
+# (Engine._validate_tokens) can detect poisoned rows without a second device
+# sync; -1 is already taken by terminal marker StepOutputs.
+NONFINITE_TOKEN = -2
+
 
 def greedy(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def guard_nonfinite(tok: jax.Array, logits: jax.Array) -> jax.Array:
+    """Replace sampled tokens of rows with any non-finite logit by the
+    ``NONFINITE_TOKEN`` sentinel.  Fused into the jitted step impls so NaN/Inf
+    detection rides the existing single per-step host sync for free."""
+    ok = jnp.all(jnp.isfinite(logits), axis=-1)
+    return jnp.where(ok, tok, jnp.int32(NONFINITE_TOKEN))
 
 
 def sample_batch(keys: jax.Array, logits: jax.Array, temperature: jax.Array,
