@@ -40,6 +40,19 @@ def write_bench_serving(update: Dict, fresh: bool = False) -> None:
     path.write_text(text)
     (REPO_ROOT / "BENCH_serving.json").write_text(text)
 
+
+def telemetry_section(eng) -> Dict:
+    """Histogram snapshots from an engine's metrics registry, shaped for
+    the BENCH_serving.json ``telemetry`` section: every ``serving_*_ms``
+    histogram as its ``{count,sum,min,max,mean,p50,p95,p99}`` snapshot
+    plus the scalar counters/gauges verbatim."""
+    snap = eng.metrics.snapshot()
+    return {
+        "histograms": {k: v for k, v in snap.items() if isinstance(v, dict)},
+        "scalars": {k: v for k, v in snap.items()
+                    if not isinstance(v, dict)},
+    }
+
 # ~1M-param student: big enough to learn the synthetic tasks, small enough
 # for CPU benchmarking.  qwen3-family shape (qk_norm) like the paper's base.
 TINY = ModelConfig(name="bench-tiny", family="dense", vocab=288, d_model=128,

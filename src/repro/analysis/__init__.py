@@ -16,12 +16,19 @@ Three layers, all runnable via ``python -m repro.analysis`` (see
   with ``ServeConfig(sanitize=True)``.
 * :mod:`repro.analysis.retrace` — wraps the engine's jitted impls and fails
   when steady-state steps recompile.
+* :mod:`repro.analysis.tracecheck` — schema checker for the Chrome
+  trace-event JSON the serving tracer (``repro.serving.tracing``)
+  exports; CI gates ``serving_loadgen --smoke --trace`` on it.
 
-This package must stay importable without jax: ``lint`` is pure
-``ast``/stdlib and ``shadow`` is numpy-free pure Python, so the CI lint gate
-needs no accelerator stack.  Only ``retrace`` (and the dynamic smokes in
-``__main__``) touch jax, and they import it lazily.
+This package must stay importable without jax: ``lint`` and
+``tracecheck`` are pure ``ast``/stdlib and ``shadow`` is numpy-free pure
+Python, so the CI lint gate needs no accelerator stack.  Only ``retrace``
+(and the dynamic smokes in ``__main__``) touch jax, and they import it
+lazily.
 """
 from repro.analysis.shadow import BlockState, SanitizerError, ShadowBlockPool
+from repro.analysis.tracecheck import (TraceCheckError, check_trace,
+                                       validate_trace)
 
-__all__ = ["BlockState", "SanitizerError", "ShadowBlockPool"]
+__all__ = ["BlockState", "SanitizerError", "ShadowBlockPool",
+           "TraceCheckError", "check_trace", "validate_trace"]

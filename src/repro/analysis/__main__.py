@@ -7,7 +7,10 @@ Default run (what CI gates on) is jax-free and fast:
 2. the shadow-pool protocol self-test — a scripted clean request
    lifecycle must pass, then seeded mutations (a dropped trie reference,
    a scatter into a published block, a recycled live block) must each be
-   *caught*; a sanitizer that misses its seeded bugs is itself a failure.
+   *caught*; a sanitizer that misses its seeded bugs is itself a failure;
+3. the trace-schema self-test — a well-formed Chrome trace passes
+   ``tracecheck`` and seeded malformations (bad phase, missing dur,
+   non-object args) are each caught.
 
 Flags:
 
@@ -102,6 +105,49 @@ def shadow_selftest() -> bool:
     return ok
 
 
+def tracecheck_selftest() -> bool:
+    """A well-formed trace passes; seeded malformations are each caught."""
+    from repro.analysis.tracecheck import check_trace
+
+    ok = True
+    good = {"traceEvents": [
+        {"name": "process_name", "ph": "M", "pid": 1,
+         "args": {"name": "engine"}},
+        {"name": "commit", "cat": "step", "ph": "X", "ts": 0.0, "dur": 5.0,
+         "pid": 1, "tid": 5, "args": {"step": 0}},
+        {"name": "first_token", "cat": "request", "ph": "i", "ts": 2.0,
+         "pid": 2, "tid": 1, "s": "t"},
+    ]}
+    errs = check_trace(good)
+    if errs:
+        print(f"  FAILED: well-formed trace rejected: {errs}",
+              file=sys.stderr)
+        ok = False
+    else:
+        print("  clean trace: object form / X / i / M events ok")
+    bad_cases = [
+        ("unsupported phase", {"traceEvents": [
+            {"name": "x", "ph": "Z", "ts": 0, "pid": 1, "tid": 1}]}),
+        ("complete event without dur", {"traceEvents": [
+            {"name": "x", "ph": "X", "ts": 0, "pid": 1, "tid": 1}]}),
+        ("non-object args", {"traceEvents": [
+            {"name": "x", "ph": "X", "ts": 0, "dur": 1, "pid": 1,
+             "tid": 1, "args": [1, 2]}]}),
+        ("negative timestamp", {"traceEvents": [
+            {"name": "x", "ph": "X", "ts": -1, "dur": 1, "pid": 1,
+             "tid": 1}]}),
+        ("missing traceEvents", {"events": []}),
+    ]
+    for what, doc in bad_cases:
+        if check_trace(doc):
+            print(f"  caught : {what}")
+        else:
+            print(f"  MISSED : {what} — tracecheck did not flag it",
+                  file=sys.stderr)
+            ok = False
+    return ok
+
+
 def retrace_selftest() -> bool:
     """Watchdog mechanics against a tiny jitted fn (imports jax)."""
     import jax.numpy as jnp
@@ -167,6 +213,10 @@ def main(argv=None) -> int:
 
     print("shadow pool self-test:")
     if not shadow_selftest():
+        rc = 1
+
+    print("trace schema self-test:")
+    if not tracecheck_selftest():
         rc = 1
 
     if args.retrace_smoke:

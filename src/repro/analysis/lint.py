@@ -41,6 +41,14 @@ Rule catalog (ids are what suppressions and the baseline reference):
   ``ref.py`` whose parameter names are an ordered subsequence of the
   kernel's (tiling/interpret knobs may be kernel-only): the parity tests
   assume the two are call-compatible.
+* ``telemetry-alloc`` — an allocating argument (container literal,
+  comprehension, f-string, or a list/dict/set/tuple/sorted call) passed
+  to a telemetry call — a method on a ``tracer`` / ``recorder`` /
+  ``metrics`` receiver — in a function reachable from the hot
+  plan/launch/commit path.  Telemetry on the hot path must pass scalars
+  the instrumented code already holds (O(1) per event); building
+  containers per token/step turns "always-on-cheap" into allocation
+  pressure.
 
 Suppression: ``# lint: allow(rule-id)`` (optionally with a reason after
 the closing paren) on the offending line or the line directly above.
@@ -69,6 +77,7 @@ RULES: Dict[str, str] = {
     "pallas-align": "literal BlockSpec dim misaligned with the TPU tile",
     "pallas-grid-div": "grid extent uses // instead of pl.cdiv",
     "kernel-ref-parity": "kernel.py/ref.py signature mismatch",
+    "telemetry-alloc": "allocating argument to a hot-path telemetry call",
 }
 
 # the engine's hot path: one step = plan -> launch -> commit (plan_spec is
@@ -84,6 +93,11 @@ HOT_PACKAGES = ("serving", "analysis")
 
 NUMPY_SYNC_FUNCS = {"asarray", "array"}
 SYNC_METHODS = {"item", "block_until_ready"}
+
+# receivers whose method calls count as telemetry, and builtins whose call
+# as a telemetry argument allocates a container per event
+TELEMETRY_RECEIVERS = {"tracer", "recorder", "metrics"}
+ALLOC_BUILTINS = {"list", "dict", "set", "tuple", "sorted"}
 
 _ALLOW_RE = re.compile(r"#\s*lint:\s*allow\(([^)]*)\)")
 
@@ -252,7 +266,10 @@ class Linter:
                 sites.append((node, f"{node.func.id} call"))
         return sites
 
-    def check_host_sync(self) -> None:
+    def _hot_reachable(self) -> List[FuncInfo]:
+        """Functions reachable from HOT_ROOTS by bare-name call resolution
+        over the HOT_PACKAGES modules (shared by the host-sync and
+        telemetry-alloc rules)."""
         hot = [m for m in self.modules
                if any(f"/{pkg}/" in m.rel.replace("\\", "/")
                       for pkg in HOT_PACKAGES)]
@@ -285,12 +302,59 @@ class Linter:
             seen.add(key)
             reached.append(fn)
             stack.extend(edges(fn))
-        for fn in reached:
+        return reached
+
+    def check_host_sync(self) -> None:
+        for fn in self._hot_reachable():
             for node, what in self._sync_sites(fn.module, fn.node):
                 self._emit(
                     "host-sync", fn.module, node, fn.qualname,
                     f"{what} is reachable from the hot plan/launch/commit "
                     "path; each step budgets exactly one device sync")
+
+    # -- rule: telemetry-alloc -------------------------------------------------
+
+    @staticmethod
+    def _allocating_arg(node: ast.AST) -> Optional[str]:
+        """Why ``node`` allocates a container per call, or None."""
+        if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.Tuple)):
+            return f"{type(node).__name__.lower()} literal"
+        if isinstance(node, (ast.ListComp, ast.DictComp, ast.SetComp,
+                             ast.GeneratorExp)):
+            return "comprehension"
+        if isinstance(node, ast.JoinedStr):
+            return "f-string"
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in ALLOC_BUILTINS:
+            return f"{node.func.id}() call"
+        return None
+
+    def check_telemetry_alloc(self) -> None:
+        """Telemetry calls on the hot path must pass scalars the caller
+        already holds: flag container-building arguments to any method
+        call on a tracer / recorder / metrics receiver in a hot-reachable
+        function."""
+        for fn in self._hot_reachable():
+            for node in ast.walk(fn.node):
+                if not (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)):
+                    continue
+                recv = node.func.value
+                recv_name = None
+                if isinstance(recv, ast.Name):
+                    recv_name = recv.id
+                elif isinstance(recv, ast.Attribute):
+                    recv_name = recv.attr
+                if recv_name not in TELEMETRY_RECEIVERS:
+                    continue
+                for arg in list(node.args) + [k.value for k in node.keywords]:
+                    why = self._allocating_arg(arg)
+                    if why is not None:
+                        self._emit(
+                            "telemetry-alloc", fn.module, arg, fn.qualname,
+                            f"{why} passed to {recv_name}.{node.func.attr}() "
+                            "on the hot path — telemetry must record "
+                            "scalars the caller already holds")
 
     # -- rules: jit hygiene ----------------------------------------------------
 
@@ -590,6 +654,7 @@ class Linter:
         self.findings = []
         self.check_asserts()
         self.check_host_sync()
+        self.check_telemetry_alloc()
         self.check_jit_hygiene()
         self.check_pallas()
         self.check_kernel_ref_parity()

@@ -39,6 +39,13 @@ Engine.stats() (admissions, preemptions, chunked-prefill work, block
 occupancy, prefix-cache hits/misses/evictions, cancellations/deadlines,
 host-dispatch overlap) plus TTFT / queue-wait / end-to-end percentiles are
 printed at end of run either way.
+
+Observability (README "Observability"): ``--trace out.json`` records
+per-request and per-step spans and writes a Perfetto-loadable Chrome
+trace at end of run; ``--metrics-interval 5`` prints a live line from the
+engine's metrics registry every 5 s (the same registry the front-end
+serves over ``{"type": "stats"}``); ``--flight-dir DIR`` (with
+``--supervise``) writes a flight-recorder dump on every recovery action.
 """
 from __future__ import annotations
 
@@ -57,7 +64,8 @@ from repro.serving.api import SamplingParams
 from repro.serving.async_engine import AsyncEngine
 from repro.serving.engine import Engine, ServeConfig, convert_to_packed
 from repro.serving.frontend import FrontendServer, ServeClient
-from repro.serving.supervisor import ServingSupervisor
+from repro.serving.supervisor import ServingSupervisor, SupervisorConfig
+from repro.serving.tracing import Tracer
 
 
 def build_engine(args) -> Engine:
@@ -100,6 +108,9 @@ def build_engine(args) -> Engine:
         print(f"[attn] decode impl = {eng.attn_impl}"
               + (" (interpret-mode kernel)" if eng.attn_impl == "fused"
                  and jax.default_backend() == "cpu" else ""))
+    if getattr(args, "trace", None):
+        eng.tracer = Tracer(clock=eng.clock)
+        print(f"[trace] recording spans -> {args.trace}")
     return eng
 
 
@@ -165,6 +176,55 @@ def print_stats(eng: Engine) -> None:
             print(_pct_line("recovery", s.recovery_ms))
 
 
+def metrics_line(eng: Engine) -> str:
+    """One compact live-metrics log line (the --metrics-interval output),
+    read straight off the engine's registry snapshot."""
+    m = eng.metrics.snapshot()
+    ttft = m["serving_ttft_ms"]
+    e2e = m["serving_e2e_latency_ms"]
+    return (f"[metrics] requests={m['serving_requests_submitted_total']} "
+            f"steps={m['serving_steps_committed_total']} "
+            f"tokens={m['serving_tokens_generated_total']} "
+            f"queue={m['serving_queue_depth']} "
+            f"active={m['serving_active_slots']} "
+            f"ttft_p50={ttft['p50']:.0f}ms "
+            f"e2e_p95={e2e['p95']:.0f}ms")
+
+
+async def _metrics_logger(aeng: AsyncEngine, interval: float) -> None:
+    """Periodic live-metrics line while serving (``--metrics-interval``)."""
+    while True:
+        await asyncio.sleep(interval)
+        print(metrics_line(aeng.engine))
+
+
+def _start_metrics_logger(aeng: AsyncEngine, args):
+    iv = getattr(args, "metrics_interval", None)
+    if not iv or iv <= 0:
+        return None
+    return asyncio.ensure_future(_metrics_logger(aeng, iv))
+
+
+async def _stop_metrics_logger(task) -> None:
+    if task is None:
+        return
+    task.cancel()
+    await asyncio.gather(task, return_exceptions=True)
+
+
+def export_trace(eng: Engine, args) -> None:
+    """Write the Chrome trace-event file at end of run (``--trace``)."""
+    path = getattr(args, "trace", None)
+    if not path or eng.tracer is None:
+        return
+    doc = eng.tracer.export(path)
+    counts = doc["otherData"]["counts"]
+    print(f"[trace] wrote {len(doc['traceEvents'])} events -> {path} "
+          f"(requests={counts['request']} steps={counts['step']} "
+          f"prefill_chunks={counts['prefill_chunk']}) — load in "
+          "https://ui.perfetto.dev or chrome://tracing")
+
+
 async def run_load(eng: Engine, args) -> None:
     """Many-client load generator through the TCP front-end: one connection
     per request, arrivals on a schedule.  ``--arrival-rate 0`` is the closed
@@ -184,6 +244,7 @@ async def run_load(eng: Engine, args) -> None:
     sup = _make_supervisor(eng, args)
     async with AsyncEngine(eng, max_queue=args.max_queue,
                            supervisor=sup) as aeng:
+        metrics_task = _start_metrics_logger(aeng, args)
         async with FrontendServer(aeng) as srv:
             t0 = time.perf_counter()
 
@@ -208,6 +269,7 @@ async def run_load(eng: Engine, args) -> None:
             await asyncio.gather(*(one_client(i)
                                    for i in range(args.requests)))
             dt = time.perf_counter() - t0
+        await _stop_metrics_logger(metrics_task)
         eng = aeng.engine        # a supervisor restart swaps the engine
 
     n_tok = sum(sum(1 for e in evs if e.get("token", -1) >= 0)
@@ -225,6 +287,7 @@ async def run_load(eng: Engine, args) -> None:
               f"{args.deadline_ms:.0f} ms deadline "
               f"({met / max(dt, 1e-9):.2f} good req/s)")
     print_stats(eng)
+    export_trace(eng, args)
 
 
 def _make_supervisor(eng: Engine, args):
@@ -233,7 +296,10 @@ def _make_supervisor(eng: Engine, args):
     if not getattr(args, "supervise", False):
         return None
     cfg, params, scfg = eng.cfg, eng.params, eng.scfg
-    return ServingSupervisor(lambda: Engine(cfg, params, scfg))
+    sup_cfg = None
+    if getattr(args, "flight_dir", None):
+        sup_cfg = SupervisorConfig(flight_dir=args.flight_dir)
+    return ServingSupervisor(lambda: Engine(cfg, params, scfg), sup_cfg)
 
 
 async def run_server(eng: Engine, args) -> None:
@@ -242,6 +308,7 @@ async def run_server(eng: Engine, args) -> None:
     aeng = AsyncEngine(eng, max_queue=args.max_queue,
                        supervisor=_make_supervisor(eng, args))
     async with aeng:
+        metrics_task = _start_metrics_logger(aeng, args)
         async with FrontendServer(
                 aeng, host=args.host, port=args.port,
                 defaults=SamplingParams(max_tokens=args.max_tokens,
@@ -255,7 +322,9 @@ async def run_server(eng: Engine, args) -> None:
                     await asyncio.sleep(3600)
             except (KeyboardInterrupt, asyncio.CancelledError):
                 print("[serve] draining...")
+        await _stop_metrics_logger(metrics_task)
     print_stats(aeng.engine)
+    export_trace(aeng.engine, args)
 
 
 def main(argv=None):
@@ -326,6 +395,18 @@ def main(argv=None):
                          "validate every alloc/share/free/publish transition "
                          "and each step's KV write-set; violations raise "
                          "SanitizerError (debug/CI knob, paged only)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record per-request and per-step spans and write "
+                         "a Chrome trace-event JSON file at end of run "
+                         "(load in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-interval", type=float, default=None,
+                    metavar="SEC",
+                    help="print a live metrics line from the engine's "
+                         "registry every SEC seconds while serving")
+    ap.add_argument("--flight-dir", default=None, metavar="DIR",
+                    help="with --supervise: write a flight-recorder dump "
+                         "(flight-<seq>-<reason>.json) to DIR on every "
+                         "recovery action")
     ap.add_argument("--shared-prefixes", type=int, default=0,
                     help="load-gen: draw every prompt from N shared system "
                          "prefixes plus a random tail (0 = fully random "

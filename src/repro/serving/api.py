@@ -176,7 +176,25 @@ class EngineStats:
     hung-step watchdog; ``degrade_tier`` the current degradation tier
     (0 = normal .. 3 = shedding); ``recovery_ms`` percentiles of
     crash-to-first-committed-step wall time across restarts.
+
+    ``requests_submitted`` counts requests accepted by
+    ``Engine.submit_request`` — unlike ``admissions`` it does not
+    double-count preemption re-admissions, so it equals the number of
+    per-request root spans in a trace (supervisor restarts preserve it
+    across re-submission of salvaged requests).
+
+    Every field is also exported live by the engine's metrics registry
+    (``Engine.metrics``; see the README Observability catalog).  The
+    mapping is mechanical: counters gain a ``serving_`` prefix and a
+    ``_total`` suffix (``steps_committed`` ↔
+    ``serving_steps_committed_total``), instantaneous values are gauges
+    (``queue_depth`` ↔ ``serving_queue_depth``, ``blocks_free`` ↔
+    ``serving_kv_blocks_free``), and every ``*_ms`` percentile dict is
+    rendered from a fixed-memory histogram of the same name
+    (``ttft_ms`` ↔ ``serving_ttft_ms``, ``e2e_latency_ms`` ↔
+    ``serving_e2e_latency_ms``).
     """
+    requests_submitted: int = 0
     admissions: int = 0
     preemptions: int = 0
     prefill_positions: int = 0

@@ -245,14 +245,21 @@ class AsyncEngine:
                     # a fault on the *speculative* launch: the in-flight
                     # step is healthy — drop the speculation and commit it
                     eng._step_failures += 1
+                    if eng.recorder is not None:
+                        eng.recorder.record("spec_launch_failure",
+                                            error=type(e).__name__)
                     nxt = None
                 tok_np = None
                 if inflight.tok is not None:
                     # the only device sync per step, moved off-thread so the
                     # event loop keeps serving clients while the device runs
+                    t_sync = eng.clock.now()
                     sync = np.asarray  # lint: allow(host-sync) budgeted sync
                     tok_np = await loop.run_in_executor(
                         None, sync, inflight.tok)
+                    if eng.tracer is not None:
+                        eng.tracer.sync_span(t_sync, eng.clock.now(),
+                                             eng._steps_committed)
                 else:
                     await asyncio.sleep(0)
                 eng.commit_step(inflight, tok_np)
@@ -308,9 +315,13 @@ class AsyncEngine:
                 inflight = eng.launch_step(plan)
                 tok_np = None
                 if inflight.tok is not None:
+                    t_sync = eng.clock.now()
                     sync = np.asarray  # lint: allow(host-sync) budgeted sync
                     tok_np = await loop.run_in_executor(
                         None, sync, inflight.tok)
+                    if eng.tracer is not None:
+                        eng.tracer.sync_span(t_sync, eng.clock.now(),
+                                             eng._steps_committed)
                 eng.commit_step(inflight, tok_np)
                 sup.note_commit(ok=True)
                 return

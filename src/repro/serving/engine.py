@@ -96,7 +96,6 @@ the in-flight step's row for that slot is discarded at commit.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -112,6 +111,7 @@ from repro.serving.paged import BlockAllocator
 from repro.serving.prefix_cache import RadixPrefixCache
 from repro.serving.sampling import guard_nonfinite, sample_batch
 from repro.serving.scheduler import Scheduler, bucket_length
+from repro.serving.telemetry import Clock, Histogram, MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -274,7 +274,13 @@ class Engine:
     blocking ``generate()`` compatibility wrapper."""
 
     def __init__(self, cfg: ModelConfig, params,
-                 scfg: Optional[ServeConfig] = None):
+                 scfg: Optional[ServeConfig] = None,
+                 clock: Optional[Clock] = None):
+        # the engine's sole timestamp source (serving/telemetry.py): every
+        # former time.perf_counter() site reads engine.clock.now(), so the
+        # tracer shares the latency metrics' timeline and tests can swap in
+        # a FakeClock before the first submit
+        self.clock = clock if clock is not None else Clock()
         self.scfg = scfg if scfg is not None else ServeConfig()
         if self.scfg.block_kv is not None:
             cfg = cfg.replace(block_kv=self.scfg.block_kv)
@@ -370,15 +376,20 @@ class Engine:
         self._uid_counter = 0
         self._requests: Dict[int, GenerationRequest] = {}   # uid -> in flight
         self._submit_ts: Dict[int, float] = {}   # uid -> submit wall time
-        self._ttft_ms: List[float] = []          # submit -> first token
-        self._queue_wait_ms: List[float] = []    # submit -> admission
-        self._e2e_ms: List[float] = []           # submit -> finish
+        # latency series are fixed-memory log-bucketed histograms
+        # (serving/telemetry.py) — O(1) per observe, snapshot-cheap mid-run;
+        # the attr names are load-bearing (supervisor._carry_stats copies
+        # these objects across restarts, so series are cumulative)
+        self._ttft_ms = Histogram()              # submit -> first token
+        self._queue_wait_ms = Histogram()        # submit -> admission
+        self._e2e_ms = Histogram()               # submit -> finish
         # host dispatch-gap accounting (EngineStats.step_gap_ms): wall time
         # from a step's device sync to the next step's dispatch return; a
         # step launched *before* the previous sync (the async loop's
         # speculative launches) counts as overlapped, gap 0 by construction
-        self._step_gap_ms: List[float] = []
+        self._step_gap_ms = Histogram()
         self._last_sync: Optional[float] = None
+        self._requests_submitted = 0
         self._steps_committed = 0
         self._steps_overlapped = 0
         self._tokens_generated = 0
@@ -398,7 +409,13 @@ class Engine:
         self._load_sheds = 0
         self._hung_steps = 0
         self._degrade_tier = 0
-        self._recovery_ms: List[float] = []
+        self._recovery_ms = Histogram()
+        # opt-in telemetry sinks, None by default so the hot path pays one
+        # attribute check when they are off: a serving/tracing.Tracer
+        # recording span timelines, and a telemetry.FlightRecorder ring the
+        # supervisor dumps on recovery actions (attached via its factory)
+        self.tracer = None
+        self.recorder = None
         # live decode state, allocated lazily on first admission; idle rows
         # hold pad_id so their (discarded) compute never depends on a dead
         # request's last token
@@ -410,6 +427,111 @@ class Engine:
         # positions, bucketed table width, chunk plan), set by step();
         # telemetry for the serving benchmark's KV-traffic model
         self.last_decode: Optional[Dict] = None
+        self._build_metrics()
+
+    def _build_metrics(self) -> None:
+        """(Re)build the metrics registry over the engine's live state.
+
+        Histograms are registered as owned objects; the step/robustness
+        counters export through render-time callbacks so the hot path keeps
+        plain integer increments.  Called again by the supervisor after
+        ``_carry_stats`` re-homes the histogram objects on a restarted
+        engine, rebinding every callback to the new instance.  The metric
+        names here are the canonical catalog (README "Observability") and
+        map 1:1 onto :class:`EngineStats` fields."""
+        reg = MetricsRegistry()
+        for name, hist, help_ in (
+            ("serving_ttft_ms", self._ttft_ms,
+             "submit -> first token latency (EngineStats.ttft_ms)"),
+            ("serving_queue_wait_ms", self._queue_wait_ms,
+             "submit -> admission wait (EngineStats.queue_wait_ms)"),
+            ("serving_e2e_latency_ms", self._e2e_ms,
+             "submit -> finish latency (EngineStats.e2e_latency_ms)"),
+            ("serving_step_gap_ms", self._step_gap_ms,
+             "device sync -> next dispatch gap (EngineStats.step_gap_ms)"),
+            ("serving_recovery_ms", self._recovery_ms,
+             "failure -> healthy commit (EngineStats.recovery_ms)"),
+        ):
+            reg.register(name, hist, help_)
+        for name, kind, fn, help_ in (
+            ("serving_requests_submitted_total", "counter",
+             lambda: self._requests_submitted,
+             "requests accepted by submit_request "
+             "(EngineStats.requests_submitted)"),
+            ("serving_admissions_total", "counter",
+             lambda: self.sched.admissions,
+             "requests admitted to slots (EngineStats.admissions)"),
+            ("serving_preemptions_total", "counter",
+             lambda: self.sched.preemptions,
+             "slots preempted for recompute (EngineStats.preemptions)"),
+            ("serving_steps_committed_total", "counter",
+             lambda: self._steps_committed,
+             "fused steps committed (EngineStats.steps_committed)"),
+            ("serving_steps_overlapped_total", "counter",
+             lambda: self._steps_overlapped,
+             "steps launched before the previous sync "
+             "(EngineStats.steps_overlapped)"),
+            ("serving_tokens_generated_total", "counter",
+             lambda: self._tokens_generated,
+             "tokens emitted to requests (EngineStats.tokens_generated)"),
+            ("serving_prefill_positions_total", "counter",
+             lambda: self._prefill_positions,
+             "prompt positions run through chunk steps "
+             "(EngineStats.prefill_positions)"),
+            ("serving_prefill_positions_skipped_total", "counter",
+             lambda: self._prefill_skipped,
+             "prompt positions covered by shared prefix blocks "
+             "(EngineStats.prefill_positions_skipped)"),
+            ("serving_prefill_chunks_total", "counter",
+             lambda: self._prefill_chunks,
+             "prefill chunks advanced (EngineStats.prefill_chunks)"),
+            ("serving_cancellations_total", "counter",
+             lambda: self._cancellations,
+             "client cancellations (EngineStats.cancellations)"),
+            ("serving_deadline_expirations_total", "counter",
+             lambda: self._deadline_expirations,
+             "requests finished by deadline "
+             "(EngineStats.deadline_expirations)"),
+            ("serving_step_failures_total", "counter",
+             lambda: self._step_failures,
+             "step failures observed (EngineStats.step_failures)"),
+            ("serving_step_retries_total", "counter",
+             lambda: self._step_retries,
+             "step retries attempted (EngineStats.step_retries)"),
+            ("serving_quarantines_total", "counter",
+             lambda: self._quarantines,
+             "requests quarantined with FinishReason.ERROR "
+             "(EngineStats.quarantines)"),
+            ("serving_engine_restarts_total", "counter",
+             lambda: self._engine_restarts,
+             "supervisor snapshot-restores (EngineStats.engine_restarts)"),
+            ("serving_load_sheds_total", "counter",
+             lambda: self._load_sheds,
+             "queued requests shed under pressure "
+             "(EngineStats.load_sheds)"),
+            ("serving_hung_steps_total", "counter",
+             lambda: self._hung_steps,
+             "watchdog-flagged slow commits (EngineStats.hung_steps)"),
+            ("serving_queue_depth", "gauge",
+             lambda: len(self.sched.waiting),
+             "requests waiting for a slot (EngineStats.queue_depth)"),
+            ("serving_active_slots", "gauge",
+             lambda: len(self.sched.active_slots()),
+             "slots currently decoding or prefilling"),
+            ("serving_degrade_tier", "gauge",
+             lambda: self._degrade_tier,
+             "graceful-degradation tier (EngineStats.degrade_tier)"),
+            ("serving_kv_blocks_free", "gauge",
+             lambda: (self.allocator.available()
+                      if self.allocator is not None else 0),
+             "allocatable KV blocks (EngineStats.blocks_free)"),
+            ("serving_kv_blocks_in_use", "gauge",
+             lambda: (self.allocator.blocks_in_use()
+                      if self.allocator is not None else 0),
+             "referenced KV blocks (EngineStats.blocks_in_use)"),
+        ):
+            reg.register_callback(name, kind, fn, help_)
+        self.metrics = reg
 
     # -- jitted cores -----------------------------------------------------------
 
@@ -539,7 +661,7 @@ class Engine:
             params = SamplingParams(temperature=self.scfg.temperature,
                                     top_p=self.scfg.top_p)
         deadline = (None if deadline_s is None
-                    else time.perf_counter() + deadline_s)
+                    else self.clock.now() + deadline_s)
         req = make_request(prompt, uid, params, on_token, deadline=deadline)
         return self.submit_request(req)
 
@@ -549,8 +671,14 @@ class Engine:
                 f"uid {req.uid} already belongs to an in-flight request; "
                 "reusing it would orphan that request's callback and finish "
                 "bookkeeping")
+        now = self.clock.now()
         self._requests[req.uid] = req
-        self._submit_ts[req.uid] = time.perf_counter()
+        self._submit_ts[req.uid] = now
+        self._requests_submitted += 1
+        if self.tracer is not None:
+            # idempotent per uid: supervisor restarts re-submit salvaged
+            # requests without opening (or counting) a second root span
+            self.tracer.request_submit(req.uid, now)
         self.sched.submit(req)
         return req
 
@@ -577,6 +705,7 @@ class Engine:
         preempt starved slots), and snapshot active slots / owners /
         positions.  Rejection and deadline marker events are finalized here
         (callbacks fire at plan time) and carried in ``plan.events``."""
+        t_plan = self.clock.now()
         if self.fault_hook is not None:
             # fires before any side effect: a raised plan fault leaves the
             # scheduler untouched and the supervisor simply replans
@@ -588,7 +717,7 @@ class Engine:
         events.extend(rejected)
         if admitted:
             self._ensure_state()
-            now = time.perf_counter()
+            now = self.clock.now()
             for slot, req in admitted:
                 self._keys = self._keys.at[slot].set(self._request_key(req))
                 # positions covered by trie-shared blocks skip prefill; on a
@@ -596,7 +725,9 @@ class Engine:
                 self._prefill_skipped += int(self.sched.prefix_lens[slot])
                 t0 = self._submit_ts.get(req.uid)
                 if t0 is not None:
-                    self._queue_wait_ms.append((now - t0) * 1e3)
+                    self._queue_wait_ms.observe((now - t0) * 1e3)
+                if self.tracer is not None:
+                    self.tracer.request_admitted(req.uid, now)
         # plan this step's chunks (may preempt half-prefilled slots whose
         # growth starves; may stall slots past the prefill budget)
         chunks = self.sched.next_chunks()
@@ -604,6 +735,10 @@ class Engine:
         stalled = [s for s in active
                    if self.sched.pending[s] and s not in chunks]
         owners = {s: self.sched.slots[s].uid for s in active}
+        if self.tracer is not None:
+            self.tracer.plan_span(t_plan, self.clock.now(),
+                                  self._steps_committed, len(active),
+                                  len(chunks))
         return StepPlan(events=events, active=active, owners=owners,
                         chunks=chunks, stalled=stalled,
                         positions=self.sched.positions.astype(np.int32,
@@ -621,6 +756,7 @@ class Engine:
         nothing attends before it is overwritten.  Declined when admission
         could run instead (waiting requests + a free slot): filling a slot
         beats overlapping one step."""
+        t_plan = self.clock.now()
         plan = inflight.plan
         if inflight.tok is None or plan.chunks or plan.stalled:
             return None                # only pure-decode steps speculate
@@ -645,6 +781,10 @@ class Engine:
         positions = sc.positions.astype(np.int32, copy=True)
         for slot in active:
             positions[slot] += 1       # where step N+1 writes, post-commit-N
+        if self.tracer is not None:
+            self.tracer.plan_span(t_plan, self.clock.now(),
+                                  self._steps_committed, len(active), 0,
+                                  spec=True)
         return StepPlan(events=[], active=list(active), owners=dict(plan.owners),
                         chunks={}, stalled=[], positions=positions, spec=True)
 
@@ -657,9 +797,9 @@ class Engine:
         next step while the device executes.  A speculative plan feeds
         ``feed.tok`` — the previous step's *device* tokens — instead of the
         host-synced ``self._tokens``."""
+        t_launch = self.clock.now()
         if not plan.active:
-            return InflightStep(plan=plan, tok=None,
-                                launched_at=time.perf_counter())
+            return InflightStep(plan=plan, tok=None, launched_at=t_launch)
         if self.fault_hook is not None:
             # fires before dispatch: a raised launch fault (or injected
             # slow/hung step) leaves device state untouched — the same plan
@@ -672,8 +812,11 @@ class Engine:
             tok = self._launch_chunk(plan)
         else:
             tok = self._launch_decode(plan, feed)
-        return InflightStep(plan=plan, tok=tok,
-                            launched_at=time.perf_counter())
+        launched_at = self.clock.now()
+        if self.tracer is not None:
+            self.tracer.launch_span(t_launch, launched_at,
+                                    self._steps_committed, plan.spec)
+        return InflightStep(plan=plan, tok=tok, launched_at=launched_at)
 
     def commit_step(self, inflight: InflightStep,
                     tok_np: Optional[np.ndarray] = None) -> List[StepOutput]:
@@ -703,13 +846,14 @@ class Engine:
             # the same plan (KV rewrites are (token, position)-determined,
             # hence bit-identical on replay)
             self._validate_tokens(plan, tok_np)
-            now = time.perf_counter()
+            now = self.clock.now()
+            step_id = self._steps_committed
             self._steps_committed += 1
             if self._last_sync is not None:
                 gap = inflight.launched_at - self._last_sync
                 if gap <= 0.0:
                     self._steps_overlapped += 1
-                self._step_gap_ms.append(max(0.0, gap) * 1e3)
+                self._step_gap_ms.observe(max(0.0, gap) * 1e3)
             self._last_sync = now
             for slot in plan.active:
                 req = sc.slots[slot]
@@ -725,6 +869,25 @@ class Engine:
                 outs.append(sc.record(slot, int(tok_np[slot])))
             self._prefill_positions += sum(plan.chunks.values())
             self._prefill_chunks += len(plan.chunks)
+            if self.tracer is not None:
+                # device span: dispatch return -> host-visible sync; the
+                # commit span covers the scheduler application.  One chunk
+                # span per planned chunk keeps counts['prefill_chunk'] ==
+                # EngineStats.prefill_chunks (both count plan.chunks of
+                # committed steps, owner-valid or not), and commit spans
+                # mirror _steps_committed exactly.
+                self.tracer.device_span(inflight.launched_at, now, step_id,
+                                        plan.spec)
+                for slot, n in plan.chunks.items():
+                    self.tracer.prefill_chunk(plan.owners.get(slot, -1),
+                                              inflight.launched_at, now, n)
+                self.tracer.commit_span(now, self.clock.now(), step_id,
+                                        len(outs), len(plan.chunks))
+            if self.recorder is not None:
+                self.recorder.record("commit", step=step_id,
+                                     active=len(plan.active),
+                                     chunks=len(plan.chunks),
+                                     outputs=len(outs), spec=plan.spec)
         # any slot freed this step (finish, cancel, or paged preemption) must
         # decode the pad token while idle, not the dead request's last token
         for slot, req in enumerate(sc.slots):
@@ -815,6 +978,9 @@ class Engine:
                                    index=req.num_generated, finished=True,
                                    finish_reason=FinishReason.ABORTED))
             self._load_sheds += 1
+        if outs and self.recorder is not None:
+            self.recorder.record("load_shed", count=len(outs),
+                                 kept=max(0, keep))
         self._finalize_outputs(outs)
         return outs
 
@@ -958,6 +1124,8 @@ class Engine:
             self._quarantines += 1
         else:
             self._cancellations += 1
+        if self.recorder is not None:
+            self.recorder.record("cancel", uid=uid, reason=reason.name)
         self._finalize_outputs([out])
         return out
 
@@ -967,7 +1135,7 @@ class Engine:
         Called at every plan boundary; the async loop also sweeps between
         speculative launches.  Returns the (already finalized) marker
         events."""
-        now = time.perf_counter()
+        now = self.clock.now()
         expired = [req.uid for req in self._requests.values()
                    if req.deadline is not None and now >= req.deadline]
         outs = []
@@ -983,21 +1151,31 @@ class Engine:
         token counters, the per-request callback, and in-flight map cleanup."""
         if not outs:
             return
-        now = time.perf_counter()
+        now = self.clock.now()
         for out in outs:
             if out.token >= 0:
                 self._tokens_generated += 1
                 if out.index == 0:
                     t0 = self._submit_ts.get(out.uid)
                     if t0 is not None:
-                        self._ttft_ms.append((now - t0) * 1e3)
+                        self._ttft_ms.observe((now - t0) * 1e3)
+                    if self.tracer is not None:
+                        self.tracer.request_first_token(out.uid, now)
             req = self._requests.get(out.uid)
             if req is not None and req.on_token is not None:
                 req.on_token(out)
             if out.finished:
                 t0 = self._submit_ts.pop(out.uid, None)
                 if t0 is not None:
-                    self._e2e_ms.append((now - t0) * 1e3)
+                    self._e2e_ms.observe((now - t0) * 1e3)
+                if self.tracer is not None:
+                    # every terminal path (finish / cancel / deadline /
+                    # quarantine / shed / rejection) funnels through here,
+                    # so the root span always closes
+                    reason = (out.finish_reason.name.lower()
+                              if out.finish_reason is not None else "stop")
+                    tokens = req.num_generated if req is not None else 0
+                    self.tracer.request_finish(out.uid, now, reason, tokens)
                 self._requests.pop(out.uid, None)
 
     def stream(self) -> Iterator[StepOutput]:
@@ -1080,19 +1258,24 @@ class Engine:
         occupancy, latency percentiles (TTFT, queue wait, end-to-end),
         host dispatch-gap / overlap accounting, cancellation and deadline
         counters, and — with ``ServeConfig(prefix_cache=True)`` — the
-        radix-cache hit/miss/eviction counters."""
+        radix-cache hit/miss/eviction counters.
+
+        Cheap to call mid-run: latency series live in fixed-memory
+        log-bucketed histograms (serving/telemetry.py), so rendering is
+        O(buckets) with no list copies, and *every* series guards the
+        empty case the same way — ``None`` until the first sample,
+        ``{"mean","p50","p95","p99"}`` after (single-sample series
+        render that sample exactly).  The live metric names behind each
+        field are listed in the README's Observability catalog;
+        ``Engine.metrics.snapshot()`` serves the same numbers without
+        building an EngineStats."""
         alloc = self.allocator
 
-        def pct(xs: List[float]) -> Optional[Dict[str, float]]:
-            if not xs:
-                return None
-            arr = np.asarray(xs)
-            return {"mean": float(arr.mean()),
-                    "p50": float(np.percentile(arr, 50)),
-                    "p95": float(np.percentile(arr, 95)),
-                    "p99": float(np.percentile(arr, 99))}
+        def pct(h: Histogram) -> Optional[Dict[str, float]]:
+            return h.percentiles() if h.count else None
 
         return EngineStats(
+            requests_submitted=self._requests_submitted,
             admissions=self.sched.admissions,
             preemptions=self.sched.preemptions,
             prefill_positions=self._prefill_positions,

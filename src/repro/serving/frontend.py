@@ -13,6 +13,11 @@ Client -> server (one JSON object per line):
   ``deadline_ms`` (relative) arms a per-request deadline.
 * ``{"cancel": <uid>}`` — cancel an in-flight request by uid (any
   connection may cancel any uid; uids are returned in the ack).
+* ``{"type": "stats"}`` — fetch a live metrics snapshot from the engine's
+  registry; the reply is one line ``{"type": "stats", "stats": {...}}``
+  (the JSON form of every counter / gauge / histogram).  With
+  ``"format": "prometheus"`` the reply instead carries the registry's
+  Prometheus text exposition in a ``"text"`` field.
 
 Server -> client:
 
@@ -168,6 +173,19 @@ class FrontendServer:
                             return
                         continue
                     self.aeng.cancel(uid)
+                    continue
+                if msg.get("type") == "stats":
+                    # live metrics: snapshot the registry (O(metrics), no
+                    # engine locking needed — the registry reads counters
+                    # the event loop itself maintains)
+                    reg = self.aeng.engine.metrics
+                    if msg.get("format") == "prometheus":
+                        reply = {"type": "stats", "format": "prometheus",
+                                 "text": reg.render_prometheus()}
+                    else:
+                        reply = {"type": "stats", "stats": reg.snapshot()}
+                    writer.write(json.dumps(reply).encode() + b"\n")
+                    await writer.drain()
                     continue
                 if "prompt" not in msg:
                     if not await self._protocol_error(
@@ -338,6 +356,16 @@ class ServeClient:
         if not line:
             raise ConnectionError("server closed the connection")
         return json.loads(line)
+
+    async def stats(self, format: Optional[str] = None) -> Dict:
+        """Fetch a live metrics snapshot (``{"type": "stats"}`` message).
+        ``format="prometheus"`` asks for the text exposition instead; the
+        returned dict then carries it under ``"text"``."""
+        msg: Dict = {"type": "stats"}
+        if format is not None:
+            msg["format"] = format
+        await self._send(msg)
+        return await self._recv()
 
     async def request(self, prompt: Sequence[int],
                       deadline_ms: Optional[float] = None,

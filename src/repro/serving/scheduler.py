@@ -173,6 +173,11 @@ class Scheduler:
         # sanitizer hook (repro.analysis.shadow.ShadowBlockPool): claim /
         # attach_reader declare what each block reference *means* per slot.
         self.shadow = None
+        # flight-recorder hook (repro.serving.telemetry.FlightRecorder),
+        # attached by the supervisor: admissions and preemptions land in the
+        # ring so a post-mortem dump shows the scheduling context around a
+        # failure.  None by default — one attribute check when off.
+        self.recorder = None
         if allocator is not None:
             self.block_tables = np.full(
                 (n_slots, allocator.blocks_for(max_len)), TRASH_BLOCK,
@@ -292,6 +297,9 @@ class Scheduler:
                     self.prefix_cache.record_admission(len(shared))
             admitted.append((slot, req))
             self.admissions += 1
+            if self.recorder is not None:
+                self.recorder.record("admit", uid=req.uid, slot=slot,
+                                     prefix_len=start)
         return admitted, rejected
 
     def _cover(self, start: int, n: int, completes: bool) -> int:
@@ -513,3 +521,6 @@ class Scheduler:
         self.waiting.insert(i, req)
         self._free(slot)
         self.preemptions += 1
+        if self.recorder is not None:
+            self.recorder.record("preempt", uid=req.uid, slot=slot,
+                                 generated=req.num_generated)

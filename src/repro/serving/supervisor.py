@@ -50,6 +50,7 @@ from typing import Callable, List, Optional
 from repro.distributed.elastic import StepWatchdog
 from repro.serving.api import ServingError, StepFailure, StepOutput
 from repro.serving.faults import DeviceStepError
+from repro.serving.telemetry import FlightRecorder
 
 
 class EngineCrash(ServingError):
@@ -76,6 +77,11 @@ class SupervisorConfig:
     watchdog_k: float = 6.0
     watchdog_window: int = 40
     watchdog_min_steps: int = 8
+    # flight recorder (serving/telemetry.py): ring capacity in events, and
+    # an optional directory where every recovery-action dump is written as
+    # flight-<seq>-<reason>.json (None = in-memory dumps only)
+    flight_capacity: int = 256
+    flight_dir: Optional[str] = None
 
 
 class DegradationController:
@@ -158,6 +164,12 @@ class ServingSupervisor:
         self._last_commit: Optional[float] = None
         self._n_commits = 0
         self._recovery_t0: Optional[float] = None
+        # the flight recorder outlives engine incarnations: attach() wires
+        # it (and the engine's clock) into each engine + scheduler, and
+        # every recovery action below dumps it — retry, retry exhaustion,
+        # quarantine, hung step, restart — so each leaves a post-mortem
+        self.recorder = FlightRecorder(capacity=self.cfg.flight_capacity,
+                                       dump_dir=self.cfg.flight_dir)
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -165,7 +177,15 @@ class ServingSupervisor:
         self.engine = engine
         self._base_budget = engine.sched.prefill_budget
         self._last_commit = None
+        self.recorder.clock = engine.clock
+        engine.recorder = self.recorder
+        engine.sched.recorder = self.recorder
         return self
+
+    def _now(self) -> float:
+        """Supervisor timing shares the engine's clock (FakeClock-able)."""
+        eng = self.engine
+        return eng.clock.now() if eng is not None else time.perf_counter()
 
     @property
     def allows_spec(self) -> bool:
@@ -189,6 +209,8 @@ class ServingSupervisor:
         escalates to :meth:`restart`)."""
         eng = self.engine
         eng._step_failures += 1
+        self.recorder.record("step_failure", attempt=attempt,
+                             error=type(exc).__name__, detail=str(exc)[:200])
         replan = plan is None
         if isinstance(exc, StepFailure) and exc.uids:
             for uid in exc.uids:
@@ -200,7 +222,10 @@ class ServingSupervisor:
                     eng.quarantine(uid)
                     self._fail_counts.pop(uid, None)
                     replan = True
+                    self.recorder.dump("quarantine", uid=uid, failures=c)
         if attempt + 1 > self.cfg.max_step_retries:
+            self.recorder.dump("retry-exhausted", attempts=attempt + 1,
+                               error=type(exc).__name__)
             raise EngineCrash(
                 f"step retries exhausted after {attempt + 1} attempts: "
                 f"{exc!r}", cause=exc)
@@ -209,6 +234,8 @@ class ServingSupervisor:
             # its plan references dead rows and cannot relaunch verbatim
             replan = True
         eng._step_retries += 1
+        self.recorder.dump("step-retry", attempt=attempt + 1,
+                           replanned=replan)
         if self.controller.note(len(eng.sched.waiting), pressured=True):
             self._apply_tier()
         if replan:
@@ -221,17 +248,20 @@ class ServingSupervisor:
         measurement, clear consecutive-failure attributions, and let the
         degradation controller walk tiers."""
         eng = self.engine
-        now = time.perf_counter()
+        now = self._now()
         hung = False
         if self._last_commit is not None:
-            rep = self._watch.observe(self._n_commits, now - self._last_commit)
+            gap = now - self._last_commit
+            rep = self._watch.observe(self._n_commits, gap)
             if rep is not None:
                 hung = True
                 eng._hung_steps += 1
+                self.recorder.dump("hung-step", gap_s=gap,
+                                   commits=self._n_commits)
         self._last_commit = now
         self._n_commits += 1
         if self._recovery_t0 is not None:
-            eng._recovery_ms.append((now - self._recovery_t0) * 1e3)
+            eng._recovery_ms.observe((now - self._recovery_t0) * 1e3)
             self._recovery_t0 = None
         if ok:
             self._fail_counts.clear()
@@ -240,6 +270,7 @@ class ServingSupervisor:
 
     def _apply_tier(self) -> None:
         eng = self.engine
+        self.recorder.record("degrade_tier", tier=self.controller.tier)
         self.controller.apply(eng, self._base_budget)
         if self.controller.shedding:
             # drop the waiting-queue tail beyond the slot count; the oldest
@@ -263,13 +294,23 @@ class ServingSupervisor:
             raise EngineCrash(
                 f"restart budget exhausted ({self.cfg.max_restarts})",
                 cause=cause)
-        t0 = time.perf_counter()
+        t0 = self._now()
         old = self.engine
+        self.recorder.record("restart", restarts=self.restarts + 1,
+                             cause=type(cause).__name__ if cause else None)
         for slot in list(old.sched.active_slots()):
             old.sched._preempt(slot)
         ordered = list(old.sched.waiting)      # arrival order (FIFO queue)
         submit_ts = dict(old._submit_ts)
         new = self.factory()
+        # telemetry outlives the incarnation: the fresh engine adopts the
+        # old clock (one timeline), tracer (request_submit is idempotent,
+        # so salvaged re-submissions don't double-count spans), and this
+        # supervisor's recorder — wired *before* re-submission
+        new.clock = old.clock
+        new.tracer = old.tracer
+        new.recorder = self.recorder
+        new.sched.recorder = self.recorder
         self.last_restart_warm = (self.cfg.warm_restore
                                   and self._salvage(old, new))
         for req in ordered:
@@ -285,6 +326,9 @@ class ServingSupervisor:
         self._fail_counts.clear()
         self._recovery_t0 = t0                 # closed at next note_commit
         self._apply_tier()
+        self.recorder.dump("engine-restart", restarts=self.restarts,
+                           warm=bool(self.last_restart_warm),
+                           resubmitted=len(ordered))
         return new
 
     def _salvage(self, old, new) -> bool:
@@ -315,12 +359,17 @@ class ServingSupervisor:
                      "_e2e_ms", "_step_gap_ms", "_steps_committed",
                      "_steps_overlapped", "_tokens_generated",
                      "_cancellations", "_deadline_expirations",
+                     "_requests_submitted",
                      "_step_failures", "_step_retries", "_quarantines",
                      "_load_sheds", "_hung_steps", "_recovery_ms"):
             setattr(new, attr, getattr(old, attr))
         new.sched.admissions += old.sched.admissions
         new.sched.preemptions += old.sched.preemptions
         new.fault_hook = old.fault_hook
+        # the latency Histogram objects just moved over; rebind the metrics
+        # registry so its histogram entries (and counter callbacks) point at
+        # the new engine's state instead of the dead incarnation's
+        new._build_metrics()
 
     # -- synchronous drivers -------------------------------------------------
 

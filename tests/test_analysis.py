@@ -118,6 +118,37 @@ class TestLintRules:
         assert _rules(lint) == []
         assert _rules(lint, suppressed=True) == ["host-sync"]
 
+    def test_telemetry_alloc_in_hot_path(self, tmp_path):
+        """Container-building arguments to tracer/recorder calls fire only
+        when the call is reachable from the engine's hot path; scalar
+        arguments never fire."""
+        lint = _tree(tmp_path, {"serving/engine.py": """
+            class Engine:
+                def commit_step(self, step):
+                    self.tracer.commit_span(0.0, 1.0, step)          # scalars
+                    self.recorder.record("commit", uids=[1, 2])
+                    self.recorder.record("note", msg=f"step {step}")
+
+                def post_mortem(self):
+                    # cold path: same pattern, no finding
+                    return self.recorder.dump("done", uids=list(self._u))
+        """})
+        fs = [f for f in lint.run() if f.rule == "telemetry-alloc"]
+        assert len(fs) == 2
+        assert all(f.symbol == "Engine.commit_step" for f in fs)
+        assert any("list literal" in f.message for f in fs)
+        assert any("f-string" in f.message for f in fs)
+
+    def test_telemetry_alloc_suppression(self, tmp_path):
+        lint = _tree(tmp_path, {"serving/engine.py": """
+            class Engine:
+                def plan_step(self):
+                    # lint: allow(telemetry-alloc) dumped once per fault
+                    self.recorder.record("plan", uids=[1])
+        """})
+        assert _rules(lint) == []
+        assert _rules(lint, suppressed=True) == ["telemetry-alloc"]
+
     def test_jit_traced_control_flow_fires(self, tmp_path):
         lint = _tree(tmp_path, {"kernels/k/kernel.py": """
             import functools
