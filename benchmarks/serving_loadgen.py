@@ -727,6 +727,384 @@ def chaos_soak(smoke: bool = False, sanitize: bool = False,
     return out
 
 
+def _journal_tokens(journal_dir: str) -> int:
+    """Committed-token count in a journal directory (parent-side progress
+    probe while the child serve process is writing — torn tails are fine,
+    a mid-compaction read just reports the previous count)."""
+    from repro.serving.journal import JournalCorruption, read_records
+    try:
+        recs, _ = read_records(journal_dir)
+    except (JournalCorruption, FileNotFoundError, OSError):
+        return -1
+    return sum(len(v) for r in recs if r.get("t") == "tokens"
+               for v in r.get("k", {}).values())
+
+
+def crash_child(journal_dir: str, port_file: str) -> None:
+    """The ``--crash-child`` entrypoint: a self-contained serve process the
+    crash soak SIGKILLs.  Builds a sanitized, checksummed, journaled engine,
+    replays whatever journal the previous incarnation left (forced-prefix
+    re-submission + stream adoption), serves the TCP front-end, and
+    announces readiness by atomically writing ``port_file``.  SIGTERM
+    drains gracefully (journal shutdown record, sanitizer census) and
+    exits 0 — SIGKILL is the whole point of the exercise."""
+    import signal
+    import sys
+
+    from repro.serving.recovery import reconcile, replay_journal
+
+    cfg = get_config("qwen1.5-0.5b").reduced(layers=2).replace(
+        compute_dtype="float32", param_dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, ServeConfig(
+        max_batch=4, max_len=64, kv_block_size=8, prefill_chunk=16,
+        sanitize=True, kv_checksums=True, journal_dir=journal_dir))
+    rep = replay_journal(eng)
+    reconcile(rep, eng)
+
+    async def main() -> None:
+        aeng = AsyncEngine(eng)
+        for uid in rep.resumed:
+            aeng.adopt_stream(uid)
+        srv = FrontendServer(aeng, recovery=rep)
+        await srv.start()
+        aeng.start()
+        stop = asyncio.Event()
+        asyncio.get_running_loop().add_signal_handler(
+            signal.SIGTERM, stop.set)
+        tmp = port_file + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"port": srv.port, "pid": os.getpid(),
+                       "resumed": rep.resumed,
+                       "forced_tokens": rep.forced_tokens,
+                       "replay_ms": rep.replay_ms}, f)
+        os.replace(tmp, port_file)      # atomic: the parent never sees half
+        await stop.wait()
+        await srv.aclose()
+        await aeng.shutdown(drain=True)
+
+    asyncio.run(main())
+    sys.exit(0)
+
+
+def crash_soak(smoke: bool = False, seed: int = 0, kills: int = 3,
+               journal_dir: Optional[str] = None) -> dict:
+    """The ``--crash`` soak (PR 10): cross-process durability under SIGKILL
+    plus silent device-memory corruption.
+
+    Phase 1 — kill/relaunch cycles: a forked serve process (journaled,
+    sanitized, KV-checksummed engine behind the TCP front-end) streams the
+    full client workload while the parent tails its journal and delivers
+    ``kills`` seeded SIGKILLs (``FaultPlan.crash``), each once the journal
+    has grown by a scheduled number of committed tokens that cycle.  After
+    each kill the parent relaunches the child — which replays the journal,
+    re-submitting unfinished requests with their committed tokens forced as
+    prefix — and every interrupted client reconnects with the ``resume``
+    protocol line at its delivery offset.  Gates:
+
+    * zero lost accepted requests: every acked uid runs to stop/length;
+    * zero duplicate delivered tokens: every client asserts each streamed
+      event's ``index`` equals exactly the count it already holds, across
+      all reconnects (exactly-once end-to-end over TCP);
+    * greedy token parity: every request's concatenated stream equals the
+      fault-free baseline token-for-token — crashes are invisible;
+    * a clean final drain: the last child exits 0 on SIGTERM after writing
+      the journal's shutdown record (sanitizer census inside the child).
+
+    Phase 2 — device-memory corruption: a seeded ``device_mem`` fault
+    flips/garbles a resident KV block mid-decode; the shadow pool's
+    checksum sweep must detect exactly the victim, targeted
+    recompute-preemption must recover it, and the final tokens must still
+    match the baseline (zero leaked blocks at the sanitized drain).
+
+    Reports recovery latency (relaunch wall + in-child replay) and replay
+    cost (forced-prefix tokens re-scored) to BENCH_serving.json["crash"]."""
+    import signal
+    import subprocess
+    import sys
+
+    from repro.serving.faults import FaultPlan
+
+    n_requests = 6 if smoke else 8
+    max_tokens = 24 if smoke else 32
+    rng = np.random.default_rng(seed + 11)
+    prompts = [rng.integers(0, 64, int(rng.integers(8, 14))).tolist()
+               for _ in range(n_requests)]
+    sp = SamplingParams(max_tokens=max_tokens, ignore_eos=True)
+
+    # fault-free greedy baseline (sync engine): the parity ground truth for
+    # both phases
+    base = _build_engine()
+    breqs = [base.submit(p, sp) for p in prompts]
+    for _ in base.stream():
+        pass
+    expected = [list(r.output_tokens) for r in breqs]
+
+    plan = FaultPlan.crash(seed=seed, kills=kills, corruptions=1)
+    if journal_dir is not None:          # CI: in-workspace, uploadable
+        os.makedirs(journal_dir, exist_ok=True)
+        jdir = journal_dir
+    else:
+        jdir = tempfile.mkdtemp(prefix="crashj-")
+    reqstate = [{"uid": None, "toks": [], "done": False, "reason": None}
+                for _ in range(n_requests)]
+    relaunch_s: List[float] = []
+    replay_ms: List[float] = []
+    forced_total = 0
+    kills_delivered = 0
+    t_soak = time.perf_counter()
+
+    def launch_child() -> tuple:
+        port_file = os.path.join(jdir, "port.json")
+        if os.path.exists(port_file):
+            os.unlink(port_file)
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "benchmarks.serving_loadgen",
+             "--crash-child", "--journal-dir", jdir,
+             "--port-file", port_file],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            env={**os.environ, "PYTHONPATH": "src"})
+        t0 = time.perf_counter()
+        deadline = t0 + 300.0
+        while not os.path.exists(port_file):
+            if proc.poll() is not None:
+                raise RuntimeError(
+                    f"crash child died during startup (rc={proc.returncode})")
+            if time.perf_counter() > deadline:
+                proc.kill()
+                raise RuntimeError("crash child never became ready")
+            time.sleep(0.05)
+        with open(port_file) as f:
+            info = json.load(f)
+        return proc, info, time.perf_counter() - t0
+
+    async def run_cycle(port: int, fault) -> None:
+        """One child lifetime: (re)attach every unfinished client; if a proc
+        fault is scheduled, SIGKILL the child once its journal grows by the
+        scheduled token count.  Client coroutines treat a dropped connection
+        as 'resume next cycle'."""
+        nonlocal kills_delivered
+        acked = asyncio.Event()
+        pending_acks = [i for i, st in enumerate(reqstate)
+                        if not st["done"] and st["uid"] is None]
+        base_tokens = max(0, _journal_tokens(jdir))
+
+        def note_ack(i: int) -> None:
+            if i in pending_acks:
+                pending_acks.remove(i)
+            if not pending_acks:
+                acked.set()
+
+        async def client(i: int) -> None:
+            st = reqstate[i]
+            try:
+                c = await ServeClient(port=port).connect()
+            except OSError:
+                return                      # child died before we connected
+            try:
+                if st["uid"] is None:
+                    await c._send({"prompt": prompts[i],
+                                   "max_tokens": max_tokens,
+                                   "temperature": 0.0, "ignore_eos": True})
+                    ack = await c._recv()
+                    st["uid"] = ack["uid"]
+                    note_ack(i)
+                else:
+                    await c._send({"resume": st["uid"],
+                                   "offset": len(st["toks"])})
+                    ack = await c._recv()
+                    if "error" in ack:
+                        raise RuntimeError(
+                            f"resume rejected for uid {st['uid']}: {ack}")
+                while True:
+                    e = await c._recv()
+                    tok = e.get("token", -1)
+                    if tok >= 0:
+                        # the exactly-once gate: every delivered token lands
+                        # at precisely the next index, across reconnects
+                        if e["index"] != len(st["toks"]):
+                            raise RuntimeError(
+                                f"uid {st['uid']}: token index {e['index']} "
+                                f"!= delivered count {len(st['toks'])} "
+                                "(lost or duplicated token)")
+                        st["toks"].append(tok)
+                    if e.get("finished"):
+                        st["done"] = True
+                        st["reason"] = e.get("finish_reason")
+                        return
+            except (ConnectionError, asyncio.IncompleteReadError,
+                    json.JSONDecodeError):
+                return                      # SIGKILL landed mid-stream
+            finally:
+                note_ack(i)
+                try:
+                    await c.close()
+                except (ConnectionError, OSError):
+                    pass
+
+        async def killer() -> None:
+            nonlocal kills_delivered
+            if fault is None:
+                return
+            if pending_acks:
+                await acked.wait()          # every request durably accepted
+            while any(not st["done"] for st in reqstate):
+                n = _journal_tokens(jdir)
+                if n >= 0 and n - base_tokens >= fault.arg:
+                    os.kill(info["pid"], signal.SIGKILL)
+                    kills_delivered += 1
+                    return
+                await asyncio.sleep(0.02)
+            raise RuntimeError(
+                "workload drained before the scheduled SIGKILL fired — "
+                "schedule the kill earlier or grow the workload")
+
+        tasks = [client(i) for i, st in enumerate(reqstate)
+                 if not st["done"]]
+        if not pending_acks:
+            acked.set()
+        await asyncio.gather(*tasks, killer())
+
+    cycle = 0
+    proc = None
+    try:
+        while cycle < kills + 3:
+            proc, info, ready_s = launch_child()
+            relaunch_s.append(ready_s)
+            replay_ms.append(float(info["replay_ms"]))
+            forced_total += int(info["forced_tokens"])
+            if cycle > 0:
+                want = sorted(st["uid"] for st in reqstate
+                              if not st["done"] and st["uid"] is not None)
+                got = sorted(info["resumed"])
+                if got != want:
+                    raise RuntimeError(
+                        f"recovery resumed uids {got}, journal-accepted "
+                        f"unfinished uids are {want} (lost requests)")
+            fault = plan.proc_fault(cycle)
+            asyncio.run(run_cycle(info["port"], fault))
+            if fault is not None:
+                proc.wait(timeout=60)       # SIGKILL landed: reap the child
+                cycle += 1
+                continue
+            # no kill this cycle: everything drained — graceful shutdown
+            if any(not st["done"] for st in reqstate):
+                raise RuntimeError(
+                    f"kill-free cycle left unfinished requests: "
+                    f"{[i for i, s in enumerate(reqstate) if not s['done']]}")
+            proc.send_signal(signal.SIGTERM)
+            rc = proc.wait(timeout=120)
+            if rc != 0:
+                raise RuntimeError(
+                    f"graceful child drain exited {rc}, want 0")
+            proc = None
+            break
+        else:
+            raise RuntimeError("crash soak never reached a kill-free cycle")
+    finally:
+        if proc is not None and proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=60)
+
+    # hard gates: nothing lost, nothing duplicated, greedy parity end-to-end
+    if kills_delivered < kills:
+        raise RuntimeError(
+            f"only {kills_delivered}/{kills} scheduled SIGKILLs fired")
+    mismatched = [i for i, st in enumerate(reqstate)
+                  if st["toks"] != expected[i]]
+    if mismatched:
+        raise RuntimeError(
+            f"token parity broken across crashes for requests {mismatched}")
+    bad_reason = [i for i, st in enumerate(reqstate)
+                  if st["reason"] not in ("stop", "length")]
+    if bad_reason:
+        raise RuntimeError(
+            f"requests {bad_reason} did not run to completion: "
+            f"{[reqstate[i]['reason'] for i in bad_reason]}")
+    from repro.serving.journal import load_state
+    jstate = load_state(jdir)
+    if not jstate.clean_shutdown:
+        raise RuntimeError("final journal carries no clean-shutdown record")
+
+    # -- phase 2: device-memory corruption, detection, targeted recovery -----
+    cfg = get_config("qwen1.5-0.5b").reduced(layers=2).replace(
+        compute_dtype="float32", param_dtype="float32")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, ServeConfig(
+        max_batch=4, max_len=64, kv_block_size=8, prefill_chunk=16,
+        sanitize=True, kv_checksums=True))
+    creqs = [eng.submit(p, sp) for p in prompts]
+    corrupted: List[int] = []
+    preempted: List[int] = []
+    while eng.sched.has_work():
+        eng.step()
+        victim = plan.device_mem_hook(eng)
+        if victim is not None:
+            bad = eng.check_kv_integrity()
+            if bad != [victim]:
+                raise RuntimeError(
+                    f"checksum sweep found {bad}, injected block {victim}")
+            preempted.extend(eng.recover_corrupt_blocks(bad))
+            corrupted.append(victim)
+    if not corrupted:
+        raise RuntimeError("device_mem fault never fired")
+    cmismatch = [i for i, r in enumerate(creqs)
+                 if list(r.output_tokens) != expected[i]]
+    if cmismatch:
+        raise RuntimeError(
+            "token parity broken through corruption recovery for "
+            f"requests {cmismatch}")
+    if eng.allocator.blocks_in_use() != 0:
+        raise RuntimeError(
+            f"leaked blocks after corruption drain: "
+            f"{eng.allocator.blocks_in_use()}")
+    eng.shadow.assert_drained()
+    cst = eng.stats()
+
+    missing = plan.unfired()
+    if missing:
+        raise RuntimeError(f"crash schedule not fully delivered: {missing}")
+
+    out = {
+        "config": {"arch": "qwen1.5-0.5b reduced(2)", "max_batch": 4,
+                   "n_requests": n_requests, "max_tokens": max_tokens,
+                   "seed": seed, "kills": kills},
+        "wall_s": time.perf_counter() - t_soak,
+        "sigkills": kills_delivered,
+        "relaunches": len(relaunch_s),
+        "relaunch_s": {"mean": float(np.mean(relaunch_s)),
+                       "max": float(np.max(relaunch_s))},
+        "replay_ms": {"mean": float(np.mean(replay_ms)),
+                      "max": float(np.max(replay_ms))},
+        "forced_prefix_tokens": forced_total,
+        "journal": {"records": jstate.records,
+                    "recoveries": jstate.recoveries,
+                    "clean_shutdown": jstate.clean_shutdown},
+        "kv_corruption": {"injected_blocks": corrupted,
+                          "detected": cst.kv_corruptions,
+                          "preempted_uids": sorted(set(preempted))},
+        "lost_requests": 0,
+        "duplicate_tokens": 0,
+        "token_parity": True,
+        "note": "gates: every acked request completes with exact greedy "
+                "parity across >= 3 SIGKILL/replay cycles (per-event index "
+                "continuity = exactly-once over TCP resume), clean journal "
+                "shutdown on the final drain, and a seeded KV bit-flip "
+                "detected by the checksum sweep and healed by recompute "
+                "preemption with zero leaked blocks",
+    }
+    write_bench_serving({"crash": out})
+    print(f"crash soak OK: {kills_delivered} SIGKILLs over "
+          f"{len(relaunch_s)} launches, {forced_total} forced-prefix "
+          f"tokens replayed, relaunch mean {out['relaunch_s']['mean']:.1f}s"
+          f" (replay {out['replay_ms']['mean']:.1f}ms); "
+          f"{n_requests}/{n_requests} requests exact-parity with 0 "
+          f"lost/duplicate tokens; kv corruption on block"
+          f" {corrupted} detected+recovered (preempted "
+          f"{sorted(set(preempted))}), 0 leaked blocks")
+    return out
+
+
 def smoke(sanitize: bool = False) -> None:
     """CI smoke: server up, four client behaviors (normal, expired deadline,
     explicit cancel, disconnect) through the real TCP endpoint, block
@@ -809,8 +1187,27 @@ if __name__ == "__main__":
     ap.add_argument("--telemetry-overhead", action="store_true",
                     help="interleaved tracer-on/off A/B run: gates <2%% "
                          "tok/s overhead with byte-identical tokens")
+    ap.add_argument("--crash", action="store_true",
+                    help="durability soak (PR 10): SIGKILL a forked serve "
+                         "process at seeded points, relaunch + journal "
+                         "replay + client resume; gates zero lost / "
+                         "duplicate tokens, greedy parity, and KV-"
+                         "corruption detection (with --smoke: CI-sized)")
+    ap.add_argument("--crash-child", action="store_true",
+                    help=argparse.SUPPRESS)   # internal: the forked server
+    ap.add_argument("--journal-dir", default=None, metavar="DIR",
+                    help="with --crash: put the journal (and the "
+                         "child's port file) under DIR instead of a "
+                         "temp dir — CI uploads it on failure")
+    ap.add_argument("--port-file", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="fault-schedule seed for --crash / --chaos")
     a = ap.parse_args()
-    if a.chaos:
+    if a.crash_child:
+        crash_child(a.journal_dir, a.port_file)
+    elif a.crash:
+        crash_soak(smoke=a.smoke, seed=a.seed, journal_dir=a.journal_dir)
+    elif a.chaos:
         chaos_soak(smoke=a.smoke, sanitize=a.sanitize)
     elif a.trace is not None:
         trace_bench(out_path=a.trace or None)
@@ -824,6 +1221,7 @@ if __name__ == "__main__":
                "telemetry": telemetry_overhead_bench(),
                "goodput": goodput_bench(),
                "saturation": saturation_bench(),
-               "chaos": chaos_soak()}
+               "chaos": chaos_soak(),
+               "crash": crash_soak()}
         print(json.dumps(out, indent=1))
         print("merged into BENCH_serving.json")

@@ -60,7 +60,8 @@ class BlockState(enum.Enum):
 class ShadowBlockPool:
     """Mirror of one :class:`BlockAllocator`'s block lifecycle."""
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int,
+                 checksums: bool = False):
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.state: List[BlockState] = [BlockState.FREE] * num_blocks
@@ -69,10 +70,18 @@ class ShadowBlockPool:
         self.refs: List[int] = [0] * num_blocks
         self.refs[TRASH_BLOCK] = 1
         self._published = set()       # blocks the trie currently references
+        # optional per-block content digests (ServeConfig.kv_checksums): the
+        # engine records a crc after each step's writes; a sweep comparing
+        # fresh digests against these catches silent device-memory
+        # corruption of resident blocks (the faults.py device_mem site)
+        self.checksums_enabled = checksums
+        self._checksums: Dict[int, int] = {}
         # counters surfaced through EngineStats.sanitizer
         self.transitions = 0
         self.write_checks = 0
         self.verifications = 0
+        self.checksum_sweeps = 0
+        self.checksum_mismatches = 0
 
     # -- helpers ---------------------------------------------------------------
 
@@ -132,6 +141,8 @@ class ShadowBlockPool:
                            "the node (unpublish)")
             self.state[b] = BlockState.FREE
             self.owner[b] = UNOWNED
+            # content of a free block is unconstrained until its next writer
+            self._checksums.pop(b, None)
         elif self.refs[b] == 1 and b in self._published:
             # the last non-trie holder let go: cached-but-unreferenced
             self.state[b] = BlockState.PUBLISHED
@@ -239,6 +250,34 @@ class ShadowBlockPool:
             self._fail(f"{len(leaked)} block(s) leaked at drain "
                        f"(block, state, owner): {leaked[:8]}")
 
+    # -- per-block content checksums (device-memory integrity) -----------------
+
+    def note_checksum(self, block_id: int, digest: int) -> None:
+        """Record the content digest of a block the engine just (re)wrote.
+        Until the block's next legal write or free, any digest drift means
+        something mutated device memory behind the protocol's back.  Blocks
+        already back on the free list (written by a row that finished in the
+        same commit) are skipped — their content is unconstrained."""
+        b = self._guard(block_id, "note_checksum")
+        if b != TRASH_BLOCK and self.state[b] is not BlockState.FREE:
+            self._checksums[b] = int(digest)
+
+    def checksummed(self) -> List[int]:
+        """Blocks with a recorded digest (resident, written at least once)."""
+        return sorted(self._checksums)
+
+    def verify_checksums(self, digests: Dict[int, int]) -> List[int]:
+        """Compare freshly computed digests against the recorded ones;
+        returns the corrupt block ids (recorded and fresh digest differ).
+        The caller (``Engine.check_kv_integrity``) decides recovery —
+        unlike protocol violations this is *environmental* damage, so it
+        is reported, not raised."""
+        self.checksum_sweeps += 1
+        bad = [b for b, d in digests.items()
+               if b in self._checksums and self._checksums[b] != int(d)]
+        self.checksum_mismatches += len(bad)
+        return sorted(bad)
+
     # -- telemetry -------------------------------------------------------------
 
     def counts(self) -> Dict[str, int]:
@@ -252,6 +291,10 @@ class ShadowBlockPool:
                "write_checks": self.write_checks,
                "verifications": self.verifications,
                "published": len(self._published)}
+        if self.checksums_enabled:
+            out["checksum_sweeps"] = self.checksum_sweeps
+            out["checksum_mismatches"] = self.checksum_mismatches
+            out["checksummed_blocks"] = len(self._checksums)
         for state, n in self.counts().items():
             out[f"state_{state}"] = n
         return out

@@ -50,6 +50,25 @@ from repro.nn.module import flatten_with_paths
 _warned_no_zstd = False
 
 
+def _fsync_file(path: pathlib.Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: pathlib.Path) -> None:
+    """Flush a directory's entry table: renames inside it are only durable
+    once the directory itself is fsync'd (POSIX crash-consistency rule —
+    rename-then-crash can otherwise resurrect the old entry)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def _warn_no_zstd():
     global _warned_no_zstd
     if not _warned_no_zstd:
@@ -89,19 +108,32 @@ def save_checkpoint(directory: str, step: int, tree: Any,
         cctx = zstandard.ZstdCompressor(level=3)
         with open(tmp / "arrays.msgpack.zst", "wb") as f:
             f.write(cctx.compress(msgpack.packb(payload)))
+            f.flush()
+            os.fsync(f.fileno())
     else:
         _warn_no_zstd()
         with open(tmp / "arrays.msgpack", "wb") as f:
             f.write(msgpack.packb(payload))
+            f.flush()
+            os.fsync(f.fileno())
     (tmp / "manifest.json").write_text(json.dumps(manifest))
+    _fsync_file(tmp / "manifest.json")
+    _fsync_dir(tmp)
 
     if final.exists():
         shutil.rmtree(final)
     os.rename(tmp, final)
-    # atomic LATEST pointer (write + rename)
+    _fsync_dir(d)          # the rename is durable before LATEST can name it
+    # atomic LATEST pointer: contents fsync'd *before* the replace, parent
+    # directory after — a crash anywhere in this window leaves either the
+    # old pointer or the new one, never an empty/unsynced file
     ptr_tmp = d / "LATEST.tmp"
-    ptr_tmp.write_text(final.name)
+    with open(ptr_tmp, "w") as f:
+        f.write(final.name)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(ptr_tmp, d / "LATEST")
+    _fsync_dir(d)
     _gc(d, keep_last_k)
     return final
 

@@ -46,11 +46,23 @@ trace at end of run; ``--metrics-interval 5`` prints a live line from the
 engine's metrics registry every 5 s (the same registry the front-end
 serves over ``{"type": "stats"}``); ``--flight-dir DIR`` (with
 ``--supervise``) writes a flight-recorder dump on every recovery action.
+
+Durability (README "Durability & crash recovery"): ``--journal-dir DIR``
+arms the write-ahead request journal — every accepted request and every
+committed token is durable before delivery, and a relaunch on the same
+directory replays unfinished requests (committed tokens forced as prefix)
+and serves the front-end ``resume`` protocol so reconnecting clients get
+exactly-once streams.  The standing server treats SIGTERM exactly like
+Ctrl-C: stop admitting, drain in-flight requests, write the journal's
+clean-shutdown record, print final stats.  Exit codes are distinct:
+0 = clean drain, 17 = supervisor restart budget exhausted (EngineCrash).
 """
 from __future__ import annotations
 
 import argparse
 import asyncio
+import signal
+import sys
 import time
 from collections import Counter
 
@@ -64,8 +76,16 @@ from repro.serving.api import SamplingParams
 from repro.serving.async_engine import AsyncEngine
 from repro.serving.engine import Engine, ServeConfig, convert_to_packed
 from repro.serving.frontend import FrontendServer, ServeClient
-from repro.serving.supervisor import ServingSupervisor, SupervisorConfig
+from repro.serving.supervisor import (EngineCrash, ServingSupervisor,
+                                      SupervisorConfig)
 from repro.serving.tracing import Tracer
+
+# Distinct exit codes so process supervisors (systemd, the crash soak) can
+# tell a clean drain from a give-up: 0 = graceful shutdown (Ctrl-C/SIGTERM
+# drain, journal clean-shutdown record written), 17 = the supervisor's
+# restart budget was exhausted (EngineCrash) — restartable with backoff.
+EXIT_CLEAN_DRAIN = 0
+EXIT_RESTART_EXHAUSTED = 17
 
 
 def build_engine(args) -> Engine:
@@ -95,7 +115,9 @@ def build_engine(args) -> Engine:
                        block_kv=args.block_kv,
                        prefix_cache=args.prefix_cache,
                        prefix_cache_blocks=args.prefix_cache_blocks,
-                       sanitize=args.sanitize)
+                       sanitize=args.sanitize,
+                       kv_checksums=args.kv_checksums,
+                       journal_dir=args.journal_dir)
     eng = Engine(cfg, params, scfg)
     mode = (f"paged bs={scfg.kv_block_size} blocks={scfg.pool_blocks()}"
             if eng.paged else "contiguous")
@@ -111,6 +133,8 @@ def build_engine(args) -> Engine:
     if getattr(args, "trace", None):
         eng.tracer = Tracer(clock=eng.clock)
         print(f"[trace] recording spans -> {args.trace}")
+    if eng.journal is not None:
+        print(f"[journal] write-ahead request journal -> {args.journal_dir}")
     return eng
 
 
@@ -304,24 +328,58 @@ def _make_supervisor(eng: Engine, args):
 
 async def run_server(eng: Engine, args) -> None:
     """Standing endpoint: serve until interrupted, then drain gracefully
-    (stop admitting, finish in-flight requests, report stats)."""
+    (stop admitting, finish in-flight requests, report stats).
+
+    SIGTERM is handled exactly like Ctrl-C: the server stops accepting,
+    in-flight requests run to completion, and — when a journal is armed —
+    the clean-shutdown record is written so the next launch knows no replay
+    is needed.  With ``--journal-dir``, unfinished requests from a previous
+    (crashed) process are replayed into this engine before the listener
+    opens, and the front-end serves ``resume`` lines against that recovery
+    report (exactly-once reconnect streams)."""
+    recovery = None
+    if eng.journal is not None:
+        from repro.serving.recovery import reconcile, replay_journal
+        recovery = replay_journal(eng)
+        if recovery.resumed:
+            print(f"[journal] replayed {len(recovery.resumed)} unfinished "
+                  f"request(s), {recovery.forced_tokens} committed tokens "
+                  f"forced as prefix ({recovery.replay_ms:.1f} ms)")
+            reconcile(recovery, eng, flight_dir=getattr(args, "flight_dir",
+                                                        None))
     aeng = AsyncEngine(eng, max_queue=args.max_queue,
                        supervisor=_make_supervisor(eng, args))
     async with aeng:
+        if recovery is not None:
+            for uid in recovery.resumed:
+                aeng.adopt_stream(uid)
         metrics_task = _start_metrics_logger(aeng, args)
         async with FrontendServer(
                 aeng, host=args.host, port=args.port,
                 defaults=SamplingParams(max_tokens=args.max_tokens,
                                         temperature=args.temperature,
                                         top_p=args.top_p),
-                default_deadline_ms=args.deadline_ms) as srv:
+                default_deadline_ms=args.deadline_ms,
+                recovery=recovery) as srv:
             print(f"[serve] listening on {args.host}:{srv.port} "
-                  f"(max_queue={args.max_queue}) — Ctrl-C to drain and exit")
+                  f"(max_queue={args.max_queue}) — SIGTERM or Ctrl-C to "
+                  "drain and exit")
+            stop = asyncio.Event()
+            loop = asyncio.get_running_loop()
             try:
-                while True:
-                    await asyncio.sleep(3600)
+                loop.add_signal_handler(signal.SIGTERM, stop.set)
+            except (NotImplementedError, RuntimeError):
+                pass  # non-POSIX loop: Ctrl-C still drains
+            try:
+                await stop.wait()
+                print("[serve] SIGTERM: draining...")
             except (KeyboardInterrupt, asyncio.CancelledError):
                 print("[serve] draining...")
+            finally:
+                try:
+                    loop.remove_signal_handler(signal.SIGTERM)
+                except (NotImplementedError, RuntimeError, ValueError):
+                    pass
         await _stop_metrics_logger(metrics_task)
     print_stats(aeng.engine)
     export_trace(aeng.engine, args)
@@ -407,6 +465,17 @@ def main(argv=None):
                     help="with --supervise: write a flight-recorder dump "
                          "(flight-<seq>-<reason>.json) to DIR on every "
                          "recovery action")
+    ap.add_argument("--journal-dir", default=None, metavar="DIR",
+                    help="write-ahead request journal: accepted requests "
+                         "and committed tokens are fsync'd to DIR before "
+                         "delivery; a relaunch on the same DIR replays "
+                         "unfinished requests and serves client 'resume' "
+                         "lines (serving/journal.py, serving/recovery.py)")
+    ap.add_argument("--kv-checksums", action="store_true",
+                    help="with --sanitize: per-block KV checksums in the "
+                         "shadow pool — device-memory corruption is "
+                         "detected at step boundaries and recovered by "
+                         "recompute-preemption")
     ap.add_argument("--shared-prefixes", type=int, default=0,
                     help="load-gen: draw every prompt from N shared system "
                          "prefixes plus a random tail (0 = fully random "
@@ -424,6 +493,10 @@ def main(argv=None):
             asyncio.run(run_server(eng, args))
         except KeyboardInterrupt:
             print_stats(eng)
+        except EngineCrash as e:
+            print(f"[serve] restart budget exhausted: {e}", file=sys.stderr)
+            sys.exit(EXIT_RESTART_EXHAUSTED)
+        sys.exit(EXIT_CLEAN_DRAIN)
     else:
         asyncio.run(run_load(eng, args))
 

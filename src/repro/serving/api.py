@@ -223,6 +223,17 @@ class EngineStats:
     hung_steps: int = 0
     degrade_tier: int = 0
     recovery_ms: Optional[Dict[str, float]] = None
+    # -- durability (request journal + device-memory integrity; PR 10) -------
+    # kv_corruptions: resident KV blocks whose shadow checksum sweep
+    # (ServeConfig.kv_checksums) caught silent device-memory corruption —
+    # each recovered by recompute-preempting the rows reading the block.
+    # journal_records / journal_commits: records appended and fsync batches
+    # written by this process's journal writer (None when journaling is off);
+    # journal_replays: recoveries this journal directory has seen in total.
+    kv_corruptions: int = 0
+    journal_records: Optional[int] = None
+    journal_commits: Optional[int] = None
+    journal_replays: Optional[int] = None
 
 
 def make_request(prompt: Sequence[int], uid: int,

@@ -139,6 +139,12 @@ class AsyncEngine:
             # graceful shutdown ran everything to completion: the shadow
             # pool must agree no request still holds blocks
             self.engine.shadow.assert_drained()
+        if self.engine.journal is not None:
+            if drain and not self.engine.sched.has_work():
+                # clean-drain marker: recovery knows this journal needs no
+                # replay (every accepted request reached a terminal record)
+                self.engine.journal.log_shutdown()
+            self.engine.journal.close()
         self._closed = True
 
     # -- request surface -----------------------------------------------------
@@ -187,6 +193,22 @@ class AsyncEngine:
             if out.finished:
                 self._streams.pop(uid, None)
                 return
+
+    def adopt_stream(self, uid: int) -> None:
+        """Open a stream queue for a request that was submitted *outside*
+        :meth:`submit` — journal recovery re-submits crashed-process requests
+        directly on the engine (serving/recovery.py), and this wires their
+        ``on_token`` into a queue so :meth:`stream` / the front-end ``resume``
+        line can consume post-recovery tokens.  Call before :meth:`start` (or
+        before the loop's next commit) so no event slips past the queue."""
+        req = self.engine._requests.get(uid)
+        if req is None:
+            raise KeyError(f"uid {uid} is not live in the engine")
+        if uid in self._streams:
+            return
+        q: asyncio.Queue = asyncio.Queue()
+        req.on_token = q.put_nowait
+        self._streams[uid] = q
 
     def cancel(self, uid: int,
                reason: FinishReason = FinishReason.CANCELLED

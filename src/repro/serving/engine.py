@@ -96,6 +96,7 @@ the in-flight step's row for that slot is discarded at commit.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -171,6 +172,22 @@ class ServeConfig:
     # SanitizerError at the faulting call.  Debug/CI knob — adds O(pool)
     # host work per step, keep off in production
     sanitize: bool = False
+    # with sanitize: also keep a crc per written KV block (shadow pool) and
+    # let Engine.check_kv_integrity() sweep resident blocks for silent
+    # device-memory corruption (bit flips, the faults.py device_mem site);
+    # corrupt rows recover via targeted recompute-preemption.  Reads the
+    # pool back to the host per sweep — debug/CI knob like sanitize
+    kv_checksums: bool = False
+    # -- request journal (serving/journal.py) ------------------------------
+    # write-ahead log of every request transition (submit/admit/tokens/
+    # finish/cancel/shed), fsync'd per accepted submit and per committed
+    # step: a SIGKILL'd process relaunches, replays the journal
+    # (serving/recovery.py), and resumes every accepted request with its
+    # committed tokens forced as prefix.  None = off
+    journal_dir: Optional[str] = None
+    journal_fsync: bool = True       # False trades the durability fsyncs away
+    journal_segment_bytes: int = 1 << 20   # rotation threshold
+    journal_compact_finished: int = 32     # compaction trigger at rotation
 
     def __post_init__(self):
         if self.prefill_bucket_min < 1:
@@ -209,6 +226,14 @@ class ServeConfig:
             raise ValueError(
                 "sanitize=True shadows the paged block pool; it requires "
                 "the paged cache (ServeConfig(paged=True) or auto)")
+        if self.kv_checksums and not self.sanitize:
+            raise ValueError(
+                "kv_checksums=True stores block digests in the sanitizer "
+                "shadow pool; it requires ServeConfig(sanitize=True)")
+        if self.journal_segment_bytes < 1:
+            raise ValueError(
+                f"journal_segment_bytes={self.journal_segment_bytes} must "
+                "be >= 1")
 
     @property
     def blocks_per_slot(self) -> int:
@@ -263,10 +288,14 @@ class StepPlan:
 class InflightStep:
     """A dispatched-but-uncommitted step: the plan it ran, the un-synced
     device array of sampled tokens (``None`` when no slot was active), and
-    the wall-clock instant dispatch returned (for the step-gap metric)."""
+    the wall-clock instant dispatch returned (for the step-gap metric).
+    ``write_blocks`` is the step's physical KV write-set, captured by the
+    sanitizer at launch (table state at dispatch time) so the
+    ``kv_checksums`` commit can digest exactly the blocks this step wrote."""
     plan: StepPlan
     tok: Optional[jax.Array]
     launched_at: float = 0.0
+    write_blocks: Optional[List[int]] = None
 
 
 class Engine:
@@ -340,11 +369,25 @@ class Engine:
                     "ServeConfig(paged=True) for an attention-only stack")
             from repro.analysis.shadow import ShadowBlockPool
             self.shadow = ShadowBlockPool(self.allocator.num_blocks,
-                                          self.allocator.block_size)
+                                          self.allocator.block_size,
+                                          checksums=self.scfg.kv_checksums)
             self.allocator.observer = self.shadow
             self.sched.shadow = self.shadow
             if self.prefix_cache is not None:
                 self.prefix_cache.shadow = self.shadow
+        # request write-ahead log (serving/journal.py): accepted submits and
+        # committed tokens are fsync'd before they are observable, so a
+        # killed process recovers them (serving/recovery.py).  Opening
+        # always starts a fresh segment — a crashed predecessor's torn tail
+        # is never buried mid-file.
+        self.journal = None
+        if self.scfg.journal_dir:
+            from .journal import Journal
+            self.journal = Journal(
+                self.scfg.journal_dir,
+                segment_bytes=self.scfg.journal_segment_bytes,
+                fsync=self.scfg.journal_fsync,
+                compact_min_finished=self.scfg.journal_compact_finished)
         # the jitted step impls, built from one registry so tooling (the
         # retrace watchdog, tests) can rebuild them with wrappers: attr ->
         # (python impl, donate_argnums).  Donating the cache (and key)
@@ -409,6 +452,7 @@ class Engine:
         self._load_sheds = 0
         self._hung_steps = 0
         self._degrade_tier = 0
+        self._kv_corruptions = 0
         self._recovery_ms = Histogram()
         # opt-in telemetry sinks, None by default so the hot path pays one
         # attribute check when they are off: a serving/tracing.Tracer
@@ -679,6 +723,11 @@ class Engine:
             # idempotent per uid: supervisor restarts re-submit salvaged
             # requests without opening (or counting) a second root span
             self.tracer.request_submit(req.uid, now)
+        if self.journal is not None:
+            # durable before the caller sees the uid: an acked submit is
+            # never lost to a crash (replay treats re-submits as first-wins,
+            # so supervisor restarts / recovery re-admissions are free)
+            self.journal.log_submit(req, now_mono=now)
         self.sched.submit(req)
         return req
 
@@ -718,6 +767,11 @@ class Engine:
         if admitted:
             self._ensure_state()
             now = self.clock.now()
+            if self.journal is not None:
+                for _, req in admitted:
+                    # advisory (recovery re-admits from scratch anyway):
+                    # buffered until the step's commit fsync
+                    self.journal.log_admit(req.uid)
             for slot, req in admitted:
                 self._keys = self._keys.at[slot].set(self._request_key(req))
                 # positions covered by trie-shared blocks skip prefill; on a
@@ -806,8 +860,9 @@ class Engine:
             # relaunches verbatim
             self.fault_hook("launch", {"plan": plan})
         self._ensure_state()
+        write_blocks = None
         if self.shadow is not None:
-            self._sanitize_writes(plan)
+            write_blocks = self._sanitize_writes(plan)
         if plan.chunks or plan.stalled:
             tok = self._launch_chunk(plan)
         else:
@@ -816,7 +871,8 @@ class Engine:
         if self.tracer is not None:
             self.tracer.launch_span(t_launch, launched_at,
                                     self._steps_committed, plan.spec)
-        return InflightStep(plan=plan, tok=tok, launched_at=launched_at)
+        return InflightStep(plan=plan, tok=tok, launched_at=launched_at,
+                            write_blocks=write_blocks)
 
     def commit_step(self, inflight: InflightStep,
                     tok_np: Optional[np.ndarray] = None) -> List[StepOutput]:
@@ -869,6 +925,14 @@ class Engine:
                 outs.append(sc.record(slot, int(tok_np[slot])))
             self._prefill_positions += sum(plan.chunks.values())
             self._prefill_chunks += len(plan.chunks)
+            if (self.shadow is not None and self.shadow.checksums_enabled
+                    and inflight.write_blocks):
+                # refresh the content digest of every block this step wrote
+                # (captured at launch); blocks freed by this commit are
+                # skipped inside note_checksum
+                for b, d in self._kv_block_digests(
+                        inflight.write_blocks).items():
+                    self.shadow.note_checksum(b, d)
             if self.tracer is not None:
                 # device span: dispatch return -> host-visible sync; the
                 # commit span covers the scheduler application.  One chunk
@@ -984,17 +1048,20 @@ class Engine:
         self._finalize_outputs(outs)
         return outs
 
-    def _sanitize_writes(self, plan: StepPlan) -> None:
+    def _sanitize_writes(self, plan: StepPlan) -> List[int]:
         """Check the step's KV write-set against the shadow pool before
         dispatch: a chunked slot writes positions ``[start, start+n)``, a
         decode (or budget-stalled pad) row writes position ``start`` — every
         logical block those positions map to must be the trash block or a
         block the slot owns exclusively.  Shared/published prefix blocks are
         immutable; catching an attempt *here* names the faulting slot and
-        block instead of surfacing later as cross-request corruption."""
+        block instead of surfacing later as cross-request corruption.
+        Returns the deduplicated physical write-set (trash excluded) so the
+        ``kv_checksums`` commit can digest exactly what this step wrote."""
         sc = self.sched
         bs = self.allocator.block_size
         width = sc.block_tables.shape[1]
+        written: List[int] = []
         for slot in plan.active:
             start = int(plan.positions[slot])
             n = plan.chunks.get(slot, 1)
@@ -1003,7 +1070,11 @@ class Engine:
             first = min(start // bs, width - 1)
             last = min((start + n - 1) // bs, width - 1)
             for lb in range(first, last + 1):
-                self.shadow.check_write(slot, int(sc.block_tables[slot, lb]))
+                b = int(sc.block_tables[slot, lb])
+                self.shadow.check_write(slot, b)
+                if b != 0 and b not in written:       # 0 == TRASH_BLOCK
+                    written.append(b)
+        return written
 
     def _launch_decode(self, plan: StepPlan,
                        feed: Optional[InflightStep]) -> jax.Array:
@@ -1099,6 +1170,100 @@ class Engine:
 
     # -- cancellation / deadlines ----------------------------------------------
 
+    # -- device-memory integrity (ServeConfig.kv_checksums) --------------------
+
+    def _kv_block_digests(self, blocks: Sequence[int]) -> Dict[int, int]:
+        """crc32 over every cache leaf's rows for each requested pool block.
+        Transfers the pool to the host — the documented kv_checksums debug
+        cost, in the same price class as the sanitizer's per-step checks."""
+        self._ensure_state()
+        host = [np.asarray(leaf)  # lint: allow(host-sync) kv_checksums sweep
+                for leaf in jax.tree_util.tree_leaves(self._cache)]
+        out: Dict[int, int] = {}
+        for b in blocks:
+            crc = 0
+            for h in host:
+                # paged pool leaves are [layers, num_blocks, Hkv, bs, Dh]:
+                # axis 1 is the block axis (kv_checksums implies paged)
+                crc = zlib.crc32(h[:, b].tobytes(), crc)
+            out[int(b)] = crc
+        return out
+
+    def check_kv_integrity(self) -> List[int]:
+        """Sweep every resident checksummed block for silent device-memory
+        corruption: recompute content digests and compare against the
+        digests the shadow recorded at write time.  Returns the corrupt
+        block ids (empty without ``ServeConfig(kv_checksums=True)``).
+        Detection is *reported*, not raised — pass the result to
+        :meth:`recover_corrupt_blocks` for targeted recompute-preemption."""
+        if self.shadow is None or not self.shadow.checksums_enabled:
+            return []
+        blocks = self.shadow.checksummed()
+        if not blocks:
+            return []
+        bad = self.shadow.verify_checksums(self._kv_block_digests(blocks))
+        if bad:
+            self._kv_corruptions += len(bad)
+            if self.recorder is not None:
+                self.recorder.record("kv_corruption", blocks=len(bad))
+        return bad
+
+    def recover_corrupt_blocks(self, blocks: Sequence[int]) -> List[int]:
+        """Targeted recovery from KV corruption: preempt every slot whose
+        block table references a corrupt block (owner *or* shared reader) —
+        recompute re-prefill of prompt + committed tokens rebuilds the KV
+        bit-identically, so greedy outputs keep parity — and flush the
+        prefix cache if a corrupt block stayed published after the readers
+        were preempted.  The freed blocks' stale digests clear on free and
+        their garbage content is fully overwritten before the next read
+        (prefill/decode fill blocks front-to-back).  Returns the preempted
+        uids."""
+        bad = {int(b) for b in blocks}
+        if not bad:
+            return []
+        sc = self.sched
+        uids: List[int] = []
+        for slot in list(sc.active_slots()):
+            table = sc.block_tables[slot]
+            if any(int(table[i]) in bad for i in range(table.shape[0])):
+                req = sc.slots[slot]
+                uids.append(req.uid)
+                sc._preempt(slot)
+        if self.prefix_cache is not None and self.allocator is not None and \
+                any(int(self.allocator.refcounts[b]) > 0 for b in bad):
+            # still-referenced corrupt blocks can only be trie holds now;
+            # there is no per-block trie removal, so drop the whole cache —
+            # corruption is rare and a cold cache only costs re-prefill
+            self.prefix_cache.clear()
+        if self.recorder is not None:
+            self.recorder.record("kv_corruption_recovered",
+                                 blocks=len(bad), preempted=len(uids))
+        return uids
+
+    def corrupt_kv_block(self, block: int, seed: int = 0,
+                         mode: str = "garbage") -> None:
+        """Fault-injection helper (faults.py ``device_mem`` site): overwrite
+        one pool block's KV rows behind the allocator protocol — seeded
+        garbage (``mode='garbage'``) or a single bit flip
+        (``mode='bitflip'``) — simulating silent device-memory corruption.
+        Never called in production paths."""
+        self._ensure_state()
+        rng = np.random.default_rng(seed)
+
+        def garble(leaf):
+            # block axis is 1 ([layers, num_blocks, Hkv, bs, Dh])
+            row = np.asarray(leaf[:, block])  # lint: allow(host-sync) injector
+            if mode == "bitflip":
+                flat = np.ascontiguousarray(row).view(np.uint8).reshape(-1).copy()
+                i = int(rng.integers(flat.size))
+                flat[i] ^= np.uint8(1 << int(rng.integers(8)))
+                new = flat.view(row.dtype).reshape(row.shape)
+            else:
+                new = rng.standard_normal(row.shape).astype(row.dtype)
+            return leaf.at[:, block].set(jnp.asarray(new))
+
+        self._cache = jax.tree_util.tree_map(garble, self._cache)
+
     def cancel(self, uid: int,
                reason: FinishReason = FinishReason.CANCELLED
                ) -> Optional[StepOutput]:
@@ -1151,6 +1316,21 @@ class Engine:
         token counters, the per-request callback, and in-flight map cleanup."""
         if not outs:
             return
+        if self.journal is not None:
+            # write-ahead: the batch is durable before any callback can
+            # deliver it, so the journal is a superset of what clients saw —
+            # a resuming client's offset always lands inside replayed state
+            batch: Dict[int, List[int]] = {}
+            for out in outs:
+                if out.token >= 0:
+                    batch.setdefault(out.uid, []).append(out.token)
+            self.journal.log_tokens(batch)
+            for out in outs:
+                if out.finished:
+                    req = self._requests.get(out.uid)
+                    n = req.num_generated if req is not None else 0
+                    self.journal.log_terminal(out.uid, out.finish_reason, n)
+            self.journal.commit()
         now = self.clock.now()
         for out in outs:
             if out.token >= 0:
@@ -1304,7 +1484,14 @@ class Engine:
             load_sheds=self._load_sheds,
             hung_steps=self._hung_steps,
             degrade_tier=self._degrade_tier,
-            recovery_ms=pct(self._recovery_ms))
+            recovery_ms=pct(self._recovery_ms),
+            kv_corruptions=self._kv_corruptions,
+            journal_records=(None if self.journal is None
+                             else self.journal.appended),
+            journal_commits=(None if self.journal is None
+                             else self.journal.commits),
+            journal_replays=(None if self.journal is None
+                             else self.journal.state.recoveries))
 
     def kv_cache_bytes(self) -> int:
         """Resident KV-cache bytes of the live decode state (the paged pool

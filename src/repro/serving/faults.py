@@ -28,6 +28,19 @@ Sites and the hooks that consume them:
     call counter): ``malformed`` / ``oversized`` send a poisoned frontend
     line before the real request, ``disconnect`` drops the connection
     mid-stream.
+  * ``proc`` — consulted by the crash harness's *parent* process per
+    kill-relaunch cycle (looked up by cycle index, like ``client``):
+    ``sigkill`` orders a ``SIGKILL`` of the forked serve process once its
+    journal has grown by ``arg`` committed tokens that cycle — a real
+    process death mid-step, recovered by journal replay in a fresh process
+    (benchmarks/serving_loadgen.py ``--crash``).
+  * ``device_mem`` — consulted once per step boundary when the engine runs
+    with ``ServeConfig.kv_checksums``: ``bitflip`` / ``garbage`` corrupt one
+    resident KV pool block in device memory (``Engine.corrupt_kv_block``),
+    caught by the shadow pool's per-block checksum sweep and recovered by
+    recompute-preempting the rows that read the block.  Occurrences only
+    count boundaries with a checksummed block resident, so the scheduled
+    corruption always lands on real data.
 
 ``fired`` records every injection actually delivered; the chaos soak gates
 on the schedule being fully consumed (:meth:`unfired`), so "every fault
@@ -43,7 +56,7 @@ from repro.serving.api import ServingError
 from repro.serving.sampling import NONFINITE_TOKEN
 
 ENGINE_SITES = ("plan", "launch", "commit")
-SITES = ENGINE_SITES + ("alloc", "loop", "client")
+SITES = ENGINE_SITES + ("alloc", "loop", "client", "proc", "device_mem")
 
 
 class InjectedFault(ServingError):
@@ -174,6 +187,40 @@ class FaultPlan:
                 return f.kind
         return None
 
+    def proc_fault(self, cycle: int) -> Optional[Fault]:
+        """Process-kill fault for relaunch cycle ``cycle`` (looked up by
+        index, like ``client``): the crash harness's parent consults this
+        once per serve-process launch.  ``kind == "sigkill"`` means SIGKILL
+        the child after its journal gains ``arg`` committed tokens."""
+        for f in self._by_site.get("proc", ()):
+            if f.at <= cycle < f.at + f.run:
+                self._record(f, cycle)
+                return f
+        return None
+
+    def device_mem_hook(self, engine) -> Optional[int]:
+        """Step-boundary hook: at a scheduled occurrence, corrupt one
+        resident checksummed KV block in device memory (seeded victim, so
+        the same schedule hits the same block against the same workload).
+        Returns the corrupted physical block id, or None.  Boundaries with
+        no checksummed block resident do not advance the occurrence counter
+        — the scheduled corruption always lands on real data."""
+        shadow = getattr(engine, "shadow", None)
+        if shadow is None or not getattr(shadow, "checksums_enabled", False):
+            return None
+        blocks = shadow.checksummed()
+        if not blocks:
+            return None
+        f = self.poll("device_mem")
+        if f is None:
+            return None
+        if f.kind not in ("bitflip", "garbage"):
+            raise ValueError(f"unknown device_mem fault kind {f.kind!r}")
+        victim = blocks[(self.seed + self.counts["device_mem"])
+                        % len(blocks)]
+        engine.corrupt_kv_block(victim, seed=self.seed + f.at, mode=f.kind)
+        return victim
+
     # -- canned schedules ----------------------------------------------------
 
     @staticmethod
@@ -217,4 +264,30 @@ class FaultPlan:
             # host-loop crashes -> snapshot/restore; spaced well apart
             faults.append(Fault("loop", "crash",
                                 at=jitter(28 + 40 * i, 34 + 40 * i)))
+        return FaultPlan(faults, seed=seed)
+
+    @staticmethod
+    def crash(seed: int = 0, kills: int = 3,
+              corruptions: int = 1) -> "FaultPlan":
+        """The crash-soak schedule (``serving_loadgen --crash``): ``kills``
+        SIGKILLs of the serve process — one per relaunch cycle, each armed
+        to fire after a seeded number of journal-committed tokens that
+        cycle — plus ``corruptions`` device-memory corruptions (alternating
+        bit-flip / garbage) injected at seeded step boundaries of the final,
+        unkilled cycle."""
+        state = (seed * 6364136223846793005 + 1442695040888963407) % (1 << 63)
+
+        def jitter(lo: int, hi: int) -> int:
+            nonlocal state
+            state = (state * 6364136223846793005 + 1442695040888963407) \
+                % (1 << 63)
+            return lo + (state >> 33) % max(1, hi - lo)
+
+        faults = [Fault("proc", "sigkill", at=i,
+                        arg=float(jitter(6, 18)))
+                  for i in range(kills)]
+        for i in range(corruptions):
+            faults.append(Fault("device_mem",
+                                "bitflip" if i % 2 == 0 else "garbage",
+                                at=jitter(1 + 4 * i, 4 + 4 * i)))
         return FaultPlan(faults, seed=seed)

@@ -18,6 +18,16 @@ Client -> server (one JSON object per line):
   (the JSON form of every counter / gauge / histogram).  With
   ``"format": "prometheus"`` the reply instead carries the registry's
   Prometheus text exposition in a ``"text"`` field.
+* ``{"resume": <uid>, "offset": <n>}`` — reattach to a request after a
+  server crash+recovery (the server was relaunched with a
+  :class:`~repro.serving.recovery.RecoveryReport`).  ``offset`` is how many
+  token events the client already received; the server replays the
+  journal-committed suffix it is missing, then — if the request is still
+  live — streams new tokens from the recovered engine.  The journal is
+  written before delivery, so the replayed suffix plus the live stream is
+  exactly-once: no token is ever lost or sent twice.  The ack is
+  ``{"uid", "resumed": true, "backlog": <k>}``; an unknown uid or an
+  offset past the durable token count is a typed protocol error.
 
 Server -> client:
 
@@ -75,15 +85,20 @@ class FrontendServer:
 
     ``port=0`` binds an ephemeral port; the bound port is in ``.port`` after
     :meth:`start`.  ``default_deadline_ms`` arms a deadline for requests that
-    do not set their own."""
+    do not set their own.  ``recovery`` (a
+    :class:`~repro.serving.recovery.RecoveryReport` from replaying the
+    predecessor's journal) enables the ``resume`` protocol line: it holds the
+    per-uid durable token backlog reconnecting clients replay from."""
 
     def __init__(self, aeng: AsyncEngine, host: str = "127.0.0.1",
                  port: int = 0,
                  defaults: Optional[SamplingParams] = None,
                  default_deadline_ms: Optional[float] = None,
                  max_line_bytes: int = 1 << 16,
-                 max_protocol_errors: int = 8):
+                 max_protocol_errors: int = 8,
+                 recovery=None):
         self.aeng = aeng
+        self.recovery = recovery
         self.host = host
         self.port = port
         self.defaults = defaults or SamplingParams()
@@ -187,6 +202,11 @@ class FrontendServer:
                     writer.write(json.dumps(reply).encode() + b"\n")
                     await writer.drain()
                     continue
+                if "resume" in msg:
+                    if not await self._serve_resume(msg, reader, writer,
+                                                    state):
+                        return
+                    continue
                 if "prompt" not in msg:
                     if not await self._protocol_error(
                             writer, "unknown message type", state):
@@ -229,18 +249,26 @@ class FrontendServer:
             return True
         writer.write(json.dumps({"uid": req.uid}).encode() + b"\n")
         await writer.drain()
+        return await self._stream_to_client(req.uid, reader, writer, state)
+
+    async def _stream_to_client(self, uid: int, reader: asyncio.StreamReader,
+                                writer: asyncio.StreamWriter,
+                                state: Dict) -> bool:
+        """Pump a live request's stream to the socket while watching it for
+        disconnects and in-stream cancels (shared by submit and resume).
+        Returns False when the connection should close."""
 
         async def pump() -> None:
             try:
-                async for out in self.aeng.stream(req.uid):
+                async for out in self.aeng.stream(uid):
                     writer.write(encode_output(out))
                     await writer.drain()
                     if out.finished:
                         return
             except (ConnectionResetError, BrokenPipeError):
                 # client vanished mid-stream without a clean EOF
-                self.aeng.cancel(req.uid)
-                self.aeng.release_stream(req.uid)
+                self.aeng.cancel(uid)
+                self.aeng.release_stream(uid)
                 raise
 
         # stream events while watching the socket: an EOF mid-stream means
@@ -272,9 +300,9 @@ class FrontendServer:
                         peek = asyncio.ensure_future(reader.readline())
                         continue
                     if not line:                # disconnect: cancel + bail
-                        self.aeng.cancel(req.uid)
+                        self.aeng.cancel(uid)
                         pump_task.cancel()
-                        self.aeng.release_stream(req.uid)
+                        self.aeng.release_stream(uid)
                         return False
                     try:
                         inner = json.loads(line)
@@ -296,9 +324,9 @@ class FrontendServer:
             else:
                 # error budget spent mid-stream: the consumer is being
                 # dropped — end its request like a disconnect
-                self.aeng.cancel(req.uid)
+                self.aeng.cancel(uid)
                 pump_task.cancel()
-                self.aeng.release_stream(req.uid)
+                self.aeng.release_stream(uid)
             return ok
         finally:
             # unwind the peek fully before _handle's next readline() — an
@@ -309,6 +337,101 @@ class FrontendServer:
                 if not t.done():
                     t.cancel()
                 await asyncio.gather(t, return_exceptions=True)
+
+    async def _serve_resume(self, msg: Dict, reader: asyncio.StreamReader,
+                            writer: asyncio.StreamWriter,
+                            state: Dict) -> bool:
+        """Reattach a client to a request at a token offset (see module
+        docstring).  The durable backlog comes from the live request object
+        when the uid is still in flight (its forced-prefix ``output_tokens``
+        are a superset of everything any client was ever sent — the journal
+        is written before delivery), or — once it finished — from the
+        journal's live folded state (kept current by the writer, so it also
+        covers requests that finished *after* a relaunch) with the recovery
+        report's replay-time snapshot as the journal-less fallback."""
+        try:
+            uid = int(msg["resume"])
+            offset = int(msg.get("offset", 0))
+        except (TypeError, ValueError):
+            return await self._protocol_error(writer, "bad resume", state)
+        eng = self.aeng.engine
+        req = eng._requests.get(uid)
+        rec = self.recovery
+        if req is not None:
+            # Live request.  Synchronous block — no awaits — so the snapshot
+            # and the queue wiring are atomic w.r.t. the host loop's commits:
+            # every token is either in the snapshot or will arrive queued.
+            snapshot = list(req.output_tokens)
+            if offset < 0 or offset > len(snapshot):
+                return await self._protocol_error(
+                    writer, "bad resume offset", state)
+            if uid not in self.aeng._streams:
+                self.aeng.adopt_stream(uid)
+            else:
+                # a queue adopted at recovery already holds events the
+                # snapshot also covers — drop those, keep the rest in order
+                q = self.aeng._streams[uid]
+                keep = []
+                while not q.empty():
+                    out = q.get_nowait()
+                    if out.finished or out.index >= len(snapshot):
+                        keep.append(out)
+                for out in keep:
+                    q.put_nowait(out)
+            writer.write(json.dumps(
+                {"uid": uid, "resumed": True,
+                 "backlog": len(snapshot) - offset}).encode() + b"\n")
+            for i in range(offset, len(snapshot)):
+                writer.write((json.dumps(
+                    {"uid": uid, "token": snapshot[i], "index": i,
+                     "finished": False, "finish_reason": None}) + "\n"
+                ).encode())
+            await writer.drain()
+            return await self._stream_to_client(uid, reader, writer, state)
+        # Not live: resume from durable state.  Prefer the journal's folded
+        # state — the writer applies every record as it goes out, so it
+        # knows about requests that finished after the relaunch, which the
+        # replay-time recovery snapshot cannot.
+        if eng.journal is not None and uid in eng.journal.state.reqs:
+            e = eng.journal.state.reqs[uid]
+            backlog = list(e["toks"])
+            reason = e["reason"] if e["done"] else None
+        elif rec is not None and uid in rec.committed:
+            backlog = rec.committed[uid]
+            reason = rec.finished.get(uid)
+        else:
+            return await self._protocol_error(
+                writer, "unknown resume uid", state)
+        if reason is None:
+            # journaled as live but no longer in the engine and not in
+            # finished — the replay was skipped or the request was reaped
+            # without a terminal record; nothing durable left to stream
+            return await self._protocol_error(
+                writer, "resume uid not recovered", state)
+        if offset < 0 or offset > len(backlog):
+            return await self._protocol_error(
+                writer, "bad resume offset", state)
+        writer.write(json.dumps(
+            {"uid": uid, "resumed": True,
+             "backlog": len(backlog) - offset}).encode() + b"\n")
+        # finished request: replay the missing suffix.  STOP/LENGTH carry the
+        # finished flag on the final real token (like the live stream did);
+        # the externally-ended reasons get a terminal marker event.
+        on_token = reason in ("stop", "length")
+        for i in range(offset, len(backlog)):
+            last = on_token and i == len(backlog) - 1
+            writer.write((json.dumps(
+                {"uid": uid, "token": backlog[i], "index": i,
+                 "finished": last,
+                 "finish_reason": reason if last else None}) + "\n"
+            ).encode())
+        if not on_token or offset == len(backlog):
+            writer.write((json.dumps(
+                {"uid": uid, "token": -1, "index": len(backlog),
+                 "finished": True, "finish_reason": reason}) + "\n"
+            ).encode())
+        await writer.drain()
+        return True
 
 
 class ServeClient:
@@ -366,6 +489,27 @@ class ServeClient:
             msg["format"] = format
         await self._send(msg)
         return await self._recv()
+
+    async def resume(self, uid: int, offset: int = 0,
+                     on_event=None) -> List[Dict]:
+        """Reattach to a request after a server crash+recovery: replays the
+        journal-committed tokens from ``offset`` (how many token events this
+        client already has) and streams to completion.  Returns every event
+        line (ack excluded) — concatenated after the client's first ``offset``
+        events this is the exactly-once full stream.  A typed error line
+        (unknown uid / bad offset) is returned as a single-element list."""
+        await self._send({"resume": int(uid), "offset": int(offset)})
+        ack = await self._recv()
+        if "error" in ack:
+            return [ack]
+        events: List[Dict] = []
+        while True:
+            out = await self._recv()
+            events.append(out)
+            if on_event is not None:
+                on_event(out)
+            if out.get("finished"):
+                return events
 
     async def request(self, prompt: Sequence[int],
                       deadline_ms: Optional[float] = None,

@@ -320,6 +320,11 @@ class ServingSupervisor:
         new._uid_counter = max(new._uid_counter, old._uid_counter)
         self._carry_stats(old, new)
         new._engine_restarts = old._engine_restarts + 1
+        if old.journal is not None:
+            # flush the dying incarnation's buffered records and release its
+            # segment; the fresh engine already opened its own (re-submission
+            # above wrote new submit records there — first-wins on replay)
+            old.journal.close()
         self.engine = new
         self.restarts += 1
         self._last_commit = None               # gap across restart: not hung

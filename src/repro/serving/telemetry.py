@@ -31,6 +31,7 @@ hot-path host-sync reachability cone and must stay sync-free.
 from __future__ import annotations
 
 import json
+import logging
 import math
 import os
 import time
@@ -411,6 +412,13 @@ class FlightRecorder:
     ``dump()`` on every recovery action so each retry / quarantine /
     hung-step / restart leaves a post-mortem artifact; dumping does NOT
     clear the ring, so consecutive dumps share context.
+
+    ``dump_dir`` is created (parents included) at construction — a typo'd
+    or unwritable path fails loudly at startup, not in the middle of the
+    first crash being debugged.  Disk failures *during* ``dump()`` are
+    logged and swallowed (``io_errors`` counts them): the recorder is a
+    post-mortem aid and must never turn a recovery action into a new
+    crash — the in-memory dump is always kept regardless.
     """
 
     def __init__(self, capacity: int = 256,
@@ -420,11 +428,14 @@ class FlightRecorder:
             raise ValueError("FlightRecorder capacity must be positive")
         self.capacity = capacity
         self.dump_dir = dump_dir
+        if dump_dir:
+            os.makedirs(dump_dir, exist_ok=True)
         self.clock = clock or Clock()
         self._ring: deque = deque(maxlen=capacity)
         self._seq = 0
         self._dump_seq = 0
         self.dumps: List[dict] = []
+        self.io_errors = 0
 
     def record(self, kind: str, **fields) -> None:
         self._seq += 1
@@ -452,12 +463,21 @@ class FlightRecorder:
             d["context"] = context
         self.dumps.append(d)
         if self.dump_dir:
-            os.makedirs(self.dump_dir, exist_ok=True)
             fname = f"flight-{self._dump_seq:04d}-{reason}.json"
             path = os.path.join(self.dump_dir, fname)
-            with open(path, "w") as f:
-                json.dump(d, f, indent=1)
-            d["path"] = path
+            try:
+                os.makedirs(self.dump_dir, exist_ok=True)
+                with open(path, "w") as f:
+                    json.dump(d, f, indent=1)
+                d["path"] = path
+            except OSError as e:
+                # log-and-continue: a full/yanked disk must not escalate a
+                # recovery action into a process crash; the in-memory dump
+                # above is already kept
+                self.io_errors += 1
+                d["io_error"] = f"{type(e).__name__}: {e}"
+                logging.getLogger(__name__).warning(
+                    "flight dump %s not written: %s", path, e)
         return d
 
     def dump_reasons(self) -> List[str]:

@@ -1,5 +1,7 @@
-"""Checkpointing: roundtrip, atomicity, GC, async, reshard-on-restore."""
+"""Checkpointing: roundtrip, atomicity, GC, async, reshard-on-restore,
+and crash-window durability of the LATEST pointer publish."""
 import json
+import os
 import pathlib
 import threading
 
@@ -49,6 +51,71 @@ class TestRoundtrip:
     def test_atomic_no_tmp_left(self, tmp_path):
         save_checkpoint(tmp_path, 5, tree())
         assert not list(pathlib.Path(tmp_path).glob("*.tmp"))
+
+    def test_crash_in_pointer_window_keeps_old_latest(self, tmp_path,
+                                                      monkeypatch):
+        """A crash between writing LATEST.tmp and the os.replace must leave
+        the previous pointer intact and restorable (the publish is atomic:
+        old pointer or new, never empty)."""
+        import repro.checkpoint.ckpt as ckpt_mod
+        t = tree()
+        save_checkpoint(tmp_path, 1, t)
+
+        real_replace = os.replace
+
+        def dying_replace(src, dst):
+            if str(dst).endswith("LATEST"):
+                raise OSError("simulated crash in the pointer window")
+            return real_replace(src, dst)
+
+        monkeypatch.setattr(ckpt_mod.os, "replace", dying_replace)
+        with pytest.raises(OSError):
+            save_checkpoint(tmp_path, 2, tree(seed=1))
+        monkeypatch.undo()
+        assert latest_step(tmp_path) == 1
+        t2, _, step = load_checkpoint(tmp_path, jax.eval_shape(lambda: t))
+        assert step == 1
+        for a, b in zip(jax.tree_util.tree_leaves(t),
+                        jax.tree_util.tree_leaves(t2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_pointer_durability_ordering(self, tmp_path, monkeypatch):
+        """The LATEST publish must fsync the pointer's bytes before the
+        rename and the parent directory after it — otherwise a power cut
+        can surface an empty pointer or an un-durable rename."""
+        import repro.checkpoint.ckpt as ckpt_mod
+        events = []
+        real_fsync, real_replace = os.fsync, os.replace
+        fd_paths = {}
+        real_open = os.open
+
+        def spy_open(path, *a, **kw):
+            fd = real_open(path, *a, **kw)
+            fd_paths[fd] = str(path)
+            return fd
+
+        def spy_fsync(fd):
+            events.append(("fsync", fd_paths.get(fd, "")))
+            return real_fsync(fd)
+
+        def spy_replace(src, dst):
+            if str(dst).endswith("LATEST"):
+                events.append(("replace", str(dst)))
+            return real_replace(src, dst)
+
+        monkeypatch.setattr(ckpt_mod.os, "open", spy_open)
+        monkeypatch.setattr(ckpt_mod.os, "fsync", spy_fsync)
+        monkeypatch.setattr(ckpt_mod.os, "replace", spy_replace)
+        save_checkpoint(tmp_path, 3, tree())
+        kinds = [k for k, _ in events]
+        assert "replace" in kinds
+        i = kinds.index("replace")
+        # pointer bytes made durable before the rename...
+        assert "fsync" in kinds[:i]
+        # ...and the parent directory's entry table after it
+        dir_syncs_after = [p for k, p in events[i + 1:]
+                          if k == "fsync" and p == str(tmp_path)]
+        assert dir_syncs_after
 
 
 class TestAsync:
