@@ -26,8 +26,10 @@ Client -> server (one JSON object per line):
   live — streams new tokens from the recovered engine.  The journal is
   written before delivery, so the replayed suffix plus the live stream is
   exactly-once: no token is ever lost or sent twice.  The ack is
-  ``{"uid", "resumed": true, "backlog": <k>}``; an unknown uid or an
-  offset past the durable token count is a typed protocol error.
+  ``{"uid", "resumed": true, "backlog": <k>}``; an unknown uid, an
+  offset past the durable token count, or a uid whose stream another
+  connection is actively consuming (each stream has exactly one
+  consumer) is a typed protocol error.
 
 Server -> client:
 
@@ -111,6 +113,10 @@ class FrontendServer:
         self.max_line_bytes = max_line_bytes
         self.max_protocol_errors = max_protocol_errors
         self.protocol_errors: Dict[str, int] = {}   # error kind -> count
+        # uids whose stream queue a connection is actively pumping: a
+        # stream has exactly one consumer, so a resume on a busy uid is a
+        # typed protocol error instead of two pumps racing on one queue
+        self._pumping: set = set()
         self._server: Optional[asyncio.AbstractServer] = None
 
     async def start(self) -> None:
@@ -274,6 +280,7 @@ class FrontendServer:
         # stream events while watching the socket: an EOF mid-stream means
         # the client disconnected — cancel its request (free the slot and
         # blocks immediately); an in-stream line may be an explicit cancel
+        self._pumping.add(uid)
         pump_task = asyncio.ensure_future(pump())
         peek: Optional[asyncio.Task] = asyncio.ensure_future(
             reader.readline())
@@ -329,6 +336,7 @@ class FrontendServer:
                 self.aeng.release_stream(uid)
             return ok
         finally:
+            self._pumping.discard(uid)
             # unwind the peek fully before _handle's next readline() — an
             # abandoned cancelled task still holds the stream's read waiter
             for t in (peek, pump_task):
@@ -358,6 +366,13 @@ class FrontendServer:
         req = eng._requests.get(uid)
         rec = self.recovery
         if req is not None:
+            if uid in self._pumping:
+                # another connection is actively consuming this stream (the
+                # original submitter, or an earlier resume): adopting the
+                # queue here would drop its events and split tokens between
+                # two pumps — reject instead of racing
+                return await self._protocol_error(
+                    writer, "resume uid busy", state)
             # Live request.  Synchronous block — no awaits — so the snapshot
             # and the queue wiring are atomic w.r.t. the host loop's commits:
             # every token is either in the snapshot or will arrive queued.
@@ -365,29 +380,38 @@ class FrontendServer:
             if offset < 0 or offset > len(snapshot):
                 return await self._protocol_error(
                     writer, "bad resume offset", state)
-            if uid not in self.aeng._streams:
-                self.aeng.adopt_stream(uid)
-            else:
-                # a queue adopted at recovery already holds events the
-                # snapshot also covers — drop those, keep the rest in order
-                q = self.aeng._streams[uid]
-                keep = []
-                while not q.empty():
-                    out = q.get_nowait()
-                    if out.finished or out.index >= len(snapshot):
-                        keep.append(out)
-                for out in keep:
-                    q.put_nowait(out)
-            writer.write(json.dumps(
-                {"uid": uid, "resumed": True,
-                 "backlog": len(snapshot) - offset}).encode() + b"\n")
-            for i in range(offset, len(snapshot)):
-                writer.write((json.dumps(
-                    {"uid": uid, "token": snapshot[i], "index": i,
-                     "finished": False, "finish_reason": None}) + "\n"
-                ).encode())
-            await writer.drain()
-            return await self._stream_to_client(uid, reader, writer, state)
+            # reserve the stream before the first await so a concurrent
+            # resume on the same uid hits the busy guard, not the queue
+            self._pumping.add(uid)
+            try:
+                if uid not in self.aeng._streams:
+                    self.aeng.adopt_stream(uid)
+                else:
+                    # a queue adopted at recovery already holds events the
+                    # snapshot also covers — drop those, keep the rest in
+                    # order (no consumer is attached: the busy guard above
+                    # rejected the case where one is)
+                    q = self.aeng._streams[uid]
+                    keep = []
+                    while not q.empty():
+                        out = q.get_nowait()
+                        if out.finished or out.index >= len(snapshot):
+                            keep.append(out)
+                    for out in keep:
+                        q.put_nowait(out)
+                writer.write(json.dumps(
+                    {"uid": uid, "resumed": True,
+                     "backlog": len(snapshot) - offset}).encode() + b"\n")
+                for i in range(offset, len(snapshot)):
+                    writer.write((json.dumps(
+                        {"uid": uid, "token": snapshot[i], "index": i,
+                         "finished": False, "finish_reason": None}) + "\n"
+                    ).encode())
+                await writer.drain()
+                return await self._stream_to_client(uid, reader, writer,
+                                                    state)
+            finally:
+                self._pumping.discard(uid)
         # Not live: resume from durable state.  Prefer the journal's folded
         # state — the writer applies every record as it goes out, so it
         # knows about requests that finished after the relaunch, which the

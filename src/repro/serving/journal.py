@@ -37,8 +37,10 @@ snapshotted into the fresh segment and the sealed segments are deleted
 (file + directory fsyncs ordered so a crash at any point leaves either
 the old segments, both, or the snapshot — all of which replay to the
 same live set).  A writer always opens a *new* segment, never appends
-to an existing file, so a crashed writer's torn tail is never buried
-mid-file.
+to an existing file; a torn tail left by a crashed predecessor is
+truncated away (file + dir fsync) *before* the new segment opens, so
+the damage is never buried in a non-final segment where a later read
+would report it as corruption.
 
 ``load_state`` folds a journal directory into a :class:`JournalState`;
 ``serving/recovery.py`` replays that state into a cold engine.
@@ -275,6 +277,8 @@ class Journal:
         self.fsync = fsync
         self.compact_min_finished = compact_min_finished
         self.state = load_state(self.dir)
+        if self.state.torn is not None:
+            self._repair_torn_tail(self.state.torn)
         self._finished_at_compact = self.state.finished
         self.appended = 0                      # records written by *this* writer
         self.commits = 0                       # fsync batches
@@ -287,6 +291,25 @@ class Journal:
         self._open_segment()
 
     # -- low-level -----------------------------------------------------------
+
+    def _repair_torn_tail(self, torn: TornTail) -> None:
+        """Truncate the crashed predecessor's damaged final record.
+
+        ``read_records`` tolerates damage only in the *final* segment; this
+        writer is about to open a newer one, which would bury the torn line
+        mid-journal and turn every later read into
+        :class:`JournalCorruption`.  Every byte before ``torn.offset``
+        already replayed into :attr:`state`, so cutting there loses nothing
+        durable — the torn record never finished its fsync."""
+        fd = os.open(torn.path, os.O_RDWR)
+        try:
+            os.ftruncate(fd, torn.offset)
+            if self.fsync:
+                os.fsync(fd)
+        finally:
+            os.close(fd)
+        if self.fsync:
+            _fsync_dir(self.dir)
 
     def _open_segment(self) -> None:
         self._seq += 1

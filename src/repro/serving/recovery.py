@@ -142,6 +142,10 @@ def reconcile(report: RecoveryReport, engine,
     # only uids the engine has never heard of are holes
     missing = [u for u in missing if u not in engine._submit_ts
                and engine.sched._arrival.get(u) is None]
+    if missing:
+        problems.append(
+            "replayed uid(s) the engine has never heard of: "
+            + ", ".join(str(u) for u in missing))
     dumps: List[str] = []
     if flight_dir is not None:
         d = pathlib.Path(flight_dir)

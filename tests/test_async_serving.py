@@ -238,6 +238,42 @@ class TestFrontend:
         assert [e["index"] for e in evs] == [0, 1, 2, 3]
         assert evs[-1]["finished"] and evs[-1]["finish_reason"] == "length"
 
+    def test_resume_on_actively_streamed_uid_rejected(self, lm):
+        """A resume on a uid another connection is pumping must be a typed
+        protocol error — adopting the queue would drop events the original
+        consumer owns and leave two pumps racing on one asyncio.Queue."""
+        cfg, params = lm
+        eng = Engine(cfg, params,
+                     ServeConfig(max_batch=1, max_len=512, kv_block_size=4))
+
+        async def main():
+            async with AsyncEngine(eng) as aeng:
+                async with FrontendServer(aeng) as srv:
+                    c1 = await ServeClient(port=srv.port).connect()
+                    await c1._send({"prompt": [1, 2, 3], "max_tokens": 1000,
+                                    "ignore_eos": True})
+                    ack = await c1._recv()
+                    uid = ack["uid"]
+                    first = await c1._recv()       # stream is live
+                    async with ServeClient(port=srv.port) as c2:
+                        evs = await c2.resume(uid, offset=0)
+                    # the original stream is unharmed: cancel through it
+                    # and drain to its terminal marker
+                    await c1._send({"cancel": uid})
+                    seen = [first]
+                    while not seen[-1].get("finished"):
+                        seen.append(await c1._recv())
+                    await c1.close()
+                    return evs, seen
+
+        evs, seen = asyncio.run(main())
+        assert evs == [{"error": "resume uid busy"}]
+        assert seen[-1]["finish_reason"] == "cancelled"
+        # no token was diverted to the rejected connection: indices on the
+        # original connection are gapless from 0
+        idx = [e["index"] for e in seen if e["token"] >= 0]
+        assert idx == list(range(len(idx)))
+
     def test_disconnect_mid_stream_cancels(self, lm):
         cfg, params = lm
         eng = Engine(cfg, params,

@@ -123,6 +123,36 @@ class TestTornTail:
         with pytest.raises(JournalCorruption):
             read_records(tmp_path)
 
+    def test_reopen_after_torn_tail_repairs_the_segment(self, tmp_path):
+        """The double-crash sequence the journal exists for: a crash
+        leaves a torn tail, the relaunch writer opens a newer segment on
+        top (so the damage would no longer be in the *final* segment),
+        then a second relaunch reads the directory again.  The reopen
+        must truncate the torn record away, or that second read reports
+        JournalCorruption and the journal is permanently unreadable."""
+        j = scripted_journal(tmp_path, n_reqs=2, toks_per=3)
+        j.close()
+        seg = segment_paths(tmp_path)[0]
+        data = seg.read_bytes()
+        seg.write_bytes(data[:-3])              # SIGKILL mid-record
+        st = load_state(tmp_path)
+        assert st.torn is not None              # tolerated while final
+        j2 = Journal(tmp_path)                  # relaunch writer
+        assert j2.state.torn is not None        # reported to recovery...
+        _, torn = read_records(tmp_path)
+        assert torn is None                     # ...but repaired on disk
+        assert seg.read_bytes() == data[:j2.state.torn.offset]
+        j2.log_submit(GenerationRequest(uid=50, prompt=[1],
+                                        params=SamplingParams()))
+        j2.close()
+        st2 = load_state(tmp_path)              # second relaunch reads clean
+        assert st2.torn is None
+        assert 50 in st2.reqs
+        # the repaired journal replays to the same pre-torn record prefix
+        for u in (0, 1):
+            assert st2.committed_tokens(u) == st.committed_tokens(u)
+        Journal(tmp_path).close()               # a third writer still opens
+
     def test_torn_tail_in_earlier_segment_raises(self, tmp_path):
         # two segments; truncate the FIRST mid-record — that damage is not
         # explainable by a crashed writer (writers open fresh segments), so
@@ -230,3 +260,31 @@ class TestRotationCompaction:
         assert dl is not None
         remaining = dl - time.time()
         assert 3.0 < remaining <= 5.5
+
+
+class TestReconcile:
+    def test_reconcile_raises_on_unaccounted_uid(self):
+        """reconcile promises 'raises ValueError on any accounting hole':
+        a resumed uid the engine has never heard of must raise, not slip
+        out in the summary dict callers ignore (stub engine — reconcile
+        only touches stats()/_requests/_submit_ts/sched._arrival)."""
+        from repro.serving.recovery import RecoveryReport, reconcile
+
+        class _Eng:
+            _requests = {}
+            _submit_ts = {}
+            sched = type("S", (), {"_arrival": {}})()
+
+            def stats(self):
+                return type("St", (), {"requests_submitted": 5})()
+
+        rep = RecoveryReport(resumed=[7], finished={}, committed={7: [1]},
+                             forced_tokens=1, replay_ms=0.0,
+                             torn_tail=False, clean_shutdown=False)
+        with pytest.raises(ValueError, match="never heard of"):
+            reconcile(rep, _Eng())
+        # a uid the engine did accept (and may since have reaped) is fine
+        eng = _Eng()
+        eng._submit_ts = {7: 0.0}
+        summary = reconcile(rep, eng)
+        assert summary["unaccounted_uids"] == []
